@@ -1,0 +1,78 @@
+"""Shared benchmark plumbing: timed engines over models + branchy cells."""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+import jax
+import numpy as np
+
+import repro.configs as C
+from repro.configs.branchy_cell import (
+    amoebanet_like,
+    darts_like,
+    inception_like,
+    nasnet_mobile_like,
+)
+from repro.models import forward, init_model
+from repro.models.branchy import branchy_forward, example_input, init_branchy
+
+# The paper's evaluation-network roster, mapped to our regime:
+#   branchy NAS cells (Table 1 / Fig 7 parallel structures) +
+#   reduced assigned-pool architectures (the "straight" networks).
+BRANCHY_CELLS = {
+    "inception-like": inception_like(),
+    "darts-like": darts_like(),
+    "amoebanet-like": amoebanet_like(),
+    "nasnet-m-like": nasnet_mobile_like(),
+}
+
+SMOKE_ARCHS = ("stablelm-1.6b", "phi4-mini-3.8b", "gemma2-27b", "arctic-480b",
+               "xlstm-125m")
+
+
+def branchy_case(name: str):
+    cfg = BRANCHY_CELLS[name]
+    params = init_branchy(jax.random.key(0), cfg)
+    x = example_input(cfg)
+
+    def fn(params, x):
+        return branchy_forward(params, x, cfg)
+
+    return fn, (params, x), cfg
+
+
+def model_case(arch: str, *, batch: int = 1, seq: int = 32):
+    cfg = dataclasses.replace(C.get(arch, smoke=True), dtype="float32")
+    params, _ = init_model(jax.random.key(0), cfg)
+    rng = np.random.default_rng(0)
+    b = {"tokens": rng.integers(0, cfg.vocab, (batch, seq)).astype(np.int32)}
+    if cfg.family == "vlm":
+        b["vision_embeds"] = rng.standard_normal(
+            (batch, cfg.vision_tokens, cfg.vision_dim), dtype=np.float32
+        )
+    if cfg.family == "audio":
+        b["frames"] = rng.standard_normal(
+            (batch, seq // cfg.audio_frames_ratio, cfg.audio_dim), dtype=np.float32
+        )
+
+    def fn(params, b):
+        return forward(params, b, cfg)[0]
+
+    return fn, (params, b), cfg
+
+
+def timeit(f: Callable, *args, iters: int = 20, warmup: int = 3) -> float:
+    """Median-of-means microseconds per call."""
+    for _ in range(warmup):
+        jax.block_until_ready(f(*args))
+    reps = []
+    for _ in range(3):
+        t0 = time.perf_counter()
+        for _ in range(max(iters // 3, 1)):
+            out = f(*args)
+        jax.block_until_ready(out)
+        reps.append((time.perf_counter() - t0) / max(iters // 3, 1))
+    return float(np.median(reps) * 1e6)

@@ -1,0 +1,49 @@
+"""Fig. 2a analogue: fraction of run time lost to run-time task scheduling.
+
+The paper measures GPU idle time under PyTorch/TF (up to 91%).  Two
+measurements here:
+  * ``sched_frac`` — the eager engine's *instrumented* scheduling steps
+    (1-6) as a fraction of wall time (a lower bound: it excludes Python
+    dispatch inside op submission);
+  * ``overhead_frac`` — 1 − sealed/eager on identical numerics: everything
+    the run-time scheduler costs relative to pure task execution.  This is
+    the faithful idle-time analogue (on a GPU the gap shows up as device
+    idle; on CPU it shows up as wall time).
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.core.engine import DispatchProfile, EagerInterpreter
+
+from .common import BRANCHY_CELLS, SMOKE_ARCHS, branchy_case, model_case, timeit
+
+
+def run() -> list[tuple[str, float, str]]:
+    rows = []
+    cases = [(f"branchy:{n}", branchy_case(n)) for n in BRANCHY_CELLS]
+    cases += [(f"arch:{a}", model_case(a)) for a in SMOKE_ARCHS]
+    for name, (fn, args, _cfg) in cases:
+        eng = EagerInterpreter(fn, *args)
+        prof = DispatchProfile()
+        for _ in range(5):
+            eng.run(*args, profile=prof)
+        sealed = jax.jit(fn).lower(*args).compile()
+        t_sealed = timeit(lambda *a: sealed(*a), *args, iters=9, warmup=2)
+        eager_us = prof.total_s / 5 * 1e6
+        overhead = max(0.0, 1.0 - t_sealed / eager_us)
+        rows.append((
+            f"fig2a/{name}",
+            eager_us,
+            (
+                f"sched_frac={prof.overhead_fraction:.3f};"
+                f"overhead_frac={overhead:.3f};tasks={prof.num_tasks // 5}"
+            ),
+        ))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(str(x) for x in r))

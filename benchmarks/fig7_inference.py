@@ -1,0 +1,52 @@
+"""Fig. 7 analogue: inference latency across execution engines.
+
+Paper columns → our engines:
+  PyTorch      → EagerInterpreter (Python dispatch + run-time scheduling)
+  TorchScript  → JitPerOpEngine (graph known, per-op compiled, still
+                 run-time scheduled)
+  Nimble       → AoT-sealed single-stream replay
+  Nimble (MS)  → AoT-sealed with stream packing (multi-stream analogue)
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.core import Nimble
+from repro.core.engine import EagerInterpreter, JitPerOpEngine, _assert_trees_close
+
+from .common import BRANCHY_CELLS, SMOKE_ARCHS, branchy_case, model_case, timeit
+
+
+def run() -> list[tuple[str, float, str]]:
+    rows = []
+    cases = [(f"branchy:{n}", branchy_case(n)) for n in BRANCHY_CELLS]
+    cases += [(f"arch:{a}", model_case(a)) for a in SMOKE_ARCHS]
+    for name, (fn, args, _cfg) in cases:
+        eager = EagerInterpreter(fn, *args)
+        jitop = JitPerOpEngine(fn, *args)
+        aot = Nimble(fn, *args, multi_stream=False)
+        aot_ms = Nimble(fn, *args, multi_stream=True, pack_streams=True)
+        ref = eager.run(*args)
+        for eng in (jitop, aot, aot_ms):
+            _assert_trees_close(ref, eng(*args) if not isinstance(eng, Nimble) else eng(*args))
+
+        t_eager = timeit(eager.run, *args, iters=6)
+        t_jitop = timeit(jitop.run, *args, iters=9)
+        t_aot = timeit(aot, *args, iters=30)
+        t_ms = timeit(aot_ms, *args, iters=30)
+        rows.append((
+            f"fig7/{name}",
+            t_ms,
+            (
+                f"eager_us={t_eager:.0f};jitop_us={t_jitop:.0f};aot_us={t_aot:.0f};"
+                f"speedup_vs_eager={t_eager / t_ms:.2f};"
+                f"ms_vs_singlestream={t_aot / t_ms:.2f}"
+            ),
+        ))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(str(x) for x in r))

@@ -1,0 +1,69 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Perf hillclimbing (spec §Perf) — the three selected (arch × shape) pairs.
+
+Each experiment is a hypothesis → change → re-lower → measure cycle against
+the recorded baseline; results land in experiments/roofline/ with a tag and
+are summarized for EXPERIMENTS.md §Perf.
+
+Selected pairs (from the 33-baseline table):
+  1. gemma2-27b × decode_32k   — paper-representative (inference replay);
+     memory-bound: the per-layer KV dynamic_update_slice copies the whole
+     cache because cost analysis (and a non-aliased runtime) can't update in
+     place.  Change: donate the cache (buffer aliasing).
+  2. deepseek-v2-236b × train_4k — worst useful-FLOP ratio (0.01), the only
+     compute-bound pair: full remat recomputes the quadratic 128-head MLA
+     score matmuls in the backward pass.  Change: remat_policy='dots'.
+  3. xlstm-125m × prefill_32k  — the only collective-bound pair: w_qkv is
+     row-parallel over a 16-way model axis on a d_model=768 / 4-head model,
+     all-reducing a (B,S,3·d_up) f32 activation per mLSTM layer.  Change:
+     stop model-sharding the tiny cell weights; shard the *sequence* over
+     the model axis instead (sequence parallelism) — plus a larger SSD
+     chunk so chunk-state traffic shrinks.
+"""
+
+import argparse
+import json
+
+from benchmarks.roofline import OUT_DIR, fmt_row, roofline_case
+
+
+def one(name: str, arch: str, shape: str, **kw) -> dict:
+    r = roofline_case(arch, shape, tag=name, **kw)
+    (OUT_DIR / f"{arch}_{shape}__{name}.json").write_text(json.dumps(r, indent=1))
+    print(fmt_row(r), f"<- {name}")
+    return r
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--exp", default="all", choices=["all", "1", "2", "3"])
+    args = ap.parse_args()
+    print("| arch | shape | compute (ms) | memory (ms) | collective (ms) "
+          "| bottleneck | ratio |")
+
+    if args.exp in ("all", "1"):
+        # -- experiment 1: decode cache donation ---------------------------
+        one("donate-cache", "gemma2-27b", "decode_32k", donate_argnums=(1,))
+
+    if args.exp in ("all", "2"):
+        # -- experiment 2 iterations (deepseek train) ------------------------
+        # it1 remat-dots: refuted (<1%); it2 sort-based MoE dispatch is a
+        # permanent model change (20x compute term); it3 gather_fsdp=all was
+        # mixed (collective -12%, compute +2.6x); it4 isolates the MoE-site
+        # weight gather.
+        one("remat-dots", "deepseek-v2-236b", "train_4k",
+            overrides={"remat_policy": "dots"})
+        one("gather-fsdp-moe", "deepseek-v2-236b", "train_4k",
+            overrides={"remat_policy": "dots"},
+            extra_rules={"gather_fsdp": "moe"})
+
+    if args.exp in ("all", "3"):
+        # -- experiment 3: xlstm sequence parallelism ----------------------
+        one("seq-parallel", "xlstm-125m", "prefill_32k",
+            extra_rules={"mlp": None, "seq": "model"})
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,77 @@
+"""Assemble EXPERIMENTS.md tables from experiments/*.json artifacts."""
+
+from __future__ import annotations
+
+import json
+import pathlib
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+DRY = ROOT / "experiments" / "dryrun"
+ROOF = ROOT / "experiments" / "roofline"
+
+ARCH_ORDER = [
+    "gemma2-27b", "phi4-mini-3.8b", "arctic-480b", "llava-next-34b",
+    "starcoder2-15b", "zamba2-2.7b", "deepseek-v2-236b", "xlstm-125m",
+    "stablelm-1.6b", "seamless-m4t-medium",
+]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def _fmt_bytes(n: float) -> str:
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if abs(n) < 1024:
+            return f"{n:.1f}{unit}"
+        n /= 1024
+    return f"{n:.1f}PB"
+
+
+def dryrun_table() -> str:
+    rows = ["| arch | shape | mesh | compile (s) | HLO FLOPs/chip | bytes/chip "
+            "| collective bytes/chip (AG/AR/RS/A2A/CP) | temp bytes |",
+            "|---|---|---|---|---|---|---|---|"]
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            for mesh in ("16x16", "2x16x16"):
+                f = DRY / f"{arch}_{shape}_{mesh}.json"
+                if not f.exists():
+                    continue
+                d = json.loads(f.read_text())
+                pk = d["collectives"]["bytes_per_kind"]
+                coll = "/".join(
+                    _fmt_bytes(pk[k]) for k in
+                    ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                     "collective-permute")
+                )
+                rows.append(
+                    f"| {arch} | {shape} | {mesh} | {d['compile_s']} "
+                    f"| {d['flops']:.3e} | {_fmt_bytes(d['bytes_accessed'])} "
+                    f"| {coll} | {_fmt_bytes(d['memory']['temp_bytes'])} |"
+                )
+    return "\n".join(rows)
+
+
+def roofline_table() -> str:
+    rows = ["| arch | shape | compute (ms) | memory (ms) | collective (ms) "
+            "| bottleneck | MODEL/HLO FLOP ratio | note |",
+            "|---|---|---|---|---|---|---|---|"]
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            f = ROOF / f"{arch}_{shape}.json"
+            if not f.exists():
+                continue
+            d = json.loads(f.read_text())
+            note = d.get("note", "")
+            rows.append(
+                f"| {arch} | {shape} | {d['compute_s']*1e3:.2f} "
+                f"| {d['memory_s']*1e3:.2f} | {d['collective_s']*1e3:.2f} "
+                f"| {d['dominant'].replace('_s','')} "
+                f"| {d['useful_flops_ratio']:.2f} | {note} |"
+            )
+    return "\n".join(rows)
+
+
+if __name__ == "__main__":
+    print("## Dry-run\n")
+    print(dryrun_table())
+    print("\n## Roofline\n")
+    print(roofline_table())

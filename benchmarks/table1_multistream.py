@@ -1,0 +1,64 @@
+"""Table 1 analogue: multi-stream speedup vs degree of logical concurrency.
+
+Paper: NASNet-A mobile 1.88× at Deg 12; Inception-v3 1.09× at Deg 6; large-
+MAC networks benefit less.  We sweep branchy cells across branch counts and
+widths, reporting single-stream AoT vs packed-stream AoT plus the measured
+degree of logical concurrency of the traced task graph.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+
+from repro.configs.branchy_cell import BranchyCellConfig
+from repro.core import Nimble
+from repro.models.branchy import branchy_forward, example_input, init_branchy
+
+from .common import timeit
+
+
+def _case(cfg: BranchyCellConfig):
+    params = init_branchy(jax.random.key(0), cfg)
+    x = example_input(cfg)
+
+    def fn(params, x):
+        return branchy_forward(params, x, cfg)
+
+    return fn, (params, x)
+
+
+def run() -> list[tuple[str, float, str]]:
+    rows = []
+    sweep = [
+        BranchyCellConfig("deg2", 4, 2, 64, 8),
+        BranchyCellConfig("deg6-inception", 4, 6, 96, 8),
+        BranchyCellConfig("deg7-darts", 4, 7, 64, 8),
+        BranchyCellConfig("deg11-amoeba", 4, 11, 56, 8),
+        BranchyCellConfig("deg12-nasnet-m", 4, 12, 48, 8),
+        # large-MAC variant: wide branches (paper: NASNet-A large gains less)
+        BranchyCellConfig("deg12-largeMAC", 4, 12, 256, 32),
+    ]
+    for cfg in sweep:
+        fn, args = _case(cfg)
+        single = Nimble(fn, *args, multi_stream=False)
+        multi = Nimble(fn, *args, multi_stream=True, pack_streams=True)
+        t_single = timeit(single, *args, iters=30)
+        t_multi = timeit(multi, *args, iters=30)
+        deg = multi.stats.degree_of_concurrency
+        rows.append((
+            f"table1/{cfg.name}",
+            t_multi,
+            (
+                f"single_us={t_single:.0f};speedup={t_single / t_multi:.2f};"
+                f"deg={deg};streams={multi.stats.num_streams};"
+                f"syncs={multi.stats.num_syncs}"
+            ),
+        ))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(str(x) for x in r))

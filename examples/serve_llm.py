@@ -1,0 +1,61 @@
+"""Batched serving example: continuous batching on AoT-sealed steps.
+
+    PYTHONPATH=src python examples/serve_llm.py --requests 24
+
+Prefill and decode are scheduled once (sealed executables + reserved KV
+slots); the request loop is pure submission — the inference-serving face of
+the paper's AoT scheduling.
+"""
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+import repro.configs as C
+from repro.models import init_model
+from repro.serving import Request, ServingEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="stablelm-1.6b")
+    ap.add_argument("--requests", type=int, default=24)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = dataclasses.replace(C.get(args.arch, smoke=True), dtype="float32")
+    params, _ = init_model(jax.random.key(0), cfg)
+
+    t0 = time.perf_counter()
+    engine = ServingEngine(cfg, params, max_slots=args.slots, max_len=128,
+                           prompt_buckets=(16, 32))
+    print(f"AoT scheduling done in {time.perf_counter()-t0:.1f}s "
+          f"({engine.stats.prefill_compiles} prefill buckets + 1 decode sealed)")
+
+    rng = np.random.default_rng(0)
+    for i in range(args.requests):
+        engine.submit(Request(
+            rid=i,
+            prompt=rng.integers(0, cfg.vocab, int(rng.integers(4, 30))).astype(np.int32),
+            max_new_tokens=args.max_new,
+        ))
+    t0 = time.perf_counter()
+    done = engine.run_until_drained()
+    wall = time.perf_counter() - t0
+
+    st = engine.stats
+    ttft = sorted(r.t_first - r.t_submit for r in done)
+    print(f"served {len(done)} requests in {wall:.2f}s "
+          f"({st.steps} decode steps, {st.tokens_out} tokens)")
+    print(f"decode throughput {st.decode_tok_per_s:,.0f} tok/s | "
+          f"TTFT p50 {ttft[len(ttft)//2]*1e3:.0f}ms")
+    sample = done[0]
+    print(f"sample: prompt[{len(sample.prompt)}] -> {sample.generated}")
+
+
+if __name__ == "__main__":
+    main()

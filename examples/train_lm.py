@@ -1,0 +1,80 @@
+"""End-to-end driver: train a ~100M-param LM for a few hundred steps.
+
+    PYTHONPATH=src python examples/train_lm.py --steps 300
+
+Uses the full stack: config system, synthetic data pipeline with prefetch,
+AdamW + cosine schedule, AoT-sealed train step (the Nimble discipline: the
+loop only submits), and checkpointing.  The model is the xlstm-125m assigned
+architecture at full size — a ~125M-parameter recurrent LM that trains on
+CPU at a usable pace.  Pass ``--arch stablelm-1.6b --smoke`` etc. for
+others.
+"""
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+import repro.configs as C
+from repro.checkpoint import save_checkpoint
+from repro.data import Prefetcher, SyntheticLM, data_config_for
+from repro.models import init_model
+from repro.optim import adamw_init, cosine_schedule
+from repro.training.train_lib import make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="xlstm-125m")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt", default="/tmp/repro_lm_ckpt")
+    args = ap.parse_args()
+
+    cfg = C.get(args.arch, smoke=args.smoke)
+    cfg = dataclasses.replace(cfg, dtype="float32")
+    print(f"{cfg.name}: {cfg.param_count/1e6:.0f}M params, "
+          f"{cfg.n_layers} layers, d_model={cfg.d_model}")
+
+    params, _ = init_model(jax.random.key(0), cfg)
+    opt = adamw_init(params)
+    step_fn = make_train_step(
+        cfg,
+        lr=lambda s: cosine_schedule(s, peak_lr=args.lr, warmup_steps=30,
+                                     total_steps=args.steps),
+    )
+
+    data = Prefetcher(SyntheticLM(data_config_for(
+        cfg, batch_size=args.batch, seq_len=args.seq)))
+    example = next(data)
+
+    t0 = time.perf_counter()
+    sealed = jax.jit(step_fn, donate_argnums=(0, 1)).lower(params, opt, example).compile()
+    print(f"AoT: sealed train step in {time.perf_counter()-t0:.1f}s")
+
+    losses = []
+    t0 = time.perf_counter()
+    for step in range(args.steps):
+        batch = example if step == 0 else next(data)
+        params, opt, m = sealed(params, opt, batch)
+        losses.append(float(m["loss"]))
+        if step % 25 == 0 or step == args.steps - 1:
+            dt = time.perf_counter() - t0
+            print(f"step {step:4d}  loss {losses[-1]:.4f}  "
+                  f"tok/s {(step+1)*args.batch*args.seq/dt:,.0f}")
+    data.close()
+
+    save_checkpoint(args.ckpt, {"params": params}, step=args.steps)
+    first, last = np.mean(losses[:20]), np.mean(losses[-20:])
+    print(f"\nloss {first:.3f} -> {last:.3f} "
+          f"({'LEARNED' if last < first - 0.1 else 'no material progress'}); "
+          f"checkpoint at {args.ckpt}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from .store import restore_checkpoint, save_checkpoint
+
+__all__ = ["restore_checkpoint", "save_checkpoint"]

@@ -1,0 +1,85 @@
+"""Assigned input shapes + ShapeDtypeStruct stand-ins for every model input.
+
+``input_specs(cfg, shape_name)`` returns (step_kind, specs) where specs is a
+pytree of ShapeDtypeStructs — weak-type-correct, shardable, no device
+allocation — exactly what ``jit(...).lower(**specs)`` needs for the dry-run.
+
+Decode shapes lower ``serve_step`` (one new token against a KV cache of
+``seq_len``), not ``train_step``.  ``long_500k`` applies only to
+sub-quadratic archs (see DESIGN.md §Shape skips).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import init_cache
+
+from .base import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                     # "train" | "prefill" | "decode"
+
+
+INPUT_SHAPES = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+# long_500k runs only on sub-quadratic archs (per spec); decode shapes are
+# skipped for encoder-only archs (none assigned here).
+LONG_CONTEXT_ARCHS = {"gemma2-27b", "zamba2-2.7b", "xlstm-125m"}
+
+
+def applicable(cfg: ModelConfig, shape_name: str) -> bool:
+    if shape_name == "long_500k":
+        return cfg.name in LONG_CONTEXT_ARCHS
+    return True
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def input_specs(cfg: ModelConfig, shape_name: str) -> tuple[str, dict]:
+    """ShapeDtypeStruct stand-ins for the step function's data arguments."""
+    sh = INPUT_SHAPES[shape_name]
+    B, S = sh.global_batch, sh.seq_len
+
+    if sh.kind in ("train", "prefill"):
+        if cfg.family == "vlm":
+            s_text = S - cfg.vision_tokens
+            batch = {
+                "tokens": _sds((B, s_text), jnp.int32),
+                "vision_embeds": _sds((B, cfg.vision_tokens, cfg.vision_dim), jnp.bfloat16),
+            }
+        elif cfg.family == "audio":
+            batch = {
+                "tokens": _sds((B, S), jnp.int32),
+                "frames": _sds((B, S // cfg.audio_frames_ratio, cfg.audio_dim), jnp.bfloat16),
+            }
+        else:
+            batch = {"tokens": _sds((B, S), jnp.int32)}
+        if sh.kind == "train":
+            # labels shape matches tokens; VLM masks image positions internally
+            batch["labels"] = _sds(batch["tokens"].shape, jnp.int32)
+        return sh.kind, {"batch": batch}
+
+    # decode: cache of seq_len + one token (synchronized batch decode:
+    # scalar write offset -> donation-aliasable single cache append)
+    mem_len = S // cfg.audio_frames_ratio if cfg.family == "audio" else 0
+    cache = jax.eval_shape(
+        lambda: init_cache(cfg, B, max_len=S, memory_len=mem_len, per_slot=False)
+    )
+    tokens = _sds((B, 1), jnp.int32)
+    return "decode", {"cache": cache, "tokens": tokens}

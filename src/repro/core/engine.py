@@ -1,0 +1,335 @@
+"""Execution engines: the run-time-scheduled baseline vs AoT replay.
+
+``EagerInterpreter`` is our stand-in for the base framework's run loop
+(paper §2, Fig. 1): for every task, at *every* execution, it
+
+  1. pops the next ready operator (operator emission),
+  2. checks input types/shapes,
+  3. infers output types/shapes,
+  4. dispatches the kernel (table lookup on (primitive, dtype, shape-rank)),
+  5. allocates output buffers through a caching-allocator model,
+  6. prepares kernel arguments, and only then
+  7. submits the task (binds the primitive op-by-op).
+
+Steps 1–6 are the *scheduling overhead* the paper measures; step 7 is the
+task itself.  ``Replayer`` (= ``TaskSchedule.replay``) skips 1–6 entirely.
+
+The interpreter is intentionally honest: it executes the same math as the
+sealed executable (tests assert allclose), so engine comparisons in the
+benchmarks are apples-to-apples, exactly like the paper's
+"scheduling-minimized PyTorch" experiment (Fig. 2b).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Sequence
+
+import jax
+import numpy as np
+from jax import core as jcore
+from jax.extend import core as jex_core
+
+from .trace import TracedGraph, trace_to_taskgraph
+
+
+@dataclasses.dataclass
+class DispatchProfile:
+    """Where the time went, per execution (fig. 2a analogue)."""
+
+    total_s: float = 0.0
+    schedule_s: float = 0.0    # steps 1-6
+    submit_s: float = 0.0      # step 7 (kernel execution; CPU is synchronous)
+    num_tasks: int = 0
+
+    @property
+    def overhead_fraction(self) -> float:
+        return self.schedule_s / self.total_s if self.total_s else 0.0
+
+
+class _CachingAllocator:
+    """Models the framework's cached GPU memory pool (free-list per size
+    class, as in PyTorch's CUDACachingAllocator).  We do the bookkeeping the
+    real allocator does — size-class rounding, free-list probe, split — and
+    charge its (CPU) cost to scheduling, without owning real device memory.
+    """
+
+    def __init__(self) -> None:
+        self.free_lists: dict[int, list[int]] = {}
+        self.next_addr = 0
+        self.live: dict[int, int] = {}  # addr -> size class
+
+    @staticmethod
+    def _size_class(nbytes: int) -> int:
+        if nbytes <= 512:
+            return 512
+        # round to next power-of-two-ish 512 multiple (PyTorch: 512B granularity)
+        return (nbytes + 511) // 512 * 512
+
+    def alloc(self, nbytes: int) -> int:
+        sc = self._size_class(nbytes)
+        fl = self.free_lists.get(sc)
+        if fl:
+            addr = fl.pop()
+        else:
+            addr = self.next_addr
+            self.next_addr += sc
+        self.live[addr] = sc
+        return addr
+
+    def free(self, addr: int) -> None:
+        sc = self.live.pop(addr)
+        self.free_lists.setdefault(sc, []).append(addr)
+
+
+class EagerInterpreter:
+    """Op-by-op run-time scheduling over a traced task list."""
+
+    def __init__(self, fn: Callable, *example_args: Any) -> None:
+        self.traced: TracedGraph = trace_to_taskgraph(fn, *example_args)
+        self._prepare_liveness()
+
+    def _prepare_liveness(self) -> None:
+        jaxpr = self.traced.jaxpr.jaxpr
+        self.last_use: dict[Any, int] = {}
+        for ei, eqn in enumerate(jaxpr.eqns):
+            for iv in eqn.invars:
+                if not isinstance(iv, jex_core.Literal):
+                    self.last_use[iv] = ei
+        for ov in jaxpr.outvars:
+            if not isinstance(ov, jex_core.Literal):
+                self.last_use[ov] = len(jaxpr.eqns)
+
+    def run(self, *args: Any, profile: DispatchProfile | None = None) -> Any:
+        """One full execution with run-time scheduling per task."""
+        jaxpr = self.traced.jaxpr.jaxpr
+        consts = self.traced.jaxpr.consts
+        allocator = _CachingAllocator()
+        env: dict[Any, Any] = {}
+        addr_of: dict[Any, int] = {}
+
+        def read(v):
+            return v.val if isinstance(v, jex_core.Literal) else env[v]
+
+        t_start = time.perf_counter()
+        sched_s = 0.0
+        submit_s = 0.0
+
+        for cv, c in zip(jaxpr.constvars, consts):
+            env[cv] = c
+        for iv, a in zip(jaxpr.invars, self.traced.flatten_args(args)):
+            env[iv] = a
+
+        for ei, eqn in enumerate(jaxpr.eqns):
+            s0 = time.perf_counter()
+            # (2) input type/shape check
+            invals = [read(v) for v in eqn.invars]
+            for v, val in zip(eqn.invars, invals):
+                aval = getattr(v, "aval", None)
+                if aval is not None and hasattr(aval, "shape"):
+                    if tuple(np.shape(val)) != tuple(aval.shape):
+                        raise TypeError(
+                            f"shape mismatch for {eqn.primitive.name}: "
+                            f"{np.shape(val)} vs {aval.shape}"
+                        )
+            # (3) output shape inference (recompute, as run-time schedulers do)
+            out_avals = [ov.aval for ov in eqn.outvars]
+            # (4) kernel dispatch: registry lookup
+            _ = _DISPATCH_TABLE.setdefault(
+                (eqn.primitive.name, str(getattr(out_avals[0], "dtype", "")),
+                 len(getattr(out_avals[0], "shape", ()))),
+                eqn.primitive,
+            )
+            # (5) output allocation through the caching allocator model
+            addrs = []
+            for aval in out_avals:
+                nbytes = getattr(aval, "dtype", np.dtype("f4")).itemsize
+                for s in getattr(aval, "shape", ()):
+                    nbytes *= s
+                addrs.append(allocator.alloc(max(nbytes, 1)))
+            # (6) argument preparation
+            bind_params = dict(eqn.params)
+            s1 = time.perf_counter()
+            sched_s += s1 - s0
+
+            # (7) submit: op-by-op execution of the kernel
+            outvals = eqn.primitive.bind(*invals, **bind_params)
+            if not eqn.primitive.multiple_results:
+                outvals = [outvals]
+            jax.block_until_ready(outvals)
+            s2 = time.perf_counter()
+            submit_s += s2 - s1
+
+            for ov, val, addr in zip(eqn.outvars, outvals, addrs):
+                env[ov] = val
+                addr_of[ov] = addr
+            # free dead buffers back to the pool (allocator traffic)
+            s3 = time.perf_counter()
+            for v in list(addr_of):
+                if self.last_use.get(v, -1) <= ei:
+                    allocator.free(addr_of.pop(v))
+            sched_s += time.perf_counter() - s3
+
+        out = [read(v) for v in jaxpr.outvars]
+        total = time.perf_counter() - t_start
+        if profile is not None:
+            profile.total_s += total
+            profile.schedule_s += sched_s
+            profile.submit_s += submit_s
+            profile.num_tasks += len(jaxpr.eqns)
+        return self.traced.unflatten_out(out)
+
+    __call__ = run
+
+
+_DISPATCH_TABLE: dict[tuple, Any] = {}
+
+
+class JitPerOpEngine(EagerInterpreter):
+    """TorchScript-analogue engine: the graph is known (no Python interpreter
+    in the loop) and every operator is individually pre-compiled, but tasks
+    are still *scheduled at run time* — per-op dispatch, allocation, and
+    submission happen every call.  Sits between eager and Nimble-AoT in the
+    Fig. 7 comparison, exactly like TorchScript does in the paper.
+    """
+
+    def __init__(self, fn: Callable, *example_args: Any) -> None:
+        super().__init__(fn, *example_args)
+        self._compiled: dict[int, Any] = {}
+        jaxpr = self.traced.jaxpr.jaxpr
+        for ei, eqn in enumerate(jaxpr.eqns):
+            prim, params = eqn.primitive, dict(eqn.params)
+
+            def op(*args, _p=prim, _k=params):
+                return _p.bind(*args, **_k)
+
+            in_sds = [
+                jax.ShapeDtypeStruct(v.aval.shape, v.aval.dtype)
+                for v in eqn.invars
+                if not isinstance(v, jex_core.Literal)
+            ]
+            lit_idx = [
+                i for i, v in enumerate(eqn.invars) if isinstance(v, jex_core.Literal)
+            ]
+            lits = [v.val for v in eqn.invars if isinstance(v, jex_core.Literal)]
+
+            def op_full(*args, _p=prim, _k=params, _li=tuple(lit_idx), _lv=tuple(lits)):
+                full = list(args)
+                for i, v in zip(_li, _lv):
+                    full.insert(i, v)
+                return _p.bind(*full, **_k)
+
+            try:
+                self._compiled[ei] = jax.jit(op_full).lower(*in_sds).compile()
+            except Exception:
+                self._compiled[ei] = None  # fall back to bind at run time
+
+    def run(self, *args: Any, profile: DispatchProfile | None = None) -> Any:
+        jaxpr = self.traced.jaxpr.jaxpr
+        consts = self.traced.jaxpr.consts
+        allocator = _CachingAllocator()
+        env: dict[Any, Any] = {}
+
+        def read(v):
+            return v.val if isinstance(v, jex_core.Literal) else env[v]
+
+        t_start = time.perf_counter()
+        for cv, c in zip(jaxpr.constvars, consts):
+            env[cv] = c
+        for iv, a in zip(jaxpr.invars, self.traced.flatten_args(args)):
+            env[iv] = jax.numpy.asarray(a)
+
+        for ei, eqn in enumerate(jaxpr.eqns):
+            invals = [env[v] for v in eqn.invars if not isinstance(v, jex_core.Literal)]
+            # run-time scheduling still happens: allocate outputs, dispatch
+            addrs = [
+                allocator.alloc(
+                    max(1, getattr(ov.aval, "dtype", np.dtype("f4")).itemsize)
+                )
+                for ov in eqn.outvars
+            ]
+            exe = self._compiled.get(ei)
+            if exe is not None:
+                outvals = exe(*invals)
+                if not isinstance(outvals, (list, tuple)):
+                    outvals = [outvals]
+            else:
+                allvals = [read(v) for v in eqn.invars]
+                outvals = eqn.primitive.bind(*allvals, **dict(eqn.params))
+                if not eqn.primitive.multiple_results:
+                    outvals = [outvals]
+            for ov, val in zip(eqn.outvars, outvals):
+                env[ov] = val
+            for a in addrs:
+                allocator.free(a)
+
+        out = [read(v) for v in jaxpr.outvars]
+        jax.block_until_ready(out)
+        if profile is not None:
+            profile.total_s += time.perf_counter() - t_start
+            profile.num_tasks += len(jaxpr.eqns)
+        return self.traced.unflatten_out(out)
+
+    __call__ = run
+
+
+def compare_engines(
+    fn: Callable,
+    *args: Any,
+    iters: int = 20,
+    warmup: int = 3,
+    multi_stream: bool = True,
+    pack_streams: bool = False,
+) -> dict[str, float]:
+    """Time eager run-time scheduling vs AoT replay on identical inputs.
+
+    Returns microseconds per call for each engine plus the speedup — the
+    repo's Fig. 2b / Fig. 7 measurement primitive.
+    """
+    from .aot import Nimble
+
+    eager = EagerInterpreter(fn, *args)
+    nimble = Nimble(fn, *args, multi_stream=multi_stream, pack_streams=pack_streams)
+
+    # correctness gate: identical numerics
+    ref = eager.run(*args)
+    got = nimble(*args)
+    _assert_trees_close(ref, got)
+
+    for _ in range(warmup):
+        eager.run(*args)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(eager.run(*args))
+    eager_us = (time.perf_counter() - t0) / iters * 1e6
+
+    for _ in range(warmup):
+        nimble(*args)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(nimble(*args))
+    aot_us = (time.perf_counter() - t0) / iters * 1e6
+
+    return {
+        "eager_us": eager_us,
+        "aot_us": aot_us,
+        "speedup": eager_us / aot_us if aot_us else float("inf"),
+        "num_tasks": eager.traced.graph.num_tasks,
+        "num_streams": nimble.stats.num_streams,
+        "num_syncs": nimble.stats.num_syncs,
+        "concurrency_degree": nimble.stats.degree_of_concurrency,
+    }
+
+
+def _assert_trees_close(a, b, rtol=2e-3, atol=2e-3):
+    la = jax.tree_util.tree_leaves(a)
+    lb = jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb), (len(la), len(lb))
+    for x, y in zip(la, lb):
+        np.testing.assert_allclose(
+            np.asarray(x, dtype=np.float64),
+            np.asarray(y, dtype=np.float64),
+            rtol=rtol,
+            atol=atol,
+        )

@@ -1,0 +1,238 @@
+"""Capture a TaskGraph from a JAX function (the "pre-run" trace source).
+
+Nimble's pre-run intercepts GPU tasks emitted by the base framework.  Our base
+framework is JAX: tracing a function with abstract inputs yields a jaxpr whose
+equations *are* the tasks, and whose def-use chains are the dependency edges.
+This mirrors Nimble's use of TorchScript graphs + CUDA stream capture, with
+the advantage that jaxpr tracing is already shape-specialized (the paper's
+static-network/fixed-shape precondition holds by construction).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+from jax import core as jcore
+from jax.extend import core as jex_core
+
+from .graph import TaskGraph
+
+# Primitives that are pure metadata / layout and cost ~nothing; useful for
+# cost models and for the packing rewriter to skip.
+_FREE_PRIMS = {
+    "broadcast_in_dim", "reshape", "squeeze", "transpose", "convert_element_type",
+    "slice", "concatenate", "pad", "rev", "iota",
+}
+
+_MATMUL_PRIMS = {"dot_general", "conv_general_dilated"}
+
+_CALL_PRIMS = {"pjit", "jit", "closed_call", "core_call", "xla_call", "remat", "checkpoint"}
+_CUSTOM_PRIMS = {"custom_jvp_call", "custom_vjp_call", "custom_vjp_call_jaxpr"}
+
+
+def _flops_of_eqn(eqn) -> float:
+    """Cheap analytic FLOP estimate per equation (dot_general exact)."""
+    if eqn.primitive.name == "dot_general":
+        (lc, rc), (lb, rb) = eqn.params["dimension_numbers"]
+        lhs, rhs = eqn.invars[0].aval, eqn.invars[1].aval
+        batch = contract = m = n = 1
+        for d in lb:
+            batch *= lhs.shape[d]
+        for d in lc:
+            contract *= lhs.shape[d]
+        for i, s in enumerate(lhs.shape):
+            if i not in lc and i not in lb:
+                m *= s
+        for i, s in enumerate(rhs.shape):
+            if i not in rc and i not in rb:
+                n *= s
+        return 2.0 * batch * m * n * contract
+    total = 0.0
+    for ov in eqn.outvars:
+        aval = ov.aval
+        if hasattr(aval, "shape"):
+            sz = 1
+            for s in aval.shape:
+                sz *= s
+            total += sz
+    return total
+
+
+def _bytes_of_aval(aval) -> int:
+    if not hasattr(aval, "shape") or not hasattr(aval, "dtype"):
+        return 0
+    sz = aval.dtype.itemsize
+    for s in aval.shape:
+        sz *= s
+    return sz
+
+
+@dataclasses.dataclass
+class TracedGraph:
+    """TaskGraph + bookkeeping to re-execute it (see core/engine.py)."""
+
+    graph: TaskGraph
+    jaxpr: Any                      # ClosedJaxpr (possibly inlined)
+    n_inputs: int
+    eqn_of_task: list[int] = dataclasses.field(default_factory=list)
+    in_tree: Any = None             # treedef of (args,)
+    out_tree: Any = None            # treedef of the function output
+
+    def flatten_args(self, args: tuple) -> list:
+        flat, treedef = jax.tree_util.tree_flatten(args)
+        if self.in_tree is not None and treedef != self.in_tree:
+            raise TypeError(f"input structure changed: {treedef} vs {self.in_tree}")
+        return flat
+
+    def unflatten_out(self, flat_out: list) -> Any:
+        if self.out_tree is None:
+            return flat_out[0] if len(flat_out) == 1 else tuple(flat_out)
+        return jax.tree_util.tree_unflatten(self.out_tree, flat_out)
+
+
+def trace_to_taskgraph(
+    fn: Callable,
+    *example_args: Any,
+    inline_calls: bool = True,
+) -> TracedGraph:
+    """Trace ``fn`` at the shapes of ``example_args`` and lift to a TaskGraph.
+
+    ``inline_calls=True`` flattens pjit/custom_* sub-jaxprs so the operator
+    graph reflects real task granularity rather than an opaque call node
+    (PyTorch-eager granularity is what Nimble schedules).
+    """
+    closed, out_shape = jax.make_jaxpr(fn, return_shape=True)(*example_args)
+    _, in_tree = jax.tree_util.tree_flatten(example_args)
+    _, out_tree = jax.tree_util.tree_flatten(out_shape)
+    if inline_calls:
+        closed = inline_closed_jaxpr(closed)
+
+    jaxpr = closed.jaxpr
+    g = TaskGraph()
+    eqn_of_task: list[int] = []
+    producer: dict[int, int] = {}  # id(var) -> producing task id
+
+    for ei, eqn in enumerate(jaxpr.eqns):
+        name = eqn.primitive.name
+        out_shapes = tuple(tuple(getattr(ov.aval, "shape", ())) for ov in eqn.outvars)
+        out_dtypes = tuple(str(getattr(ov.aval, "dtype", "")) for ov in eqn.outvars)
+        kind = (
+            "matmul" if name in _MATMUL_PRIMS
+            else "layout" if name in _FREE_PRIMS
+            else "ewise"
+        )
+        t = g.add_task(
+            name,
+            op=eqn,
+            out_shapes=out_shapes,
+            out_dtypes=out_dtypes,
+            flops=_flops_of_eqn(eqn),
+            kind=kind,
+        )
+        t.meta["out_bytes"] = sum(_bytes_of_aval(ov.aval) for ov in eqn.outvars)
+        eqn_of_task.append(ei)
+        for iv in eqn.invars:
+            if isinstance(iv, jex_core.Literal):
+                continue
+            p = producer.get(id(iv))
+            if p is not None and p != t.id:
+                g.add_edge(p, t.id)
+        for ov in eqn.outvars:
+            producer[id(ov)] = t.id
+
+    return TracedGraph(
+        graph=g,
+        jaxpr=closed,
+        n_inputs=len(jaxpr.invars),
+        eqn_of_task=eqn_of_task,
+        in_tree=in_tree,
+        out_tree=out_tree,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Jaxpr inlining: flatten call-like equations so tasks are primitive ops.
+# ---------------------------------------------------------------------------
+
+def inline_closed_jaxpr(closed, depth: int = 6):
+    """Return an equivalent ClosedJaxpr with pjit/custom_* calls inlined."""
+    gensym = jcore.gensym()
+
+    def inline_jaxpr(jpr, depth):
+        new_eqns = []
+        for eqn in jpr.eqns:
+            sub = None
+            if eqn.primitive.name in _CALL_PRIMS:
+                sub = eqn.params.get("jaxpr") or eqn.params.get("call_jaxpr")
+            elif eqn.primitive.name in _CUSTOM_PRIMS:
+                sub = eqn.params.get("call_jaxpr") or eqn.params.get("fun_jaxpr")
+            if sub is None or depth <= 0:
+                new_eqns.append(eqn)
+                continue
+
+            inner = sub.jaxpr if hasattr(sub, "jaxpr") else sub
+            consts = list(getattr(sub, "consts", []))
+            inner = inline_jaxpr(inner, depth - 1)
+
+            env: dict[Any, Any] = {}
+            for cv, cval in zip(inner.constvars, consts):
+                try:
+                    env[cv] = jex_core.Literal(cval, cv.aval)
+                except Exception:
+                    # non-literalable const: hoist via fresh var is not
+                    # possible here, keep the call opaque instead.
+                    new_eqns.append(eqn)
+                    env = None
+                    break
+            if env is None:
+                continue
+            for iv, ov in zip(inner.invars, eqn.invars):
+                env[iv] = ov
+            # Pre-bind inner outvars to the call's outvars when they are
+            # plain vars produced inside (usual case), keeping SSA exact.
+            for inner_ov, outer_ov in zip(inner.outvars, eqn.outvars):
+                if (
+                    not isinstance(inner_ov, jex_core.Literal)
+                    and inner_ov not in env
+                ):
+                    env[inner_ov] = outer_ov
+
+            def sub_var(v, env=env):
+                if isinstance(v, jex_core.Literal):
+                    return v
+                if v not in env:
+                    env[v] = gensym(v.aval)
+                return env[v]
+
+            for ieqn in inner.eqns:
+                new_eqns.append(
+                    ieqn.replace(
+                        invars=[sub_var(v) for v in ieqn.invars],
+                        outvars=[sub_var(v) for v in ieqn.outvars],
+                    )
+                )
+            # Any outvar that was an inner invar/literal (passthrough) needs
+            # an explicit copy equation to stay SSA.
+            for inner_ov, outer_ov in zip(inner.outvars, eqn.outvars):
+                mapped = sub_var(inner_ov) if not isinstance(inner_ov, jex_core.Literal) else inner_ov
+                if mapped is not outer_ov:
+                    new_eqns.append(_copy_eqn(mapped, outer_ov))
+        return jpr.replace(eqns=new_eqns)
+
+    new_jaxpr = inline_jaxpr(closed.jaxpr, depth)
+    return jex_core.ClosedJaxpr(new_jaxpr, closed.consts)
+
+
+def _copy_eqn(src, dst):
+    """dst = convert_element_type(src): an SSA-preserving identity."""
+    from jax._src.lax import lax as _lax
+
+    dtype = dst.aval.dtype
+    params = dict(new_dtype=dtype, weak_type=False, sharding=None)
+    try:
+        return jcore.new_jaxpr_eqn([src], [dst], _lax.convert_element_type_p, params, set())
+    except TypeError:
+        params.pop("sharding")
+        return jcore.new_jaxpr_eqn([src], [dst], _lax.convert_element_type_p, params, set())

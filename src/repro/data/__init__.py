@@ -1,0 +1,3 @@
+from .pipeline import DataConfig, Prefetcher, SyntheticLM, data_config_for
+
+__all__ = ["DataConfig", "Prefetcher", "SyntheticLM", "data_config_for"]

@@ -1,0 +1,15 @@
+from .sharding import (
+    DEFAULT_RULES,
+    LONG_CONTEXT_OVERRIDES,
+    constrain,
+    gather_fsdp,
+    logical_to_pspec,
+    parse_axes,
+    tree_shardings,
+    use_sharding_ctx,
+)
+
+__all__ = [
+    "DEFAULT_RULES", "LONG_CONTEXT_OVERRIDES", "constrain", "gather_fsdp",
+    "logical_to_pspec", "parse_axes", "tree_shardings", "use_sharding_ctx",
+]

@@ -1,0 +1,202 @@
+"""Logical-axis sharding rules (MaxText-style) + activation constraints.
+
+Parameters and activations are annotated with *logical* axis names; a rule
+table maps logical axes to mesh axes.  An axis is sharded only when its size
+divides the product of the mapped mesh axes — otherwise it is replicated
+(e.g. phi4's 24 query heads on a 16-way model axis).
+
+``use_sharding_ctx(mesh, rules)`` installs a context so model code can call
+``constrain(x, "batch", "seq", "embed")`` without threading the mesh through
+every function; outside a context the call is a no-op (CPU smoke tests).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import math
+import threading
+from typing import Any, Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical axis -> mesh axis (or tuple of mesh axes)
+DEFAULT_RULES: dict[str, Any] = {
+    "batch": ("pod", "data"),
+    "fsdp": ("pod", "data"),   # weight-shard dim for FSDP/ZeRO
+    "embed": None,              # activations' feature dim: replicated
+    "seq": None,
+    "kv_seq": None,             # decode KV cache sequence dim
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "mlp": "model",
+    "vocab": "model",
+    "expert": "model",
+    "layers": None,
+    "state": None,
+    "lora": None,
+}
+
+# Rules for the long-context decode shape: batch=1 so the data axis instead
+# shards the KV-cache sequence dimension (sequence/context parallelism).
+LONG_CONTEXT_OVERRIDES: dict[str, Any] = {
+    "kv_seq": ("pod", "data"),
+    "batch": None,
+}
+
+
+@dataclasses.dataclass
+class ShardingCtx:
+    mesh: Mesh
+    rules: dict[str, Any]
+
+
+_tls = threading.local()
+
+
+def current_ctx() -> Optional[ShardingCtx]:
+    return getattr(_tls, "ctx", None)
+
+
+@contextlib.contextmanager
+def use_sharding_ctx(mesh: Optional[Mesh], rules: Optional[dict] = None):
+    prev = current_ctx()
+    if mesh is None:
+        _tls.ctx = None
+    else:
+        r = dict(DEFAULT_RULES)
+        if rules:
+            r.update(rules)
+        _tls.ctx = ShardingCtx(mesh=mesh, rules=r)
+    try:
+        yield _tls.ctx
+    finally:
+        _tls.ctx = prev
+
+
+def _mesh_axes_size(mesh: Mesh, spec_entry: Any) -> int:
+    if spec_entry is None:
+        return 1
+    axes = spec_entry if isinstance(spec_entry, tuple) else (spec_entry,)
+    size = 1
+    for a in axes:
+        size *= dict(zip(mesh.axis_names, mesh.devices.shape)).get(a, 1)
+    return size
+
+
+def _filter_entry(mesh: Mesh, entry: Any) -> Any:
+    """Drop mesh axes absent from this mesh (e.g. 'pod' on single-pod)."""
+    if entry is None:
+        return None
+    axes = entry if isinstance(entry, tuple) else (entry,)
+    present = tuple(a for a in axes if a in mesh.axis_names)
+    if not present:
+        return None
+    return present if len(present) > 1 else present[0]
+
+
+def logical_to_pspec(
+    logical_axes: Sequence[Optional[str]],
+    shape: Sequence[int],
+    mesh: Mesh,
+    rules: dict[str, Any],
+) -> P:
+    """Map logical axes to a PartitionSpec, respecting divisibility and
+    never using one mesh axis twice."""
+    entries = []
+    used: set[str] = set()
+    for ax_name, dim in zip(logical_axes, shape):
+        entry = None
+        if ax_name is not None:
+            entry = _filter_entry(mesh, rules.get(ax_name))
+            if entry is not None:
+                axes = entry if isinstance(entry, tuple) else (entry,)
+                if any(a in used for a in axes):
+                    entry = None
+                else:
+                    size = _mesh_axes_size(mesh, entry)
+                    if size <= 1 or dim % size != 0:
+                        entry = None
+                    else:
+                        used.update(axes)
+        entries.append(entry)
+    return P(*entries)
+
+
+def constrain(x: jax.Array, *logical_axes: Optional[str]) -> jax.Array:
+    """with_sharding_constraint via the installed context (no-op without)."""
+    ctx = current_ctx()
+    if ctx is None:
+        return x
+    spec = logical_to_pspec(logical_axes, x.shape, ctx.mesh, ctx.rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(ctx.mesh, spec))
+
+
+def gather_fsdp(x: jax.Array, *logical_axes: Optional[str],
+                group: str = "all") -> jax.Array:
+    """FSDP weight-gather at use: re-constrain a parameter with its ``fsdp``
+    dims replicated, so contractions see a full (weight-gathered) operand.
+
+    Without this, GSPMD may partially contract over the fsdp-sharded dim and
+    all-reduce the *activation*-sized result — orders of magnitude more
+    collective bytes than gathering the weight (EXPERIMENTS.md §Perf,
+    deepseek hillclimb, iteration 3).  Opt-in via the rules entry
+    ``{"gather_fsdp": "all" | "moe" | "attn" | "ffn"}`` so per-site effects
+    are measurable; off by default (the recorded baseline behavior).
+    """
+    ctx = current_ctx()
+    if ctx is None:
+        return x
+    mode = ctx.rules.get("gather_fsdp", "off")
+    if mode != "all" and mode != group:
+        return x
+    axes = tuple(None if a == "fsdp" else a for a in logical_axes)
+    return constrain(x, *axes)
+
+
+def named_sharding_for(
+    logical_axes: Sequence[Optional[str]],
+    shape: Sequence[int],
+    mesh: Mesh,
+    rules: Optional[dict[str, Any]] = None,
+) -> NamedSharding:
+    r = dict(DEFAULT_RULES)
+    if rules:
+        r.update(rules)
+    return NamedSharding(mesh, logical_to_pspec(logical_axes, shape, mesh, r))
+
+
+def parse_axes(spec: str) -> tuple[Optional[str], ...]:
+    """Parse a whitespace-separated logical-axes string; ``_`` = replicated.
+
+    Axes strings (not tuples) keep the axes pytree the same shape as the
+    params pytree, so the two can be tree_mapped together.
+    """
+    if not spec:
+        return ()
+    return tuple(None if tok == "_" else tok for tok in spec.split())
+
+
+def tree_shardings(
+    params_shapes: Any,
+    params_axes: Any,
+    mesh: Mesh,
+    rules: Optional[dict[str, Any]] = None,
+) -> Any:
+    """Map a pytree of ShapeDtypeStructs + a matching pytree of logical-axis
+    strings (see :func:`parse_axes`) to a pytree of NamedShardings."""
+    r = dict(DEFAULT_RULES)
+    if rules:
+        r.update(rules)
+
+    def one(sds, axes_str):
+        axes = parse_axes(axes_str)
+        if len(axes) != len(sds.shape):
+            raise ValueError(
+                f"axes {axes_str!r} rank {len(axes)} != shape {sds.shape}"
+            )
+        return NamedSharding(mesh, logical_to_pspec(axes, sds.shape, mesh, r))
+
+    return jax.tree_util.tree_map(one, params_shapes, params_axes)

@@ -1,0 +1,5 @@
+from .kernel import flash_attention
+from .ops import mha_flash
+from .ref import flash_attention_ref
+
+__all__ = ["flash_attention", "mha_flash", "flash_attention_ref"]

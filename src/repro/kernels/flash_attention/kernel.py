@@ -1,0 +1,139 @@
+"""Block-tiled online-softmax attention (flash) for TPU via Pallas.
+
+Covers the attention variants the assigned pool needs: causal GQA, sliding
+window (gemma2 local layers), logit soft-capping (gemma2), and bidirectional
+(audio encoder).  The HBM→VMEM tiling is explicit: per (batch·head, q-block)
+the kernel streams kv-blocks, carrying the running max/normalizer/accumulator
+in float32 VMEM scratch — the standard flash recurrence, with block shapes
+chosen MXU-aligned (q/kv blocks multiples of 128 at full size).
+
+Causality also prunes the *grid*: with kv innermost, blocks entirely above
+the diagonal only reset/skip (cheap), so wall-clock work matches the masked
+fraction.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref,
+    acc_ref, m_ref, l_ref,
+    *,
+    scale: float,
+    softcap: float,
+    causal: bool,
+    window: int,
+    block_q: int,
+    block_kv: int,
+    n_kv: int,
+):
+    qi = pl.program_id(1)
+    kk = pl.program_id(2)
+
+    @pl.when(kk == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_kv), 0)
+    kv_pos = kk * block_kv + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_kv), 1)
+
+    run = True
+    if causal:
+        # whole block above the diagonal? (first kv pos > last q pos)
+        run = kk * block_kv <= qi * block_q + block_q - 1
+    if window:
+        # whole block left of every query's window?
+        run = jnp.logical_and(run, (kk + 1) * block_kv - 1 > qi * block_q - window)
+
+    @pl.when(run)
+    def _step():
+        q = q_ref[0].astype(jnp.float32)                  # (bq, hd)
+        k = k_ref[0].astype(jnp.float32)                  # (bkv, hd)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale                                         # (bq, bkv)
+        if softcap:
+            s = jnp.tanh(s / softcap) * softcap
+        mask = jnp.ones_like(s, dtype=jnp.bool_)
+        if causal:
+            mask &= kv_pos <= q_pos
+        if window:
+            mask &= kv_pos > q_pos - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]                               # (bq, 1)
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        p = jnp.where(mask, p, 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = alpha * l_ref[...] + p.sum(axis=-1, keepdims=True)
+        acc_ref[...] = alpha * acc_ref[...] + jax.lax.dot_general(
+            p, v_ref[0].astype(jnp.float32), (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_ref[...] = m_new
+
+    @pl.when(kk == n_kv - 1)
+    def _done():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, ...] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention(
+    q: jax.Array,            # (BH, Sq, hd)   — batch·q_heads flattened
+    k: jax.Array,            # (BH_kv, Skv, hd)
+    v: jax.Array,            # (BH_kv, Skv, hd)
+    *,
+    group: int = 1,          # q heads per kv head (GQA): BH == BH_kv * group
+    scale: float | None = None,
+    softcap: float = 0.0,
+    causal: bool = True,
+    window: int = 0,
+    block_q: int = 128,
+    block_kv: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    BH, Sq, hd = q.shape
+    BHK, Skv, _ = k.shape
+    assert BH == BHK * group, (BH, BHK, group)
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    bq, bkv = min(block_q, Sq), min(block_kv, Skv)
+    if Sq % bq or Skv % bkv:
+        raise ValueError(f"seq ({Sq},{Skv}) must divide blocks ({bq},{bkv})")
+    n_kv = Skv // bkv
+    grid = (BH, Sq // bq, n_kv)
+
+    kernel = functools.partial(
+        _flash_kernel,
+        scale=scale, softcap=softcap, causal=causal, window=window,
+        block_q=bq, block_kv=bkv, n_kv=n_kv,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda h, i, kk: (h, i, 0)),
+            pl.BlockSpec((1, bkv, hd), lambda h, i, kk, g=group: (h // g, kk, 0)),
+            pl.BlockSpec((1, bkv, hd), lambda h, i, kk, g=group: (h // g, kk, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda h, i, kk: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, hd), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

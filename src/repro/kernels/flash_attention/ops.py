@@ -1,0 +1,50 @@
+"""jit'd wrapper: model-layout flash attention.
+
+Takes model-layout tensors (B, S, heads, head_dim), flattens to the kernel's
+(B·heads, S, head_dim) layout, and picks kernel vs oracle by backend —
+Pallas-on-TPU, interpret-Pallas or the oracle on CPU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention
+from .ref import flash_attention_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("scale", "softcap", "causal", "window", "use_kernel", "interpret"),
+)
+def mha_flash(
+    q,                        # (B, Sq, NH, hd)
+    k,                        # (B, Skv, NKV, hd)
+    v,
+    *,
+    scale=None,
+    softcap: float = 0.0,
+    causal: bool = True,
+    window: int = 0,
+    use_kernel: bool = True,
+    interpret: bool = False,
+):
+    B, Sq, NH, hd = q.shape
+    NKV = k.shape[2]
+    group = NH // NKV
+    qf = q.transpose(0, 2, 1, 3).reshape(B * NH, Sq, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * NKV, k.shape[1], hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * NKV, v.shape[1], hd)
+    fn = flash_attention if (use_kernel and (interpret or _on_tpu())) else flash_attention_ref
+    kw = dict(group=group, scale=scale, softcap=softcap, causal=causal, window=window)
+    if fn is flash_attention:
+        kw["interpret"] = interpret or not _on_tpu()
+    out = fn(qf, kf, vf, **kw)
+    return out.reshape(B, NH, Sq, hd).transpose(0, 2, 1, 3)

@@ -1,0 +1,40 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(
+    q: jax.Array,            # (BH, Sq, hd)
+    k: jax.Array,            # (BH_kv, Skv, hd)
+    v: jax.Array,
+    *,
+    group: int = 1,
+    scale: float | None = None,
+    softcap: float = 0.0,
+    causal: bool = True,
+    window: int = 0,
+) -> jax.Array:
+    BH, Sq, hd = q.shape
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    kk = jnp.repeat(k, group, axis=0)
+    vv = jnp.repeat(v, group, axis=0)
+    s = jnp.einsum(
+        "hqd,hkd->hqk", q.astype(jnp.float32), kk.astype(jnp.float32)
+    ) * scale
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    q_pos = jnp.arange(Sq)[:, None]
+    kv_pos = jnp.arange(k.shape[1])[None, :]
+    mask = jnp.ones((Sq, k.shape[1]), bool)
+    if causal:
+        mask &= kv_pos <= q_pos
+    if window:
+        mask &= kv_pos > q_pos - window
+    s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("hqk,hkd->hqd", p, vv.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,5 @@
+from .kernel import stream_pack_matmul
+from .ops import packed_branches, stream_pack
+from .ref import stream_pack_matmul_ref
+
+__all__ = ["stream_pack_matmul", "packed_branches", "stream_pack", "stream_pack_matmul_ref"]

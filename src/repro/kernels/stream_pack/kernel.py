@@ -1,0 +1,75 @@
+"""stream_pack: k independent same-shape matmuls in ONE Pallas kernel.
+
+This is the TPU realization of Nimble's multi-stream execution (DESIGN.md
+§2): operators that Algorithm 1 assigns to k different streams become k
+*lanes* of a single grid — instead of overlapping k small kernels on one GPU,
+we keep the MXU busy with one batched kernel whose grid covers all lanes.
+The same kernel is the grouped-expert matmul of the MoE layers (experts ==
+lanes == "streams").
+
+Grid: (lanes, M/bm, N/bn, K/bk) — K innermost so each (lane, i, j) tile
+accumulates over K in a float32 VMEM scratch and writes once, MXU-aligned
+block shapes (multiples of 128 on the matmul dims at full size; smaller
+shapes clamp).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _matmul_lane_kernel(x_ref, w_ref, o_ref, acc_ref, *, n_k: int):
+    """One (lane, i, j, kk) grid step: acc += x_blk @ w_blk."""
+    kk = pl.program_id(3)
+
+    @pl.when(kk == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[0],
+        w_ref[0],
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(kk == n_k - 1)
+    def _done():
+        o_ref[0, ...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def stream_pack_matmul(
+    x: jax.Array,            # (lanes, M, K)
+    w: jax.Array,            # (lanes, K, N)
+    *,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    lanes, M, K = x.shape
+    _, _, N = w.shape
+    bm, bn, bk = min(block_m, M), min(block_n, N), min(block_k, K)
+    if M % bm or N % bn or K % bk:
+        raise ValueError(f"dims ({M},{N},{K}) must divide blocks ({bm},{bn},{bk})")
+    n_k = K // bk
+
+    grid = (lanes, M // bm, N // bn, n_k)
+    kernel = functools.partial(_matmul_lane_kernel, n_k=n_k)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bm, bk), lambda g, i, j, kk: (g, i, kk)),
+            pl.BlockSpec((1, bk, bn), lambda g, i, j, kk: (g, kk, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bm, bn), lambda g, i, j, kk: (g, i, j)),
+        out_shape=jax.ShapeDtypeStruct((lanes, M, N), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, w)

@@ -1,0 +1,37 @@
+"""jit'd public wrapper for stream_pack.
+
+``packed_branches(xs, ws)`` is the drop-in for "run these k independent
+matmuls on k streams": stack, one kernel, unstack.  On CPU (tests, smoke) it
+dispatches the Pallas kernel in interpret mode or falls back to the jnp
+oracle; on TPU the Pallas path is the real kernel.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import stream_pack_matmul
+from .ref import stream_pack_matmul_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel", "interpret"))
+def stream_pack(x, w, *, use_kernel: bool = True, interpret: bool = False):
+    """x: (lanes, M, K), w: (lanes, K, N) → (lanes, M, N)."""
+    if use_kernel and (interpret or _on_tpu()):
+        return stream_pack_matmul(x, w, interpret=interpret or not _on_tpu())
+    return stream_pack_matmul_ref(x, w)
+
+
+def packed_branches(xs, ws, **kw):
+    """List-of-branches API: [(M,K)]*k, [(K,N)]*k → list of (M,N)."""
+    x = jnp.stack(xs)
+    w = jnp.stack(ws)
+    out = stream_pack(x, w, **kw)
+    return [out[i] for i in range(out.shape[0])]

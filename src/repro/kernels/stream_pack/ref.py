@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for stream_pack (the k-lane batched matmul)."""
+
+import jax
+import jax.numpy as jnp
+
+
+def stream_pack_matmul_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    """x: (lanes, M, K), w: (lanes, K, N) → (lanes, M, N)."""
+    return jnp.einsum(
+        "gmk,gkn->gmn", x, w, preferred_element_type=jnp.float32
+    ).astype(x.dtype)

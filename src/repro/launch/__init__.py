@@ -1,0 +1,3 @@
+# Launchers: mesh.py (production meshes), dryrun.py (multi-pod lower+compile
+# — NOTE it sets XLA_FLAGS at import; run it as its own process), train.py,
+# serve.py.  hlo_analysis.py is side-effect-free and importable anywhere.

@@ -1,0 +1,250 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (spec deliverable e).
+
+For every (architecture × input shape × mesh) combination this lowers and
+compiles the real step function — ``train_step`` for train shapes,
+``forward`` for prefill, ``decode_step`` for decode shapes — against
+ShapeDtypeStruct inputs on the production mesh (16×16 single-pod and
+2×16×16 multi-pod), then records
+
+  * ``compiled.memory_analysis()``  (bytes/device — proves it fits),
+  * ``compiled.cost_analysis()``    (HLO FLOPs / bytes for §Roofline),
+  * collective bytes parsed from the compiled HLO text, per collective kind.
+
+Results land in ``experiments/dryrun/*.json`` and feed EXPERIMENTS.md
+§Dry-run and §Roofline.
+
+NOTE the XLA_FLAGS line above MUST precede any jax import: jax locks the
+device count at first backend initialization (which is also why this module
+has no ``from __future__`` block — nothing may precede the os.environ line).
+"""
+
+import argparse
+import dataclasses
+import json
+import pathlib
+import re
+import time
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+import repro.configs as C
+from repro.configs.shapes import INPUT_SHAPES, applicable, input_specs
+from repro.distributed.sharding import (
+    DEFAULT_RULES,
+    LONG_CONTEXT_OVERRIDES,
+    tree_shardings,
+    use_sharding_ctx,
+)
+from repro.launch.mesh import make_production_mesh
+from repro.models import abstract_model, decode_step, forward
+from repro.models.transformer import cache_axes
+from repro.optim.adamw import AdamWState
+from repro.training.train_lib import make_train_step
+
+OUT_DIR = pathlib.Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+from repro.launch.hlo_analysis import (  # noqa: E402 — after XLA_FLAGS
+    DEF_RE as _DEF_RE,
+    SHAPE_RE as _SHAPE_RE,
+    collective_bytes,
+    shape_bytes as _shape_bytes,
+)
+
+
+# ---------------------------------------------------------------------------
+# step construction
+# ---------------------------------------------------------------------------
+
+def _batch_axes(batch: dict) -> dict:
+    axes = {}
+    for k, v in batch.items():
+        if k in ("tokens", "labels"):
+            axes[k] = "batch seq"
+        elif k == "vision_embeds":
+            axes[k] = "batch _ _"
+        elif k == "frames":
+            axes[k] = "batch _ _"
+        else:
+            axes[k] = " ".join(["_"] * len(v.shape))
+    return axes
+
+
+def build_case(arch: str, shape_name: str, mesh, *, rules=None, unroll=False,
+               overrides=None):
+    """Returns (fn, arg_specs, in_shardings, cfg) for jit/lower.
+
+    ``unroll=True`` unrolls layer scans so cost_analysis counts every layer
+    (XLA counts while bodies once); used by the roofline pass.  ``overrides``
+    is a dict of ModelConfig field replacements (perf experiments).
+    """
+    cfg = C.get(arch)
+    if unroll:
+        cfg = dataclasses.replace(cfg, scan_unroll=True)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    sh = INPUT_SHAPES[shape_name]
+    kind, specs = input_specs(cfg, shape_name)
+    params_sds, params_axes = abstract_model(cfg)
+    p_shard = tree_shardings(params_sds, params_axes, mesh, rules)
+
+    if kind == "train":
+        cfg_t = dataclasses.replace(cfg, remat=True)
+        step = make_train_step(cfg_t, lr=1e-4)
+        opt_sds = AdamWState(
+            step=jax.ShapeDtypeStruct((), jnp.int32),
+            mu=jax.tree_util.tree_map(
+                lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), params_sds
+            ),
+            nu=jax.tree_util.tree_map(
+                lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), params_sds
+            ),
+        )
+        f32_shard = tree_shardings(
+            opt_sds.mu,
+            params_axes,
+            mesh,
+            rules,
+        )
+        opt_shard = AdamWState(
+            step=NamedSharding(mesh, P()), mu=f32_shard, nu=f32_shard
+        )
+        batch = specs["batch"]
+        b_shard = tree_shardings(batch, _batch_axes(batch), mesh, rules)
+        return (
+            step,
+            (params_sds, opt_sds, batch),
+            (p_shard, opt_shard, b_shard),
+            cfg_t,
+        )
+
+    if kind == "prefill":
+        def prefill_fn(params, batch):
+            logits, _ = forward(params, batch, cfg)
+            return logits
+
+        batch = specs["batch"]
+        b_shard = tree_shardings(batch, _batch_axes(batch), mesh, rules)
+        return prefill_fn, (params_sds, batch), (p_shard, b_shard), cfg
+
+    # decode
+    def serve_step(params, cache, tokens):
+        return decode_step(params, cache, tokens, cfg)
+
+    cache_sds = specs["cache"]
+    c_shard = tree_shardings(cache_sds, cache_axes(cfg, per_slot=False), mesh, rules)
+    tok_shard = tree_shardings(
+        {"t": specs["tokens"]}, {"t": "batch seq"}, mesh, rules
+    )["t"]
+    return (
+        serve_step,
+        (params_sds, cache_sds, specs["tokens"]),
+        (p_shard, c_shard, tok_shard),
+        cfg,
+    )
+
+
+def run_case(arch: str, shape_name: str, *, multi_pod: bool = False,
+             unroll: bool = False, overrides=None, extra_rules=None,
+             donate_argnums: tuple = ()) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = dict(LONG_CONTEXT_OVERRIDES) if shape_name == "long_500k" else None
+    if extra_rules:
+        rules = {**(rules or {}), **extra_rules}
+    t0 = time.perf_counter()
+    fn, arg_specs, in_shardings, cfg = build_case(
+        arch, shape_name, mesh, rules=rules, unroll=unroll, overrides=overrides
+    )
+
+    with use_sharding_ctx(mesh, rules):
+        jitted = jax.jit(fn, in_shardings=in_shardings,
+                         donate_argnums=donate_argnums)
+        lowered = jitted.lower(*arg_specs)
+        t_lower = time.perf_counter() - t0
+        t1 = time.perf_counter()
+        compiled = lowered.compile()
+        t_compile = time.perf_counter() - t1
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    coll = collective_bytes(compiled.as_text())
+
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "devices": int(mesh.devices.size),
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "flops": float(cost.get("flops", -1.0)),
+        "bytes_accessed": float(cost.get("bytes accessed", -1.0)),
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+            "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+            "generated_code_bytes": getattr(mem, "generated_code_size_in_bytes", 0),
+        },
+        "collectives": coll,
+        "params": C.get(arch).param_count,
+        "active_params": C.get(arch).active_param_count,
+    }
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all", help="arch id or 'all'")
+    ap.add_argument("--shape", default="all", help="shape name or 'all'")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument(
+        "--unroll", action="store_true",
+        help="unroll layer scans so cost_analysis counts all layers "
+             "(roofline accounting; slower compiles)",
+    )
+    args = ap.parse_args()
+
+    archs = C.all_archs() if args.arch == "all" else [args.arch]
+    shapes = list(INPUT_SHAPES) if args.shape == "all" else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+    failures = []
+    for arch in archs:
+        cfg = C.get(arch)
+        for shape in shapes:
+            if not applicable(cfg, shape):
+                print(f"SKIP  {arch} × {shape} (see DESIGN.md §Shape skips)")
+                continue
+            for mp in meshes:
+                tag = f"{arch}_{shape}_{'2x16x16' if mp else '16x16'}"
+                if args.unroll:
+                    tag += "_unrolled"
+                try:
+                    r = run_case(arch, shape, multi_pod=mp, unroll=args.unroll)
+                except Exception as e:  # noqa: BLE001 — report and continue
+                    failures.append((tag, str(e)[:500]))
+                    print(f"FAIL  {tag}: {str(e)[:200]}")
+                    continue
+                out = OUT_DIR / f"{tag}.json"
+                out.write_text(json.dumps(r, indent=1))
+                print(
+                    f"OK    {tag}: compile={r['compile_s']}s "
+                    f"flops={r['flops']:.3e} bytes={r['bytes_accessed']:.3e} "
+                    f"coll={r['collectives']['total_bytes']:.3e}"
+                )
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for tag, err in failures:
+            print(f"  {tag}: {err}")
+        raise SystemExit(1)
+    print("\nall dry-runs passed")
+
+
+if __name__ == "__main__":
+    main()

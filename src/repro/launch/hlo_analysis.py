@@ -1,0 +1,87 @@
+"""HLO-text analysis: collective-byte accounting for the dry-run/roofline.
+
+Standalone (no jax device-state side effects) so tests and tools can import
+it without touching XLA_FLAGS.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any
+
+COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+SHAPE_RE = re.compile(r"\b([a-z]+\d*)\[([\d,]*)\]")
+DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.*?)\s+([\w\-]+)\(")
+OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+
+
+def shape_bytes(dtype: str, dims: str) -> int:
+    nb = _DTYPE_BYTES.get(dtype)
+    if nb is None:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * nb
+
+
+def collective_bytes(hlo_text: str) -> dict[str, Any]:
+    """Sum operand sizes of every collective op in the HLO, per kind.
+
+    Compiled HLO prints operands as bare ``%names``, so two passes: (1) build
+    a symbol table name -> output bytes from every instruction definition;
+    (2) for each collective, sum its operands' sizes.  ``-done`` halves of
+    async pairs are skipped (payload counted at ``-start``).
+    """
+    sizes: dict[str, int] = {}
+    lines = hlo_text.splitlines()
+    for line in lines:
+        m = DEF_RE.match(line)
+        if not m:
+            continue
+        name, type_str, _op = m.groups()
+        sizes[name] = sum(shape_bytes(d, s) for d, s in SHAPE_RE.findall(type_str))
+
+    per_kind: dict[str, int] = {k: 0 for k in COLLECTIVES}
+    counts: dict[str, int] = {k: 0 for k in COLLECTIVES}
+    for line in lines:
+        m = DEF_RE.match(line)
+        if not m:
+            continue
+        _name, _type_str, op = m.groups()
+        base = op[:-6] if op.endswith("-start") else op
+        if op.endswith("-done"):
+            continue
+        if base not in per_kind:
+            continue
+        start = line.index(op + "(") + len(op) + 1
+        depth = 1
+        out = []
+        for ch in line[start:]:
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+            out.append(ch)
+        arg_str = "".join(out)
+        total = sum(sizes.get(nm, 0) for nm in OPERAND_RE.findall(arg_str))
+        per_kind[base] += total
+        counts[base] += 1
+    return {
+        "bytes_per_kind": per_kind,
+        "counts": counts,
+        "total_bytes": sum(per_kind.values()),
+    }

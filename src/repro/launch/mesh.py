@@ -1,0 +1,29 @@
+"""Production mesh construction.
+
+Target hardware (spec): TPU v5e-class pods — 256 chips/pod (16×16), 2 pods.
+Functions, not module constants, so importing never touches jax device state.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(*, model_axis: int = 1):
+    """A mesh over whatever devices exist locally (tests / CPU smoke)."""
+    n = len(jax.devices())
+    data = n // model_axis
+    return jax.make_mesh((data, model_axis), ("data", "model"))
+
+
+# Hardware constants for the roofline model (spec-provided, v5e-class).
+PEAK_FLOPS_BF16 = 197e12          # per chip
+HBM_BW = 819e9                    # bytes/s per chip
+ICI_BW = 50e9                     # bytes/s per link
+CHIPS_PER_POD = 256

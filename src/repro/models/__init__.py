@@ -1,0 +1,13 @@
+from .transformer import (
+    abstract_model,
+    decode_step,
+    encode_memory,
+    forward,
+    init_cache,
+    init_model,
+)
+
+__all__ = [
+    "abstract_model", "decode_step", "encode_memory",
+    "forward", "init_cache", "init_model",
+]

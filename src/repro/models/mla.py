@@ -1,0 +1,130 @@
+"""Multi-head Latent Attention (DeepSeek-V2, arXiv:2405.04434).
+
+Queries and keys/values are projected through low-rank *latents*; only the
+compressed KV latent (kv_lora_rank) plus a shared RoPE key (qk_rope_head_dim)
+are cached at decode time — the architecture's core memory saving.
+
+Two execution paths:
+* **prefill/train** — expand K/V from the latent per token (standard form);
+* **decode** — *absorbed* form: W_uk is folded into the query so attention
+  runs directly against the latent cache (no per-step K expansion).  This is
+  DeepSeek's deployment trick and one of this repo's roofline levers.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain, gather_fsdp
+
+from .layers import _rms, apply_rope, dense_init
+
+
+def init_mla(key, cfg):
+    m = cfg.mla
+    d, nh = cfg.d_model, cfg.n_heads
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 8)
+    p = {}
+    a = {}
+    if m.q_lora_rank:
+        p["w_dq"] = dense_init(ks[0], (d, m.q_lora_rank), dt)
+        p["w_uq"] = dense_init(ks[1], (m.q_lora_rank, nh, m.qk_nope_head_dim + m.qk_rope_head_dim), dt)
+        a["w_dq"] = "fsdp lora"
+        a["w_uq"] = "lora heads head_dim"
+    else:
+        p["w_q"] = dense_init(ks[0], (d, nh, m.qk_nope_head_dim + m.qk_rope_head_dim), dt)
+        a["w_q"] = "fsdp heads head_dim"
+    p["w_dkv"] = dense_init(ks[2], (d, m.kv_lora_rank + m.qk_rope_head_dim), dt)
+    p["w_uk"] = dense_init(ks[3], (m.kv_lora_rank, nh, m.qk_nope_head_dim), dt)
+    p["w_uv"] = dense_init(ks[4], (m.kv_lora_rank, nh, m.v_head_dim), dt)
+    p["w_o"] = dense_init(ks[5], (nh, m.v_head_dim, d), dt)
+    p["kv_norm_scale"] = jnp.ones((m.kv_lora_rank,), jnp.float32)
+    a.update({
+        "w_dkv": "fsdp lora",
+        "w_uk": "lora heads head_dim",
+        "w_uv": "lora heads head_dim",
+        "w_o": "heads head_dim fsdp",
+        "kv_norm_scale": "_",
+    })
+    return p, a
+
+
+def _project_latents(p, x, cfg, positions):
+    """Common front: query heads + (latent, shared rope key)."""
+    m = cfg.mla
+    if "w_dq" in p:
+        cq = x @ gather_fsdp(p["w_dq"], "fsdp", "lora", group="attn")
+        q = jnp.einsum("bsr,rnh->bsnh", cq, p["w_uq"])
+    else:
+        q = jnp.einsum("bsd,dnh->bsnh", x, gather_fsdp(p["w_q"], "fsdp", "heads", "_", group="attn"))
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    ckv_full = x @ gather_fsdp(p["w_dkv"], "fsdp", "lora", group="attn")                                # (B,S,lora+rope)
+    c_kv, k_rope = jnp.split(ckv_full, [m.kv_lora_rank], axis=-1)
+    c_kv = (_rms(c_kv) * p["kv_norm_scale"]).astype(x.dtype)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0, :]
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def mla_attention(
+    p,
+    x: jax.Array,                       # (B,S,D)
+    cfg,
+    *,
+    positions: jax.Array,
+    cache: Optional[dict] = None,       # {"ckv": (B,T,lora), "krope": (B,T,rope), "pos"}
+) -> tuple[jax.Array, Optional[dict]]:
+    m = cfg.mla
+    B, S, _ = x.shape
+    scale = 1.0 / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+    q_nope, q_rope, c_kv, k_rope = _project_latents(p, x, cfg, positions)
+    q_nope = constrain(q_nope, "batch", "seq", "heads", "_")
+
+    if cache is None:
+        # standard (expanded) form
+        k_nope = jnp.einsum("btr,rnh->btnh", c_kv, p["w_uk"])
+        v = jnp.einsum("btr,rnh->btnh", c_kv, p["w_uv"])
+        logits = (
+            jnp.einsum("bsnh,btnh->bnst", q_nope.astype(jnp.float32), k_nope.astype(jnp.float32))
+            + jnp.einsum("bsnh,bth->bnst", q_rope.astype(jnp.float32), k_rope.astype(jnp.float32))
+        ) * scale
+        q_pos = positions[0]
+        mask = q_pos[None, :, None] >= jnp.arange(k_nope.shape[1])[None, None, :]
+        logits = jnp.where(mask[:, None], logits, -1e30)
+        probs = jax.nn.softmax(logits, axis=-1)
+        out = jnp.einsum("bnst,btnh->bsnh", probs.astype(v.dtype), v)
+        y = jnp.einsum("bsnh,nhd->bsd", out, gather_fsdp(p["w_o"], "heads", "_", "fsdp", group="attn"))
+        return y, None
+
+    # ---- absorbed decode: attention directly against the latent cache ----
+    idx = jnp.broadcast_to(jnp.asarray(cache["pos"]), (B,)).astype(jnp.int32)
+    upd = lambda c, u, i: jax.lax.dynamic_update_slice(c, u, (i, 0))
+    ckv_c = jax.vmap(upd)(cache["ckv"], c_kv.astype(cache["ckv"].dtype), idx)
+    krope_c = jax.vmap(upd)(cache["krope"], k_rope.astype(cache["krope"].dtype), idx)
+    new_cache = {"ckv": ckv_c, "krope": krope_c, "pos": cache["pos"] + S}
+
+    # fold W_uk into the query: q_lat (B,S,N,lora)
+    q_lat = jnp.einsum("bsnh,rnh->bsnr", q_nope, p["w_uk"])
+    logits = (
+        jnp.einsum("bsnr,btr->bnst", q_lat.astype(jnp.float32), ckv_c.astype(jnp.float32))
+        + jnp.einsum("bsnh,bth->bnst", q_rope.astype(jnp.float32), krope_c.astype(jnp.float32))
+    ) * scale
+    t = jnp.arange(ckv_c.shape[1])
+    # per-slot causal + validity: positions is (B,S)
+    mask = (
+        (t[None, None, :] <= positions[..., None])
+        & (t[None, None, :] < (idx + S)[:, None, None])
+    )[:, None]                                  # (B,1,S,T)
+    logits = jnp.where(mask, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+    # attend in latent space, then expand through W_uv
+    ctx_lat = jnp.einsum("bnst,btr->bsnr", probs, ckv_c)
+    out = jnp.einsum("bsnr,rnh->bsnh", ctx_lat, p["w_uv"])
+    y = jnp.einsum("bsnh,nhd->bsd", out, gather_fsdp(p["w_o"], "heads", "_", "fsdp", group="attn"))
+    return y, new_cache

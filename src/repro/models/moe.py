@@ -1,0 +1,141 @@
+"""Mixture-of-Experts FFN with sort-based capacity dispatch.
+
+Supports the two assigned MoE geometries:
+* Arctic  — 128 routed experts top-2 **plus a parallel dense FFN branch**
+  (dense-MoE hybrid: output = dense(x) + moe(x));
+* DeepSeek-V2 — 2 *shared* experts (always on) + 160 routed experts top-6.
+
+Dispatch: tokens are routed to their top-k experts with a fixed per-expert
+capacity C = ceil(N·k/E · capacity_factor).  Token→expert assignment uses the
+standard position-in-expert cumsum; overflowing tokens are dropped (their
+residual path keeps them alive).  Expert compute is a *grouped* matmul with
+the expert dim laid out on the `expert` logical axis — expert-parallel over
+the `model` mesh axis, which makes the all_to_all pattern visible to the
+dry-run.  Note the stream-scheduling connection: the E experts are exactly
+the "parallel branches on different streams" of the paper, realized here as
+one grouped kernel (kernels/stream_pack lowers the same pattern in Pallas).
+
+The router's aux load-balancing loss (Shazeer-style) is returned alongside.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain, gather_fsdp
+
+from .layers import _act, dense_init
+
+
+def init_moe(key, cfg):
+    m = cfg.moe
+    d = cfg.d_model
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(ks[0], (d, m.num_experts), jnp.float32),
+        "w_gate": dense_init(ks[1], (m.num_experts, d, m.d_ff_expert), dt),
+        "w_up": dense_init(ks[2], (m.num_experts, d, m.d_ff_expert), dt),
+        "w_down": dense_init(ks[3], (m.num_experts, m.d_ff_expert, d), dt, in_axis=1),
+    }
+    a = {
+        "router": "fsdp _",
+        "w_gate": "expert fsdp mlp",
+        "w_up": "expert fsdp mlp",
+        "w_down": "expert mlp fsdp",
+    }
+    if m.num_shared_experts:
+        f_sh = m.d_ff_shared * m.num_shared_experts
+        kss = jax.random.split(ks[4], 3)
+        p["shared"] = {
+            "w_gate": dense_init(kss[0], (d, f_sh), dt),
+            "w_up": dense_init(kss[1], (d, f_sh), dt),
+            "w_down": dense_init(kss[2], (f_sh, d), dt),
+        }
+        a["shared"] = {"w_gate": "fsdp mlp", "w_up": "fsdp mlp", "w_down": "mlp fsdp"}
+    return p, a
+
+
+def apply_moe(p, x: jax.Array, cfg) -> tuple[jax.Array, jax.Array]:
+    """x: (B, S, D) → (out, aux_loss)."""
+    m = cfg.moe
+    B, S, D = x.shape
+    N = B * S
+    E, K = m.num_experts, m.top_k
+    xf = x.reshape(N, D)
+
+    # ---- router --------------------------------------------------------
+    logits = (xf.astype(jnp.float32) @ p["router"])            # (N, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, K)            # (N, K)
+    gate_vals = gate_vals / jnp.clip(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # aux load-balance loss (mean prob × token fraction per expert)
+    me = probs.mean(axis=0)
+    ce = jnp.zeros((E,), jnp.float32).at[expert_ids.reshape(-1)].add(1.0) / (N * K)
+    aux = m.router_aux_loss * E * jnp.sum(me * ce)
+
+    # ---- capacity-based dispatch (sort-based) -----------------------------
+    # Small batches (decode steps, smoke tests) run dropless so that
+    # step-by-step decode agrees with the full-sequence forward; at scale the
+    # paper-standard capacity factor bounds the grouped-matmul shape.
+    if N <= 64:
+        cap = N
+    else:
+        cap = int(max(K, round(N * K / E * m.capacity_factor)))
+    flat_e = expert_ids.reshape(-1)                            # (N*K,)
+    flat_g = gate_vals.reshape(-1)
+    flat_tok = jnp.repeat(jnp.arange(N), K)
+
+    # Sort tokens by expert and derive each token's slot from its rank within
+    # the expert's run.  Equivalent ordering to the classic one-hot cumsum
+    # (stable sort preserves token order per expert) at a tiny fraction of
+    # its cost: the (N·K, E) one-hot prefix-sum dominated the whole model's
+    # HLO FLOPs (EXPERIMENTS.md §Perf, deepseek hillclimb).
+    order = jnp.argsort(flat_e, stable=True)                   # (N*K,)
+    sorted_e = flat_e[order]
+    counts = jnp.zeros((E,), jnp.int32).at[flat_e].add(1)
+    starts = jnp.cumsum(counts) - counts                       # (E,)
+    pos_in_run = jnp.arange(flat_e.shape[0], dtype=jnp.int32) - starts[sorted_e]
+    slot = jnp.zeros_like(flat_e).at[order].set(pos_in_run)    # (N*K,) 0-based
+    keep = slot < cap
+    slot = jnp.where(keep, slot, cap)                          # overflow -> pad row
+
+    # scatter token features into (E, cap+1, D); row `cap` is the trash slot.
+    # NOTE a 2D (expert x capacity) sharding was tried and refuted: GSPMD
+    # cannot statically plan the data-dependent scatter as an all-to-all and
+    # falls back to replicating the buffers (collective bytes exploded 5x).
+    # The production fix is an explicit shard_map ragged-a2a dispatch;
+    # recorded as future work in EXPERIMENTS.md §Perf (deepseek it5).
+    buf = jnp.zeros((E, cap + 1, D), x.dtype)
+    buf = buf.at[flat_e, slot].add(jnp.where(keep[:, None], xf[flat_tok], 0))
+    buf = constrain(buf, "expert", "_", "_")
+    h = buf[:, :cap]                                           # (E, cap, D)
+
+    # ---- grouped expert FFN (the packed "parallel branches") -------------
+    w_gate = gather_fsdp(p["w_gate"], "expert", "fsdp", "mlp", group="moe")
+    w_up = gather_fsdp(p["w_up"], "expert", "fsdp", "mlp", group="moe")
+    w_down = gather_fsdp(p["w_down"], "expert", "mlp", "fsdp", group="moe")
+    g = _act(jnp.einsum("ecd,edf->ecf", h, w_gate), cfg.activation)
+    u = jnp.einsum("ecd,edf->ecf", h, w_up)
+    eo = jnp.einsum("ecf,efd->ecd", g * u, w_down)             # (E, cap, D)
+    eo = constrain(eo, "expert", "_", "_")
+
+    # ---- combine back ----------------------------------------------------
+    gathered = eo[flat_e, jnp.minimum(slot, cap - 1)]          # (N*K, D)
+    weight = jnp.where(keep, flat_g, 0.0).astype(x.dtype)
+    out = jnp.zeros((N, D), x.dtype).at[flat_tok].add(gathered * weight[:, None])
+
+    # ---- shared experts (DeepSeek) ---------------------------------------
+    if "shared" in p:
+        sh = p["shared"]
+        sg = gather_fsdp(sh["w_gate"], "fsdp", "mlp", group="moe")
+        su = gather_fsdp(sh["w_up"], "fsdp", "mlp", group="moe")
+        sd = gather_fsdp(sh["w_down"], "mlp", "fsdp", group="moe")
+        hs = _act(xf @ sg, cfg.activation) * (xf @ su)
+        out = out + hs @ sd
+
+    return out.reshape(B, S, D), aux

@@ -1,0 +1,196 @@
+"""Mamba2 (SSD) block — chunked state-space duality algorithm.
+
+TPU adaptation note (DESIGN.md §2): the CUDA Mamba2 kernel is a fused
+warp-level scan; the TPU-native formulation is the *chunked SSD* algorithm,
+which reformulates the selective scan as (a) an intra-chunk attention-like
+batched matmul (MXU-friendly), plus (b) a tiny inter-chunk state scan.  The
+sequential dependency collapses from O(S) to O(S/chunk).
+
+State per head: h ∈ R^{head_dim × state_dim};   recurrence
+    h_t = exp(dt_t·A) · h_{t-1} + dt_t · x_t ⊗ B_t,      y_t = h_t · C_t + D·x_t
+with scalar A per head (Mamba2's SSD restriction), shared B/C across heads
+(n_groups=1, GQA-like).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+
+from .layers import dense_init
+
+
+def ssm_dims(cfg):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.head_dim
+    conv_ch = d_inner + 2 * s.state_dim
+    return d_inner, n_heads, conv_ch
+
+
+def init_mamba2(key, cfg):
+    s = cfg.ssm
+    d = cfg.d_model
+    d_inner, H, conv_ch = ssm_dims(cfg)
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 4)
+    p = {
+        # order: [z (d_inner) | xBC (conv_ch) | dt (H)]
+        "w_in": dense_init(ks[0], (d, 2 * d_inner + 2 * s.state_dim + H), dt),
+        "conv_w": dense_init(ks[1], (s.conv_width, conv_ch), dt),
+        "conv_b": jnp.zeros((conv_ch,), jnp.float32),
+        "A_log": jnp.zeros((H,), jnp.float32),              # A = -exp(A_log)
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "w_out": dense_init(ks[2], (d_inner, d), dt),
+    }
+    a = {
+        "w_in": "fsdp mlp",
+        "conv_w": "_ mlp",
+        "conv_b": "_",
+        "A_log": "_",
+        "D": "_",
+        "dt_bias": "_",
+        "w_out": "mlp fsdp",
+    }
+    return p, a
+
+
+def _split_in(z_xbc_dt, cfg):
+    s = cfg.ssm
+    d_inner, H, conv_ch = ssm_dims(cfg)
+    z = z_xbc_dt[..., :d_inner]
+    xbc = z_xbc_dt[..., d_inner:d_inner + conv_ch]
+    dt_raw = z_xbc_dt[..., d_inner + conv_ch:]
+    return z, xbc, dt_raw
+
+
+def _causal_conv(xbc: jax.Array, p, cfg, conv_state: Optional[jax.Array] = None):
+    """Depthwise causal conv, width = conv_width.  xbc: (B,S,C)."""
+    w = p["conv_w"].astype(xbc.dtype)                        # (W, C)
+    W = w.shape[0]
+    if conv_state is not None:
+        ctx = jnp.concatenate([conv_state.astype(xbc.dtype), xbc], axis=1)
+        new_state = ctx[:, -(W - 1):]
+    else:
+        ctx = jnp.pad(xbc, ((0, 0), (W - 1, 0), (0, 0)))
+        new_state = ctx[:, -(W - 1):]
+    out = sum(ctx[:, i: i + xbc.shape[1]] * w[i] for i in range(W))
+    out = out + p["conv_b"].astype(xbc.dtype)
+    return jax.nn.silu(out), new_state
+
+
+def _ssd_chunked(x, dtv, ldec, Bm, Cm, h0, chunk):
+    """Chunked SSD scan.
+
+    x:    (B,S,H,hd)   per-head inputs
+    dtv:  (B,S,H)      softplus(dt)
+    ldec: (B,S,H)      log decay = dt * A  (negative)
+    Bm/Cm:(B,S,ds)     shared input/output maps
+    h0:   (B,H,hd,ds)  incoming state
+    returns y (B,S,H,hd), h_out (B,H,hd,ds)
+    """
+    Bsz, S, H, hd = x.shape
+    ds = Bm.shape[-1]
+    nc = S // chunk
+    assert nc * chunk == S, (S, chunk)
+    xc = x.reshape(Bsz, nc, chunk, H, hd)
+    dtc = dtv.reshape(Bsz, nc, chunk, H)
+    lc = ldec.reshape(Bsz, nc, chunk, H)
+    Bc = Bm.reshape(Bsz, nc, chunk, ds)
+    Cc = Cm.reshape(Bsz, nc, chunk, ds)
+
+    lcum = jnp.cumsum(lc, axis=2)                            # (B,nc,L,H)
+    ltot = lcum[:, :, -1]                                    # (B,nc,H)
+
+    # intra-chunk (attention-like, lower-triangular)
+    cb = jnp.einsum("bntk,bnsk->bnts", Cc, Bc)               # (B,nc,L,L)
+    decay = jnp.exp(
+        jnp.clip(lcum[:, :, :, None] - lcum[:, :, None, :], -60.0, 0.0)
+    )                                                        # (B,nc,L,L,H) via broadcast
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    m = cb[..., None] * decay * dtc[:, :, None]              # (B,nc,t,s,H)
+    m = jnp.where(mask[None, None, :, :, None], m, 0.0)
+    y_intra = jnp.einsum("bntsh,bnshd->bnthd", m, xc)
+
+    # chunk states
+    sdecay = jnp.exp(jnp.clip(ltot[:, :, None] - lcum, -60.0, 0.0))  # (B,nc,L,H)
+    states = jnp.einsum("bnsh,bnshd,bnsk->bnhdk", sdecay * dtc, xc, Bc)
+
+    # inter-chunk scan (tiny: nc steps)
+    def step(h, inp):
+        st, lt = inp                                         # (B,H,hd,ds), (B,H)
+        h_new = h * jnp.exp(lt)[:, :, None, None] + st
+        return h_new, h
+    (h_out, h_prevs) = jax.lax.scan(
+        step,
+        h0,
+        (states.transpose(1, 0, 2, 3, 4), ltot.transpose(1, 0, 2)),
+    )
+    h_prevs = h_prevs.transpose(1, 0, 2, 3, 4)               # (B,nc,H,hd,ds)
+
+    y_inter = jnp.einsum(
+        "bnth,bntk,bnhdk->bnthd",
+        jnp.exp(jnp.clip(lcum, -60.0, 0.0)),
+        Cc,
+        h_prevs,
+    )
+    y = (y_intra + y_inter).reshape(Bsz, S, H, hd)
+    return y, h_out
+
+
+def mamba2_block(
+    p,
+    x: jax.Array,                       # (B,S,D)
+    cfg,
+    *,
+    cache: Optional[dict] = None,       # {"h": (B,H,hd,ds), "conv": (B,W-1,C)}
+) -> tuple[jax.Array, Optional[dict]]:
+    s = cfg.ssm
+    d_inner, H, conv_ch = ssm_dims(cfg)
+    B_, S, D = x.shape
+
+    zxd = x @ p["w_in"]
+    z, xbc, dt_raw = _split_in(zxd, cfg)
+    xbc, conv_state = _causal_conv(xbc, p, cfg, cache["conv"] if cache else None)
+
+    x_ssm = xbc[..., :d_inner].reshape(B_, S, H, s.head_dim)
+    Bm = xbc[..., d_inner:d_inner + s.state_dim]
+    Cm = xbc[..., d_inner + s.state_dim:]
+
+    dtv = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])   # (B,S,H)
+    A = -jnp.exp(p["A_log"])                                           # (H,)
+    ldec = dtv * A                                                     # (B,S,H)
+
+    if cache is None and S > 1:
+        chunk = min(s.chunk, S)
+        while S % chunk:
+            chunk //= 2
+        h0 = jnp.zeros((B_, H, s.head_dim, s.state_dim), jnp.float32)
+        y, h_out = _ssd_chunked(
+            x_ssm.astype(jnp.float32), dtv, ldec,
+            Bm.astype(jnp.float32), Cm.astype(jnp.float32), h0, chunk
+        )
+        new_cache = None
+    else:
+        # recurrent step(s): S==1 decode
+        h0 = cache["h"] if cache else jnp.zeros((B_, H, s.head_dim, s.state_dim), jnp.float32)
+        xs = x_ssm.astype(jnp.float32)[:, 0]                 # (B,H,hd)
+        h_out = (
+            h0 * jnp.exp(ldec[:, 0])[:, :, None, None]
+            + jnp.einsum("bh,bhd,bk->bhdk", dtv[:, 0], xs, Bm.astype(jnp.float32)[:, 0])
+        )
+        y = jnp.einsum("bhdk,bk->bhd", h_out, Cm.astype(jnp.float32)[:, 0])[:, None]
+        new_cache = None
+
+    y = y + p["D"][None, None, :, None] * x_ssm.astype(jnp.float32)
+    y = y.reshape(B_, S, d_inner).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    out = y @ p["w_out"]
+    if cache is not None or S == 1:
+        new_cache = {"h": h_out, "conv": conv_state}
+    return out, new_cache

@@ -1,0 +1,256 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, parallelizable)
+and sLSTM (scalar memory with recurrent gate connections).
+
+Both use exponential gating with the max-stabilizer state m.  The recurrence
+is inherently sequential — the paper's multi-stream technique is inapplicable
+*inside* the scan (DESIGN.md §Arch-applicability); it still packs the gate
+projections, and AoT scheduling applies to the whole block unchanged.
+
+State per head (cache layout):
+  mLSTM: C (hd, hd) matrix memory, n (hd) normalizer, m () stabilizer
+  sLSTM: c, n, m, h  each (hd,)
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init
+
+
+def _heads(cfg):
+    return cfg.n_heads, cfg.d_model // cfg.n_heads
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def init_mlstm(key, cfg):
+    d = cfg.d_model
+    H, hd = _heads(cfg)
+    pf = cfg.xlstm.proj_factor
+    d_up = int(d * pf)
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 6)
+    p = {
+        "w_up": dense_init(ks[0], (d, 2 * d_up), dt),         # [u | z]
+        "w_qkv": dense_init(ks[1], (d_up, 3 * d_up), dt),
+        "w_if": dense_init(ks[2], (d_up, 2 * H), jnp.float32),  # gate logits
+        "b_if": jnp.concatenate([jnp.zeros((H,)), jnp.full((H,), 3.0)]),
+        "w_down": dense_init(ks[3], (d_up, d), dt),
+    }
+    a = {
+        "w_up": "fsdp mlp", "w_qkv": "mlp _", "w_if": "mlp _",
+        "b_if": "_", "w_down": "mlp fsdp",
+    }
+    return p, a
+
+
+def _mlstm_chunked(q, k, v, log_i, log_f, C0, n0, m0, chunk: int):
+    """Chunked *parallel* mLSTM (TPU adaptation, cf. Mamba2's SSD):
+
+    mLSTM's gates depend only on the input (no h→gate recurrence), so the
+    matrix-memory recurrence unrolls to a decay-weighted attention form
+        h_t ∝ Σ_{s≤t} exp(F_t − F_s + i_s − m_t) (q_t·k_s) v_s
+    computed per chunk as batched matmuls, with a tiny cross-chunk scan
+    carrying (C, n, m).  Exactly equals the recurrent form (tested).
+
+    q,k,v: (B,S,H,hd); log_i/log_f: (B,S,H); C0: (B,H,hd,hd); n0: (B,H,hd);
+    m0: (B,H).
+    """
+    B, S, H, hd = q.shape
+    nc = S // chunk
+    assert nc * chunk == S, (S, chunk)
+    qf = q.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+
+    # Global running log-decay / stabilizer (no sequential coupling: the
+    # stabilizer is the running max, computable with a parallel prefix).
+    F = jnp.cumsum(log_f, axis=1)                            # (B,S,H)
+    g = log_i - F
+    a = jnp.maximum(jax.lax.cummax(g, axis=1), m0[:, None])  # fold incoming m0
+    m = F + a                                                # (B,S,H) per-step stabilizer
+
+    qc = qf.reshape(B, nc, chunk, H, hd)
+    kc = kf.reshape(B, nc, chunk, H, hd)
+    vc = vf.reshape(B, nc, chunk, H, hd)
+    Fc = F.reshape(B, nc, chunk, H)
+    mc = m.reshape(B, nc, chunk, H)
+    lic = log_i.reshape(B, nc, chunk, H)
+
+    # ---- intra-chunk (all chunks at once; MXU matmuls) -------------------
+    qk = jnp.einsum("bnthd,bnshd->bntsh", qc, kc)            # (B,nc,t,s,H)
+    w_intra = jnp.exp(
+        jnp.clip(
+            Fc[:, :, :, None] - Fc[:, :, None, :] + lic[:, :, None, :]
+            - mc[:, :, :, None],
+            -60.0, 30.0,
+        )
+    )
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    scores = jnp.where(mask[None, None, :, :, None], qk * w_intra, 0.0)
+    num_intra = jnp.einsum("bntsh,bnshd->bnthd", scores, vc)
+    den_intra = scores.sum(axis=3)                           # (B,nc,t,H)
+
+    # ---- chunk states (vectorized) ----------------------------------------
+    F_end = Fc[:, :, -1]                                     # (B,nc,H)
+    ms = mc[:, :, -1]                                        # chunk-end stabilizer
+    w_out = jnp.exp(
+        jnp.clip(F_end[:, :, None] - Fc + lic - ms[:, :, None], -60.0, 30.0)
+    )                                                        # (B,nc,L,H)
+    S_c = jnp.einsum("bnsh,bnshk,bnshd->bnhkd", w_out, kc, vc)
+    n_c = jnp.einsum("bnsh,bnshk->bnhk", w_out, kc)
+
+    # ---- tiny cross-chunk recurrence (precomputed scalar coefficients) ----
+    F_prev = jnp.concatenate([jnp.zeros_like(F_end[:, :1]), F_end[:, :-1]], 1)
+    ms_prev = jnp.concatenate([m0[:, None, :], ms[:, :-1]], 1)
+    d = jnp.exp(jnp.clip(F_end - F_prev + ms_prev - ms, -60.0, 30.0))  # (B,nc,H)
+
+    def step(carry, inp):
+        C, n = carry
+        Sn, nn, dn = inp
+        C2 = C * dn[:, :, None, None] + Sn
+        n2 = n * dn[:, :, None] + nn
+        return (C2, n2), (C, n)
+
+    (C_fin, n_fin), (C_prevs, n_prevs) = jax.lax.scan(
+        step, (C0, n0),
+        (S_c.transpose(1, 0, 2, 3, 4), n_c.transpose(1, 0, 2, 3),
+         d.transpose(1, 0, 2)),
+    )
+    C_prevs = C_prevs.transpose(1, 0, 2, 3, 4)               # (B,nc,H,hd,hd)
+    n_prevs = n_prevs.transpose(1, 0, 2, 3)
+
+    # ---- inter-chunk contribution (vectorized) -----------------------------
+    # decay from the previous chunk's end (F is a *global* cumsum): F_t - F_prev
+    w_state = jnp.exp(
+        jnp.clip(Fc - F_prev[:, :, None] + ms_prev[:, :, None] - mc, -60.0, 30.0)
+    )                                                        # (B,nc,t,H)
+    num_inter = w_state[..., None] * jnp.einsum("bnthk,bnhkd->bnthd", qc, C_prevs)
+    den_inter = w_state * jnp.einsum("bnthk,bnhk->bnth", qc, n_prevs)
+
+    den = jnp.maximum(jnp.abs(den_intra + den_inter), 1.0)
+    h = (num_intra + num_inter) / den[..., None]
+    h = h.reshape(B, S, H, hd)
+    m_fin = m[:, -1]
+    return h, (C_fin, n_fin, m_fin)
+
+
+def mlstm_block(p, x, cfg, *, cache: Optional[dict] = None):
+    """x: (B,S,D).  Chunked-parallel for sequences; recurrent scan for
+    decode (S==1 with cache) — both paths agree (tested)."""
+    B, S, D = x.shape
+    H, _ = _heads(cfg)
+    d_up = p["w_up"].shape[1] // 2
+    hd = d_up // H
+
+    u, z = jnp.split(x @ p["w_up"], 2, axis=-1)               # (B,S,d_up)
+    qkv = u @ p["w_qkv"]
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    q = q.reshape(B, S, H, hd) / jnp.sqrt(jnp.asarray(hd, x.dtype))
+    k = k.reshape(B, S, H, hd) / jnp.sqrt(jnp.asarray(hd, x.dtype))
+    v = v.reshape(B, S, H, hd)
+    gates = (u.astype(jnp.float32) @ p["w_if"]) + p["b_if"]   # (B,S,2H)
+    log_i, log_f = gates[..., :H], jax.nn.log_sigmoid(gates[..., H:])
+
+    if cache is None:
+        C0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+        n0 = jnp.zeros((B, H, hd), jnp.float32)
+        m0 = jnp.full((B, H), -1e30, jnp.float32)
+    else:
+        C0, n0, m0 = cache["C"], cache["n"], cache["m"]
+
+    if S > 1:
+        # chunked-parallel path (training / prefill)
+        chunk = cfg.xlstm.mlstm_chunk
+        while S % chunk:
+            chunk //= 2
+        hs_p, (C, n, m) = _mlstm_chunked(q, k, v, log_i, log_f, C0, n0, m0, chunk)
+        h = hs_p.reshape(B, S, d_up).astype(x.dtype)
+        out = (h * jax.nn.silu(z)) @ p["w_down"]
+        return out, {"C": C, "n": n, "m": m}
+
+    def step(carry, inp):
+        C, n, m = carry
+        qt, kt, vt, li, lf = inp                              # (B,H,hd)... (B,H)
+        m_new = jnp.maximum(lf + m, li)
+        fp = jnp.exp(lf + m - m_new)[:, :, None]
+        ip = jnp.exp(li - m_new)[:, :, None]
+        kf = kt.astype(jnp.float32)
+        C = fp[..., None] * C + (ip * kf)[..., None] * vt.astype(jnp.float32)[:, :, None, :]
+        n = fp * n + ip * kf
+        qf = qt.astype(jnp.float32)
+        num = jnp.einsum("bhk,bhkv->bhv", qf, C)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", qf, n)), 1.0)
+        h = num / den[..., None]
+        return (C, n, m_new), h
+
+    xs = (
+        q.transpose(1, 0, 2, 3), k.transpose(1, 0, 2, 3), v.transpose(1, 0, 2, 3),
+        log_i.transpose(1, 0, 2), log_f.transpose(1, 0, 2),
+    )
+    (C, n, m), hs = jax.lax.scan(step, (C0, n0, m0), xs)
+    h = hs.transpose(1, 0, 2, 3).reshape(B, S, d_up).astype(x.dtype)
+    out = (h * jax.nn.silu(z)) @ p["w_down"]
+    new_cache = {"C": C, "n": n, "m": m}
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def init_slstm(key, cfg):
+    d = cfg.d_model
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 3)
+    p = {
+        "w_gates": dense_init(ks[0], (d, 4 * d), dt),         # i,f,z,o from x
+        "r_gates": dense_init(ks[1], (d, 4 * d), dt),         # recurrent h->gates
+        "b_gates": jnp.concatenate(
+            [jnp.zeros((d,)), jnp.full((d,), 3.0), jnp.zeros((2 * d,))]
+        ),
+        "w_out": dense_init(ks[2], (d, d), dt),
+    }
+    a = {"w_gates": "fsdp mlp", "r_gates": "fsdp mlp", "b_gates": "_", "w_out": "fsdp fsdp"}
+    return p, a
+
+
+def slstm_block(p, x, cfg, *, cache: Optional[dict] = None):
+    B, S, D = x.shape
+    gx = x @ p["w_gates"]                                     # (B,S,4D)
+
+    if cache is None:
+        c0 = jnp.zeros((B, D), jnp.float32)
+        n0 = jnp.ones((B, D), jnp.float32)
+        m0 = jnp.zeros((B, D), jnp.float32)
+        h0 = jnp.zeros((B, D), x.dtype)
+    else:
+        c0, n0, m0, h0 = cache["c"], cache["n"], cache["m"], cache["h"]
+
+    r_w = p["r_gates"]
+    b = p["b_gates"]
+
+    def step(carry, gxt):
+        c, n, m, h = carry
+        g = (gxt + h @ r_w).astype(jnp.float32) + b           # (B,4D)
+        li, lf, zt, ot = jnp.split(g, 4, axis=-1)
+        lf = jax.nn.log_sigmoid(lf)
+        m_new = jnp.maximum(lf + m, li)
+        fp = jnp.exp(lf + m - m_new)
+        ip = jnp.exp(li - m_new)
+        c = fp * c + ip * jnp.tanh(zt)
+        n = fp * n + ip
+        h_new = (jax.nn.sigmoid(ot) * c / jnp.maximum(n, 1.0)).astype(gxt.dtype)
+        return (c, n, m_new, h_new), h_new
+
+    (c, n, m, h_last), hs = jax.lax.scan(step, (c0, n0, m0, h0), gx.transpose(1, 0, 2))
+    h = hs.transpose(1, 0, 2)
+    out = h @ p["w_out"]
+    new_cache = {"c": c, "n": n, "m": m, "h": h_last}
+    return out, new_cache

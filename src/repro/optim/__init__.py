@@ -1,0 +1,4 @@
+from .adamw import adamw_init, adamw_update
+from .schedules import cosine_schedule, linear_warmup
+
+__all__ = ["adamw_init", "adamw_update", "cosine_schedule", "linear_warmup"]

@@ -1,0 +1,81 @@
+"""AdamW in pure JAX (no optax) with global-norm clipping.
+
+Moment tensors are stored in float32 regardless of parameter dtype and shard
+exactly like their parameters (the optimizer state inherits the parameter
+PartitionSpec, giving ZeRO-1 for free on the FSDP axis — see DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: Any
+    nu: Any
+
+
+def adamw_init(params: Any) -> AdamWState:
+    zeros = jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params
+    )
+    return AdamWState(step=jnp.zeros((), jnp.int32), mu=zeros, nu=jax.tree_util.tree_map(jnp.copy, zeros))
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves)
+    )
+
+
+def clip_by_global_norm(grads: Any, max_norm: float) -> tuple[Any, jax.Array]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+def adamw_update(
+    grads: Any,
+    state: AdamWState,
+    params: Any,
+    *,
+    lr: float | jax.Array,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    max_grad_norm: float = 1.0,
+) -> tuple[Any, AdamWState, jax.Array]:
+    """Returns (new_params, new_state, pre-clip grad norm)."""
+    if max_grad_norm:
+        grads, norm = clip_by_global_norm(grads, max_grad_norm)
+    else:
+        norm = global_norm(grads)
+    step = state.step + 1
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        gf = g.astype(jnp.float32)
+        m2 = b1 * m + (1.0 - b1) * gf
+        v2 = b2 * v + (1.0 - b2) * gf * gf
+        mhat = m2 / bc1
+        vhat = v2 / bc2
+        delta = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(jnp.float32)
+        p2 = p.astype(jnp.float32) - lr * delta
+        return p2.astype(p.dtype), m2, v2
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.mu)
+    flat_v = treedef.flatten_up_to(state.nu)
+    out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, AdamWState(step=step, mu=new_m, nu=new_v), norm

@@ -1,0 +1,21 @@
+"""Learning-rate schedules (pure functions of the step counter)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def linear_warmup(step, *, peak_lr: float, warmup_steps: int):
+    s = jnp.asarray(step, jnp.float32)
+    return peak_lr * jnp.minimum(1.0, (s + 1.0) / max(warmup_steps, 1))
+
+
+def cosine_schedule(step, *, peak_lr: float, warmup_steps: int, total_steps: int,
+                    final_frac: float = 0.1):
+    s = jnp.asarray(step, jnp.float32)
+    warm = jnp.minimum(1.0, (s + 1.0) / max(warmup_steps, 1))
+    progress = jnp.clip(
+        (s - warmup_steps) / jnp.maximum(1.0, total_steps - warmup_steps), 0.0, 1.0
+    )
+    cos = final_frac + (1.0 - final_frac) * 0.5 * (1.0 + jnp.cos(jnp.pi * progress))
+    return peak_lr * warm * cos

@@ -1,0 +1,207 @@
+"""Serving engine: continuous batching over AoT-sealed prefill/decode steps.
+
+The Nimble story applied to inference serving: both step functions are
+scheduled **once** ahead of time (traced, compiled, memory reserved — the
+task schedule), and the request loop only *submits* them.  Per-request state
+lives in batch slots of a shared KV cache; each slot decodes at its own
+offset (``cache["pos"]`` is per-slot), so finished requests are replaced
+without disturbing neighbours — iteration-level continuous batching.
+
+Prefill runs per request into its slot (padded to a bucket length so a small
+fixed family of sealed executables covers all prompt lengths).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import decode_step, forward, init_cache, init_model
+from repro.models.transformer import encode_memory
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                 # (P,) int32
+    max_new_tokens: int = 16
+    # filled by the engine:
+    generated: list = dataclasses.field(default_factory=list)
+    done: bool = False
+    t_submit: float = 0.0
+    t_first: float = 0.0
+    t_done: float = 0.0
+
+
+@dataclasses.dataclass
+class EngineStats:
+    prefill_compiles: int = 0
+    decode_compiles: int = 0
+    steps: int = 0
+    tokens_out: int = 0
+    prefill_s: float = 0.0
+    decode_s: float = 0.0
+
+    @property
+    def decode_tok_per_s(self) -> float:
+        return self.tokens_out / self.decode_s if self.decode_s else 0.0
+
+
+class ServingEngine:
+    """AoT-scheduled batched serving for any registered architecture."""
+
+    def __init__(
+        self,
+        cfg,
+        params,
+        *,
+        max_slots: int = 4,
+        max_len: int = 256,
+        prompt_buckets: tuple[int, ...] = (32, 128),
+        greedy: bool = True,
+    ) -> None:
+        if cfg.family in ("hybrid", "ssm"):
+            raise NotImplementedError(
+                "slot-replacement serving needs re-settable recurrent state; "
+                "use batch decode directly for SSM/hybrid archs"
+            )
+        self.cfg = cfg
+        self.params = params
+        self.max_slots = max_slots
+        self.max_len = max_len
+        self.prompt_buckets = tuple(sorted(prompt_buckets))
+        self.greedy = greedy
+        self.stats = EngineStats()
+
+        # --- AoT scheduling: seal the step executables ------------------
+        self.cache = init_cache(cfg, max_slots, max_len)
+        self._decode = jax.jit(self._decode_impl).lower(
+            self.params, self.cache,
+            jax.ShapeDtypeStruct((max_slots, 1), jnp.int32),
+        ).compile()
+        self.stats.decode_compiles += 1
+
+        # one sealed prefill executable per prompt bucket; the slot index is
+        # a traced scalar (dynamic_update_slice), so slots share executables
+        self._prefill_exec: dict[int, Callable] = {}
+        for b in self.prompt_buckets:
+            self._prefill_exec[b] = jax.jit(self._prefill_dyn).lower(
+                self.params,
+                jax.ShapeDtypeStruct((1, b), jnp.int32),
+                self.cache,
+                jax.ShapeDtypeStruct((), jnp.int32),
+                jax.ShapeDtypeStruct((), jnp.int32),
+            ).compile()
+            self.stats.prefill_compiles += 1
+
+        self.slots: list[Optional[Request]] = [None] * max_slots
+        self.queue: list[Request] = []
+        self._next_tok = np.zeros((max_slots, 1), np.int32)
+
+    # -- sealed step bodies ------------------------------------------------
+    def _decode_impl(self, params, cache, tokens):
+        logits, cache = decode_step(params, cache, tokens, self.cfg)
+        nxt = jnp.argmax(logits[:, :, : self.cfg.vocab], axis=-1).astype(jnp.int32)
+        return nxt, cache
+
+    def _prefill_dyn(self, params, tokens, cache, slot, true_len):
+        """Prefill one request (padded to a bucket) into cache slot `slot`."""
+        cfg = self.cfg
+        B1, P = tokens.shape
+        # run the padded prompt through decode-style attention with cache,
+        # writing K/V at offsets [0, P) of the slot.
+        sub_cache = jax.tree_util.tree_map(
+            lambda c: jax.lax.dynamic_slice_in_dim(c, slot, 1, axis=1)
+            if c.ndim >= 2 and c.shape[1] == self.max_slots
+            else c,
+            {k: v for k, v in cache.items() if k != "pos"},
+        )
+        sub_cache["pos"] = jnp.zeros((1,), jnp.int32)
+        logits, sub_cache = decode_step(params, sub_cache, tokens, cfg)
+        # next token from the true last prompt position (pre-pad)
+        last = logits[0, true_len - 1, : cfg.vocab]
+        nxt = jnp.argmax(last).astype(jnp.int32)
+        # write slot state back
+        new_cache = {}
+        for k, v in cache.items():
+            if k == "pos":
+                new_cache[k] = v.at[slot].set(true_len)
+            elif v.ndim >= 2 and v.shape[1] == self.max_slots:
+                new_cache[k] = jax.lax.dynamic_update_slice_in_dim(
+                    v, sub_cache[k].astype(v.dtype), slot, axis=1
+                )
+            else:
+                new_cache[k] = v
+        return nxt, new_cache
+
+    # -- request flow --------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        req.t_submit = time.perf_counter()
+        self.queue.append(req)
+
+    def _bucket(self, plen: int) -> int:
+        for b in self.prompt_buckets:
+            if plen <= b:
+                return b
+        raise ValueError(f"prompt length {plen} exceeds largest bucket")
+
+    def _admit(self) -> None:
+        for slot in range(self.max_slots):
+            if self.slots[slot] is not None or not self.queue:
+                continue
+            req = self.queue.pop(0)
+            plen = len(req.prompt)
+            b = self._bucket(plen)
+            padded = np.zeros((1, b), np.int32)
+            padded[0, :plen] = req.prompt
+            t0 = time.perf_counter()
+            nxt, self.cache = self._prefill_exec[b](
+                self.params, jnp.asarray(padded), self.cache,
+                jnp.int32(slot), jnp.int32(plen),
+            )
+            self.stats.prefill_s += time.perf_counter() - t0
+            req.t_first = time.perf_counter()
+            req.generated.append(int(nxt))
+            self._next_tok[slot, 0] = int(nxt)
+            self.slots[slot] = req
+
+    def step(self) -> None:
+        """One engine iteration: admit + one decode step for all live slots."""
+        self._admit()
+        live = [s for s in range(self.max_slots) if self.slots[s] is not None]
+        if not live:
+            return
+        t0 = time.perf_counter()
+        nxt, self.cache = self._decode(
+            self.params, self.cache, jnp.asarray(self._next_tok)
+        )
+        self.stats.decode_s += time.perf_counter() - t0
+        self.stats.steps += 1
+        nxt_np = np.asarray(nxt)
+        for s in live:
+            req = self.slots[s]
+            req.generated.append(int(nxt_np[s, 0]))
+            self._next_tok[s, 0] = nxt_np[s, 0]
+            self.stats.tokens_out += 1
+            pos_full = len(req.prompt) + len(req.generated)
+            if len(req.generated) >= req.max_new_tokens or pos_full >= self.max_len - 1:
+                req.done = True
+                req.t_done = time.perf_counter()
+                self.slots[s] = None
+                # reset the slot's write offset for the next occupant
+                self.cache["pos"] = self.cache["pos"].at[s].set(0)
+
+    def run_until_drained(self, max_steps: int = 10_000) -> list[Request]:
+        finished: list[Request] = []
+        for _ in range(max_steps):
+            before = [r for r in self.slots if r is not None]
+            self.step()
+            finished.extend(r for r in before if r.done)
+            if not self.queue and all(s is None for s in self.slots):
+                break
+        return finished

@@ -1,0 +1,3 @@
+from .train_lib import cross_entropy, make_loss_fn, make_train_step
+
+__all__ = ["cross_entropy", "make_loss_fn", "make_train_step"]

@@ -1,0 +1,79 @@
+"""Training step construction: loss, grads, AdamW update — one jit unit.
+
+The whole step (fwd + bwd + optimizer) is a single function, so the AoT
+scheduler seals training exactly like inference (paper §5.3: Nimble supports
+training by capturing the full iteration).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models import forward
+from repro.optim import adamw_update
+from repro.optim.adamw import AdamWState
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean token cross-entropy; label < 0 positions are masked out."""
+    V = logits.shape[-1]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(
+        logits, jnp.clip(labels, 0)[..., None], axis=-1
+    )[..., 0]
+    nll = logz - gold
+    mask = (labels >= 0).astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def make_loss_fn(cfg) -> Callable:
+    def loss_fn(params, batch):
+        logits, aux = forward(params, batch, cfg)
+        labels = batch["labels"]
+        if cfg.family == "vlm":
+            # image positions carry no next-token loss
+            pad = -jnp.ones(
+                (labels.shape[0], cfg.vision_tokens), labels.dtype
+            )
+            labels = jnp.concatenate([pad, labels], axis=1)
+        loss = cross_entropy(logits, labels) + aux["aux_loss"]
+        return loss, {"ce": loss - aux["aux_loss"], "aux": aux["aux_loss"]}
+
+    return loss_fn
+
+
+def make_train_step(
+    cfg,
+    *,
+    lr: float | Callable = 3e-4,
+    weight_decay: float = 0.1,
+    max_grad_norm: float = 1.0,
+    remat: bool = False,
+) -> Callable:
+    """Returns step(params, opt_state, batch) -> (params, opt_state, metrics)."""
+    loss_fn = make_loss_fn(cfg)
+    if remat:
+        loss_fn = jax.checkpoint(loss_fn)
+
+    def step(params, opt_state: AdamWState, batch):
+        (loss, parts), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+        lr_val = lr(opt_state.step) if callable(lr) else lr
+        new_params, new_state, gnorm = adamw_update(
+            grads, opt_state, params,
+            lr=lr_val, weight_decay=weight_decay, max_grad_norm=max_grad_norm,
+        )
+        metrics = {
+            "loss": loss,
+            "ce": parts["ce"],
+            "aux": parts["aux"],
+            "grad_norm": gnorm,
+            "lr": jnp.asarray(lr_val, jnp.float32),
+        }
+        return new_params, new_state, metrics
+
+    return step

@@ -1,0 +1,152 @@
+"""AoT scheduler + engine tests: replay == eager numerics, memory plan
+validity, packing correctness."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    EagerInterpreter,
+    Nimble,
+    buffers_from_traced,
+    plan_memory,
+    trace_to_taskgraph,
+)
+from repro.core.memory import BufferSpec
+from repro.core.rewriter import pack_streams_fn
+from repro.core.streams import assign_streams
+
+
+def _branchy(x, ws):
+    outs = [jnp.tanh(jnp.dot(x, w)) for w in ws]
+    acc = outs[0]
+    for o in outs[1:]:
+        acc = acc + o
+    return acc
+
+
+def _mlp(x, w1, w2):
+    return jnp.dot(jax.nn.gelu(jnp.dot(x, w1)), w2)
+
+
+@pytest.fixture(scope="module")
+def branchy_args():
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((8, 32), dtype=np.float32)
+    ws = [rng.standard_normal((32, 32), dtype=np.float32) for _ in range(4)]
+    return x, ws
+
+
+def test_replay_matches_eager(branchy_args):
+    x, ws = branchy_args
+    eager = EagerInterpreter(_branchy, x, ws)
+    nimble = Nimble(_branchy, x, ws)
+    np.testing.assert_allclose(
+        np.asarray(eager.run(x, ws)), np.asarray(nimble(x, ws)), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_replay_matches_jit_reference(branchy_args):
+    x, ws = branchy_args
+    nimble = Nimble(_branchy, x, ws)
+    ref = jax.jit(_branchy)(x, ws)
+    np.testing.assert_allclose(np.asarray(nimble(x, ws)), np.asarray(ref), rtol=1e-6)
+
+
+def test_packed_replay_matches(branchy_args):
+    x, ws = branchy_args
+    nimble = Nimble(_branchy, x, ws, pack_streams=True)
+    ref = _branchy(x, ws)
+    np.testing.assert_allclose(np.asarray(nimble(x, ws)), np.asarray(ref), rtol=1e-4, atol=1e-5)
+
+
+def test_pack_report_counts(branchy_args):
+    x, ws = branchy_args
+    tr = trace_to_taskgraph(_branchy, x, ws)
+    sa = assign_streams(tr.graph)
+    pf = pack_streams_fn(_branchy, tr, sa)
+    rep = pf.report
+    # 4 branches: the 4 dots and 4 tanhs must each pack into one group
+    assert ("dot_general", 4) in rep.groups
+    assert ("tanh", 4) in rep.groups
+
+
+def test_schedule_stats(branchy_args):
+    x, ws = branchy_args
+    nimble = Nimble(_branchy, x, ws)
+    st_ = nimble.stats
+    assert st_.degree_of_concurrency == 4
+    assert st_.num_streams >= 4
+    assert st_.num_tasks > 8
+    assert st_.arena_bytes > 0
+    # Theorem 3: syncs == |E'| - |M|
+    sa = nimble.schedule.streams
+    assert st_.num_syncs == len(sa.meg_edges) - sa.matching_size
+
+
+def test_grad_through_schedule(branchy_args):
+    """AoT scheduling must work for training graphs too (paper §5.3)."""
+    x, ws = branchy_args
+
+    def loss(ws, x):
+        return jnp.sum(_branchy(x, ws) ** 2)
+
+    gfn = jax.grad(loss)
+    nimble = Nimble(gfn, ws, x)
+    got = nimble(ws, x)
+    ref = gfn(ws, x)
+    for a, b in zip(got, ref):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-5)
+
+
+def test_input_structure_guard(branchy_args):
+    x, ws = branchy_args
+    eager = EagerInterpreter(_branchy, x, ws)
+    with pytest.raises(TypeError):
+        eager.run(x, ws[:-1])  # different pytree structure
+
+
+# -- memory planner ----------------------------------------------------------
+
+def test_memory_plan_valid_on_real_graph(branchy_args):
+    x, ws = branchy_args
+    tr = trace_to_taskgraph(_mlp, x, np.ones((32, 64), np.float32), np.ones((64, 8), np.float32))
+    plan = plan_memory(buffers_from_traced(tr))
+    plan.validate()
+    assert plan.arena_size >= plan.peak_live_bytes
+    assert plan.reuse_factor >= 1.0
+
+
+@st.composite
+def buffer_sets(draw):
+    n = draw(st.integers(min_value=1, max_value=24))
+    out = []
+    for i in range(n):
+        d = draw(st.integers(min_value=0, max_value=30))
+        l = draw(st.integers(min_value=0, max_value=10))
+        size = draw(st.integers(min_value=1, max_value=1 << 16))
+        out.append(BufferSpec(name=f"b{i}", size=size, def_idx=d, last_use=d + l))
+    return out
+
+
+@given(buffer_sets())
+@settings(max_examples=200, deadline=None)
+def test_memory_plan_never_overlaps(bufs):
+    plan = plan_memory(bufs)
+    plan.validate()
+
+
+@given(buffer_sets())
+@settings(max_examples=200, deadline=None)
+def test_memory_plan_bounds(bufs):
+    plan = plan_memory(bufs)
+    no_reuse = sum((b.size + 511) // 512 * 512 for b in bufs)
+    assert plan.peak_live_bytes <= plan.arena_size <= no_reuse
+
+
+def test_disjoint_lifetimes_fully_reuse():
+    bufs = [BufferSpec(f"b{i}", 1024, i * 2, i * 2 + 1) for i in range(10)]
+    plan = plan_memory(bufs)
+    assert plan.arena_size == 1024  # all alias one slot

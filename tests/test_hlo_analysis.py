@@ -1,0 +1,61 @@
+"""Unit tests for the HLO collective-byte parser feeding §Roofline."""
+
+from repro.launch.hlo_analysis import collective_bytes, shape_bytes
+
+
+def test_shape_bytes():
+    assert shape_bytes("f32", "128,64") == 128 * 64 * 4
+    assert shape_bytes("bf16", "2,3") == 12
+    assert shape_bytes("pred", "8") == 8
+    assert shape_bytes("token", "") == 0  # unknown dtype ignored
+    assert shape_bytes("s32", "") == 4    # scalar
+
+
+def test_collective_bytes_counts_operands():
+    hlo = """
+  %p0 = f32[128,64]{1,0} parameter(0)
+  %p1 = bf16[16]{0} parameter(1)
+  %ar = f32[128,64]{1,0} all-reduce(%p0), replica_groups={}
+  %ag = f32[256,64]{1,0} all-gather(%ar), dimensions={0}
+  %rs = f32[8,64]{1,0} reduce-scatter(%p0), dimensions={0}
+"""
+    r = collective_bytes(hlo)
+    assert r["bytes_per_kind"]["all-reduce"] == 128 * 64 * 4
+    assert r["bytes_per_kind"]["all-gather"] == 128 * 64 * 4  # operand = %ar
+    assert r["bytes_per_kind"]["reduce-scatter"] == 128 * 64 * 4
+    assert r["counts"]["all-reduce"] == 1
+    assert r["total_bytes"] == 3 * 128 * 64 * 4
+
+
+def test_async_pairs_counted_once():
+    hlo = """
+  %p0 = f32[100]{0} parameter(0)
+  %cps = f32[100]{0} collective-permute-start(%p0)
+  %cpd = f32[100]{0} collective-permute-done(%cps)
+  %ars = f32[100]{0} all-reduce-start(%p0)
+  %ard = f32[100]{0} all-reduce-done(%ars)
+"""
+    r = collective_bytes(hlo)
+    assert r["counts"]["collective-permute"] == 1
+    assert r["counts"]["all-reduce"] == 1
+    assert r["bytes_per_kind"]["all-reduce"] == 400
+
+
+def test_tuple_outputs_and_multi_operands():
+    hlo = """
+  %a = f32[10]{0} parameter(0)
+  %b = f32[20]{0} parameter(1)
+  %t = (f32[10]{0}, f32[20]{0}) all-to-all(%a, %b), dimensions={0}
+"""
+    r = collective_bytes(hlo)
+    assert r["bytes_per_kind"]["all-to-all"] == 40 + 80
+
+
+def test_non_collective_lines_ignored():
+    hlo = """
+  %x = f32[1000000]{0} parameter(0)
+  %f = f32[1000000]{0} fusion(%x), kind=kLoop
+  %d = f32[10,10]{1,0} dot(%x, %x)
+"""
+    r = collective_bytes(hlo)
+    assert r["total_bytes"] == 0

@@ -1,0 +1,249 @@
+"""Substrate tests: data pipeline, optimizer, checkpointing, sharding rules,
+serving engine, training integration."""
+
+import dataclasses
+import pathlib
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as C
+from repro.checkpoint import restore_checkpoint, save_checkpoint
+from repro.data import Prefetcher, SyntheticLM, data_config_for
+from repro.distributed.sharding import (
+    DEFAULT_RULES,
+    logical_to_pspec,
+    parse_axes,
+    tree_shardings,
+)
+from repro.models import init_model
+from repro.optim import adamw_init, adamw_update, cosine_schedule, linear_warmup
+from repro.optim.adamw import global_norm
+from repro.serving import Request, ServingEngine
+from repro.training.train_lib import cross_entropy, make_train_step
+
+
+# -- data ---------------------------------------------------------------------
+
+def test_data_deterministic_and_learnable():
+    cfg = C.get("stablelm-1.6b", smoke=True)
+    dcfg = data_config_for(cfg, batch_size=4, seq_len=64, seed=7)
+    src = SyntheticLM(dcfg)
+    b1, b2 = src.batch(3), src.batch(3)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    # labels are next-token shifted
+    np.testing.assert_array_equal(b1["tokens"][:, 1:], b1["labels"][:, :-1])
+    # structure: > 50% of transitions follow the permutation
+    follows = (src.perm[b1["tokens"][:, :-1]] == b1["tokens"][:, 1:]).mean()
+    assert follows > 0.5
+
+
+def test_data_shards_differ():
+    cfg = C.get("stablelm-1.6b", smoke=True)
+    dcfg = data_config_for(cfg, batch_size=4, seq_len=32)
+    a = SyntheticLM(dcfg, shard=0, num_shards=2).batch(0)
+    b = SyntheticLM(dcfg, shard=1, num_shards=2).batch(0)
+    assert not np.array_equal(a["tokens"], b["tokens"])
+
+
+def test_prefetcher_yields_and_closes():
+    cfg = C.get("stablelm-1.6b", smoke=True)
+    pf = Prefetcher(SyntheticLM(data_config_for(cfg, batch_size=2, seq_len=16)))
+    batches = [next(pf) for _ in range(3)]
+    pf.close()
+    assert all(b["tokens"].shape == (2, 16) for b in batches)
+
+
+def test_data_modality_extras():
+    for arch in ("llava-next-34b", "seamless-m4t-medium"):
+        cfg = C.get(arch, smoke=True)
+        b = SyntheticLM(data_config_for(cfg, batch_size=2, seq_len=16)).batch(0)
+        if cfg.family == "vlm":
+            assert b["vision_embeds"].shape == (2, cfg.vision_tokens, cfg.vision_dim)
+        else:
+            assert b["frames"].shape == (2, 16 // cfg.audio_frames_ratio, cfg.audio_dim)
+
+
+# -- optimizer ------------------------------------------------------------------
+
+def test_adamw_reduces_quadratic():
+    params = {"w": jnp.ones((8,)) * 5.0}
+    state = adamw_init(params)
+
+    def loss(p):
+        return jnp.sum(p["w"] ** 2)
+
+    for _ in range(200):
+        g = jax.grad(loss)(params)
+        params, state, _ = adamw_update(g, state, params, lr=5e-2, weight_decay=0.0)
+    assert float(loss(params)) < 1.0
+
+
+def test_grad_clipping_bounds_update():
+    params = {"w": jnp.zeros((4,))}
+    state = adamw_init(params)
+    huge = {"w": jnp.full((4,), 1e9)}
+    _, _, norm = adamw_update(huge, state, params, lr=1e-3, max_grad_norm=1.0)
+    assert float(norm) > 1e8  # reported norm is pre-clip
+
+
+def test_schedules_monotone_warmup():
+    lrs = [float(linear_warmup(s, peak_lr=1.0, warmup_steps=10)) for s in range(10)]
+    assert lrs == sorted(lrs) and abs(lrs[-1] - 1.0) < 1e-6
+    c0 = float(cosine_schedule(0, peak_lr=1.0, warmup_steps=5, total_steps=100))
+    c_end = float(cosine_schedule(99, peak_lr=1.0, warmup_steps=5, total_steps=100))
+    assert c_end < c0 + 1e-9 or c0 < 1.0  # decays after warmup
+
+
+def test_cross_entropy_masking():
+    logits = jnp.zeros((1, 4, 8))
+    labels = jnp.array([[1, 2, -1, -1]])
+    ce = cross_entropy(logits, labels)
+    assert abs(float(ce) - np.log(8)) < 1e-5  # only unmasked positions count
+
+
+# -- checkpoint -------------------------------------------------------------------
+
+def test_checkpoint_roundtrip():
+    cfg = C.get("phi4-mini-3.8b", smoke=True)
+    params, _ = init_model(jax.random.key(0), cfg)
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, {"params": params}, step=42, metadata={"arch": cfg.name})
+        restored, manifest = restore_checkpoint(d, {"params": params})
+        assert manifest["step"] == 42
+        for a, b in zip(
+            jax.tree_util.tree_leaves(params),
+            jax.tree_util.tree_leaves(restored["params"]),
+        ):
+            np.testing.assert_array_equal(np.asarray(a, np.float32), np.asarray(b, np.float32))
+
+
+def test_checkpoint_shape_mismatch_rejected():
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, {"w": jnp.zeros((4,))})
+        with pytest.raises(ValueError):
+            restore_checkpoint(d, {"w": jnp.zeros((5,))})
+
+
+# -- sharding rules -----------------------------------------------------------------
+
+def _mesh():
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def test_parse_axes():
+    assert parse_axes("vocab fsdp") == ("vocab", "fsdp")
+    assert parse_axes("_ mlp") == (None, "mlp")
+    assert parse_axes("") == ()
+
+
+def test_pspec_divisibility_guard():
+    mesh = jax.make_mesh((1,), ("model",))
+    # 24 heads on a 16-wide model axis would not divide -> replicated
+    spec = logical_to_pspec(("heads",), (24,), mesh, {"heads": "model"})
+    assert spec == jax.sharding.PartitionSpec(None) or spec == jax.sharding.PartitionSpec(
+        "model"
+    )  # 1-wide mesh always divides; the guard is exercised below
+
+
+def test_pspec_skips_nondividing_axis():
+    import numpy as _np
+
+    devs = _np.array(jax.devices()[:1]).reshape(1)
+    mesh = jax.sharding.Mesh(devs, ("model",))
+
+    class FakeMesh:
+        axis_names = ("model",)
+        devices = _np.empty((16,), object)
+
+    spec = logical_to_pspec(("heads",), (24,), FakeMesh(), {"heads": "model"})
+    assert spec == jax.sharding.PartitionSpec(None)
+    spec = logical_to_pspec(("heads",), (32,), FakeMesh(), {"heads": "model"})
+    assert spec == jax.sharding.PartitionSpec("model")
+
+
+def test_pspec_never_reuses_mesh_axis():
+    import numpy as _np
+
+    class FakeMesh:
+        axis_names = ("data", "model")
+        devices = _np.empty((4, 4), object)
+
+    spec = logical_to_pspec(
+        ("mlp", "mlp"), (16, 16), FakeMesh(), {"mlp": "model"}
+    )
+    assert spec == jax.sharding.PartitionSpec("model", None)
+
+
+def test_tree_shardings_structure():
+    cfg = C.get("phi4-mini-3.8b", smoke=True)
+    from repro.models.transformer import abstract_model
+
+    sds, axes = abstract_model(cfg)
+    mesh = _mesh()
+    shards = tree_shardings(sds, axes, mesh)
+    assert jax.tree_util.tree_structure(shards) == jax.tree_util.tree_structure(sds)
+
+
+# -- serving -----------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def small_engine():
+    cfg = dataclasses.replace(C.get("phi4-mini-3.8b", smoke=True), dtype="float32")
+    params, _ = init_model(jax.random.key(0), cfg)
+    return cfg, params, ServingEngine(
+        cfg, params, max_slots=2, max_len=48, prompt_buckets=(8, 16)
+    )
+
+
+def test_serving_drains_all(small_engine):
+    cfg, params, eng = small_engine
+    rng = np.random.default_rng(1)
+    reqs = [
+        Request(rid=i, prompt=rng.integers(0, cfg.vocab, 5).astype(np.int32),
+                max_new_tokens=4)
+        for i in range(5)
+    ]
+    for r in reqs:
+        eng.submit(r)
+    done = eng.run_until_drained()
+    assert len(done) == 5
+    assert all(len(r.generated) >= 4 for r in done)
+
+
+def test_serving_rejects_recurrent_archs():
+    cfg = C.get("xlstm-125m", smoke=True)
+    params, _ = init_model(jax.random.key(0), cfg)
+    with pytest.raises(NotImplementedError):
+        ServingEngine(cfg, params)
+
+
+# -- training integration ------------------------------------------------------------
+
+def test_train_loss_decreases_stablelm():
+    cfg = dataclasses.replace(C.get("stablelm-1.6b", smoke=True), dtype="float32")
+    params, _ = init_model(jax.random.key(0), cfg)
+    opt = adamw_init(params)
+    step = make_train_step(cfg, lr=1e-3)
+    src = SyntheticLM(data_config_for(cfg, batch_size=4, seq_len=32, seed=1))
+    sealed = jax.jit(step)
+    losses = []
+    for i in range(30):
+        params, opt, m = sealed(params, opt, src.batch(i))
+        losses.append(float(m["loss"]))
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.05
+
+
+def test_train_step_grad_finite_all_archs():
+    for arch in ("gemma2-27b", "deepseek-v2-236b", "zamba2-2.7b"):
+        cfg = dataclasses.replace(C.get(arch, smoke=True), dtype="float32")
+        params, _ = init_model(jax.random.key(0), cfg)
+        opt = adamw_init(params)
+        step = make_train_step(cfg, lr=1e-3)
+        src = SyntheticLM(data_config_for(cfg, batch_size=2, seq_len=16))
+        _, _, m = step(params, opt, src.batch(0))
+        assert np.isfinite(float(m["loss"])), arch
+        assert np.isfinite(float(m["grad_norm"])), arch
