@@ -1,0 +1,13 @@
+# Tier-1 verification (ROADMAP.md): must pass from a fresh checkout.
+PY ?= python
+
+.PHONY: test bench-dispatch serve-example
+
+test:
+	PYTHONPATH=src $(PY) -m pytest -x -q
+
+bench-dispatch:
+	PYTHONPATH=src $(PY) -m benchmarks.dispatch_bench
+
+serve-example:
+	PYTHONPATH=src $(PY) examples/serve_llm.py --requests 8 --max-new 6

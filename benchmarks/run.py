@@ -22,6 +22,7 @@ def main() -> None:
     args = ap.parse_args()
 
     from . import (
+        dispatch_bench,
         fig2a_overhead_ratio,
         fig2b_sched_minimized,
         fig7_inference,
@@ -35,6 +36,7 @@ def main() -> None:
         "fig7": fig7_inference.run,
         "table1": table1_multistream.run,
         "fig8": fig8_training.run,
+        "dispatch": dispatch_bench.run,
     }
     print("name,us_per_call,derived")
     for name, suite in suites.items():

@@ -1,60 +1,82 @@
-"""Batched serving example: continuous batching on AoT-sealed steps.
+"""Multi-tenant serving example: the dispatcher over AoT-sealed schedules.
 
     PYTHONPATH=src python examples/serve_llm.py --requests 24
+    PYTHONPATH=src python examples/serve_llm.py --archs stablelm-1.6b,phi4-mini-3.8b
 
-Prefill and decode are scheduled once (sealed executables + reserved KV
-slots); the request loop is pure submission — the inference-serving face of
-the paper's AoT scheduling.
+Prefill and decode are sealed once per (model, bucket) through the shared
+``ScheduleCache``; the ``Dispatcher`` round-robins tenant requests across
+per-model engines — the request loop is pure submission, the inference-
+serving face of the paper's AoT scheduling.
 """
 
 import argparse
 import dataclasses
+import json
 import time
 
 import jax
 import numpy as np
 
 import repro.configs as C
+from repro.dispatch import Dispatcher, ScheduleCache
 from repro.models import init_model
-from repro.serving import Request, ServingEngine
+from repro.serving import ServingEngine
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="stablelm-1.6b")
+    ap.add_argument("--archs", default="stablelm-1.6b",
+                    help="comma-separated model list (each becomes a tenant)")
     ap.add_argument("--requests", type=int, default=24)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--bucketing", default="pow2:8:32",
+                    help='"exact", "pow2[:MIN:MAX]", or e.g. "8,16,32"')
     args = ap.parse_args()
 
-    cfg = dataclasses.replace(C.get(args.arch, smoke=True), dtype="float32")
-    params, _ = init_model(jax.random.key(0), cfg)
+    spec = args.bucketing
+    bucketing = (tuple(int(b) for b in spec.split(","))
+                 if spec.replace(",", "").isdigit() else spec)
+    cache = ScheduleCache(capacity=64)
+    dispatcher = Dispatcher(max_pending=4 * args.requests)
 
     t0 = time.perf_counter()
-    engine = ServingEngine(cfg, params, max_slots=args.slots, max_len=128,
-                           prompt_buckets=(16, 32))
+    for arch in args.archs.split(","):
+        cfg = dataclasses.replace(C.get(arch, smoke=True), dtype="float32")
+        params, _ = init_model(jax.random.key(0), cfg)
+        engine = ServingEngine(
+            cfg, params, max_slots=args.slots, max_len=128,
+            bucketing=bucketing, schedule_cache=cache,
+        )
+        dispatcher.register_model(arch, engine)
     print(f"AoT scheduling done in {time.perf_counter()-t0:.1f}s "
-          f"({engine.stats.prefill_compiles} prefill buckets + 1 decode sealed)")
+          f"({cache.stats.builds} schedules sealed, shared cache)")
 
     rng = np.random.default_rng(0)
+    models = dispatcher.models
     for i in range(args.requests):
-        engine.submit(Request(
-            rid=i,
-            prompt=rng.integers(0, cfg.vocab, int(rng.integers(4, 30))).astype(np.int32),
+        arch = models[i % len(models)]
+        cfg = dispatcher.engine(arch).cfg
+        dispatcher.submit(
+            arch,
+            rng.integers(0, cfg.vocab, int(rng.integers(4, 30))).astype(np.int32),
             max_new_tokens=args.max_new,
-        ))
+            tenant=f"tenant-{i % 3}",
+        )
     t0 = time.perf_counter()
-    done = engine.run_until_drained()
+    done = dispatcher.run_until_drained()
     wall = time.perf_counter() - t0
 
-    st = engine.stats
-    ttft = sorted(r.t_first - r.t_submit for r in done)
-    print(f"served {len(done)} requests in {wall:.2f}s "
-          f"({st.steps} decode steps, {st.tokens_out} tokens)")
-    print(f"decode throughput {st.decode_tok_per_s:,.0f} tok/s | "
-          f"TTFT p50 {ttft[len(ttft)//2]*1e3:.0f}ms")
+    snap = dispatcher.snapshot()
+    print(f"served {len(done)} requests over {len(models)} model(s) "
+          f"in {wall:.2f}s")
+    print(f"throughput {snap['tokens_per_second']:,.0f} tok/s | "
+          f"TTFT p50 {snap['ttft_ms']['p50']:.0f}ms | "
+          f"e2e p99 {snap['e2e_ms']['p99']:.0f}ms")
+    print("schedule cache:", json.dumps(cache.stats.as_dict(), indent=None))
     sample = done[0]
-    print(f"sample: prompt[{len(sample.prompt)}] -> {sample.generated}")
+    print(f"sample [{sample.model}]: prompt[{len(sample.prompt)}] -> "
+          f"{sample.generated}")
 
 
 if __name__ == "__main__":

@@ -1,6 +1,6 @@
 """Nimble's core: task graphs, stream assignment, AoT scheduling, engines."""
 
-from .aot import AoTScheduler, Nimble, TaskSchedule
+from .aot import AoTScheduler, Nimble, ScheduleKey, TaskSchedule
 from .engine import DispatchProfile, EagerInterpreter, compare_engines
 from .graph import Task, TaskGraph
 from .matching import ford_fulkerson, hopcroft_karp
@@ -11,7 +11,7 @@ from .streams import StreamAssignment, assign_streams
 from .trace import TracedGraph, trace_to_taskgraph
 
 __all__ = [
-    "AoTScheduler", "Nimble", "TaskSchedule",
+    "AoTScheduler", "Nimble", "ScheduleKey", "TaskSchedule",
     "DispatchProfile", "EagerInterpreter", "compare_engines",
     "Task", "TaskGraph",
     "ford_fulkerson", "hopcroft_karp",

@@ -23,14 +23,69 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, Sequence
+from typing import Any, Callable, Optional, Sequence
 
 import jax
+import numpy as np
 
 from .graph import TaskGraph
 from .memory import MemoryPlan, buffers_from_traced, plan_memory
 from .streams import StreamAssignment, assign_streams
 from .trace import TracedGraph, trace_to_taskgraph
+
+
+def _leaf_spec(leaf: Any) -> tuple[tuple[int, ...], str]:
+    """(shape, dtype) of one flattened argument leaf.
+
+    Works for concrete arrays, ``jax.ShapeDtypeStruct`` placeholders, and
+    Python scalars alike — anything that can stand in for an example arg.
+    """
+    shape = getattr(leaf, "shape", None)
+    dtype = getattr(leaf, "dtype", None)
+    if shape is None or dtype is None:
+        arr = np.asarray(leaf)
+        shape, dtype = arr.shape, arr.dtype
+    return tuple(int(d) for d in shape), str(np.dtype(dtype))
+
+
+@dataclasses.dataclass(frozen=True)
+class ScheduleKey:
+    """Canonical hashable identity of one sealed schedule.
+
+    A pre-run is reusable exactly when (a) it traced the same function, (b)
+    the flattened argument shapes/dtypes/pytree-structure match (XLA
+    executables are shape-specialized), and (c) the scheduler options that
+    shaped the executable match.  This is the single keying scheme shared by
+    :meth:`Nimble.prepare` and ``repro.dispatch.ScheduleCache``.
+    """
+
+    fn_id: str
+    tree: str                                      # pytree structure of args
+    leaves: tuple[tuple[tuple[int, ...], str], ...]  # (shape, dtype) per leaf
+    options: tuple[tuple[str, Any], ...]           # sorted scheduler options
+
+    @classmethod
+    def from_call(
+        cls,
+        fn: Callable,
+        example_args: Sequence[Any],
+        options: Sequence[tuple[str, Any]] = (),
+        *,
+        fn_id: Optional[str] = None,
+    ) -> "ScheduleKey":
+        if fn_id is None:
+            mod = getattr(fn, "__module__", "")
+            qual = getattr(fn, "__qualname__", repr(fn))
+            # id() disambiguates closures sharing a qualname; holders (the
+            # cache pins the fn object per entry) keep it from being reused.
+            fn_id = f"{mod}.{qual}#{id(fn):x}"
+        leaves, treedef = jax.tree_util.tree_flatten(tuple(example_args))
+        return cls(
+            fn_id=fn_id,
+            tree=str(treedef),
+            leaves=tuple(_leaf_spec(l) for l in leaves),
+            options=tuple(sorted((str(k), v) for k, v in options)),
+        )
 
 
 @dataclasses.dataclass
@@ -85,6 +140,24 @@ class AoTScheduler:
         # network assumption; turn off when inputs change across calls.
         self.bake_weights = bake_weights
         self.donate_argnums = tuple(donate_argnums)
+
+    def options_key(self) -> tuple[tuple[str, Any], ...]:
+        """The option pairs that distinguish one sealed executable from
+        another — part of every :class:`ScheduleKey` built for this
+        scheduler."""
+        return (
+            ("bake_weights", self.bake_weights),
+            ("donate_argnums", self.donate_argnums),
+            ("multi_stream", self.multi_stream),
+            ("pack_streams", self.pack_streams),
+        )
+
+    def schedule_key(
+        self, fn: Callable, *example_args: Any, fn_id: Optional[str] = None
+    ) -> ScheduleKey:
+        return ScheduleKey.from_call(
+            fn, example_args, self.options_key(), fn_id=fn_id
+        )
 
     def schedule(self, fn: Callable, *example_args: Any) -> TaskSchedule:
         t0 = time.perf_counter()
@@ -149,6 +222,11 @@ class Nimble:
 
     >>> engine = Nimble(model_fn)           # AoT scheduling happens here
     >>> y = engine(x)                       # pure replay
+
+    Passing ``cache=`` (a ``repro.dispatch.ScheduleCache``) makes ``prepare``
+    share sealed schedules across wrappers: two Nimbles over the same fn and
+    shapes pay for one pre-run.  Re-preparing with the same shapes is a no-op
+    either way (the :class:`ScheduleKey` is compared).
     """
 
     def __init__(
@@ -158,6 +236,7 @@ class Nimble:
         multi_stream: bool = True,
         pack_streams: bool = False,
         bake_weights: bool = True,
+        cache: Any = None,
     ) -> None:
         self._fn = fn
         self._sched = AoTScheduler(
@@ -165,13 +244,30 @@ class Nimble:
             pack_streams=pack_streams,
             bake_weights=bake_weights,
         )
+        self._cache = cache
         self._schedule: TaskSchedule | None = None
+        self._key: ScheduleKey | None = None
         if example_args:
             self.prepare(*example_args)
 
     def prepare(self, *example_args: Any) -> "Nimble":
-        self._schedule = self._sched.schedule(self._fn, *example_args)
+        key = self._sched.schedule_key(self._fn, *example_args)
+        if self._schedule is not None and key == self._key:
+            return self                       # already sealed for these shapes
+        if self._cache is not None:
+            self._schedule = self._cache.get_or_schedule(
+                self._fn, *example_args, scheduler=self._sched
+            )
+        else:
+            self._schedule = self._sched.schedule(self._fn, *example_args)
+        self._key = key
         return self
+
+    @property
+    def key(self) -> ScheduleKey:
+        if self._key is None:
+            raise RuntimeError("call prepare(*example_args) first")
+        return self._key
 
     @property
     def schedule(self) -> TaskSchedule:

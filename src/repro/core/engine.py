@@ -242,13 +242,16 @@ class JitPerOpEngine(EagerInterpreter):
 
         for ei, eqn in enumerate(jaxpr.eqns):
             invals = [env[v] for v in eqn.invars if not isinstance(v, jex_core.Literal)]
-            # run-time scheduling still happens: allocate outputs, dispatch
-            addrs = [
-                allocator.alloc(
-                    max(1, getattr(ov.aval, "dtype", np.dtype("f4")).itemsize)
-                )
-                for ov in eqn.outvars
-            ]
+            # run-time scheduling still happens: allocate outputs, dispatch.
+            # Full buffer size (itemsize * numel), matching EagerInterpreter —
+            # anything less understates allocator traffic in the comparison.
+            addrs = []
+            for ov in eqn.outvars:
+                aval = ov.aval
+                nbytes = getattr(aval, "dtype", np.dtype("f4")).itemsize
+                for s in getattr(aval, "shape", ()):
+                    nbytes *= s
+                addrs.append(allocator.alloc(max(nbytes, 1)))
             exe = self._compiled.get(ei)
             if exe is not None:
                 outvals = exe(*invals)

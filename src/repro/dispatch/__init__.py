@@ -1,0 +1,29 @@
+"""repro.dispatch: schedule cache + multi-tenant dispatch over AoT schedules.
+
+Turns the single-schedule ``Nimble`` wrapper into a serving layer: sealed
+schedules live in a shared LRU :class:`ScheduleCache` keyed by
+:class:`~repro.core.aot.ScheduleKey`; incoming shapes map onto cached
+shapes via :mod:`bucketing`; the :class:`Dispatcher` multiplexes tenant
+requests over per-model engines with fairness and backpressure; and
+:mod:`metrics` reports the latency/throughput/cache numbers.  See
+DESIGN.md §dispatch for the mapping back to the paper.
+"""
+
+from .bucketing import (
+    BucketingPolicy,
+    ExactBucketing,
+    ExplicitBuckets,
+    PowerOfTwoBuckets,
+    make_policy,
+)
+from .cache import CacheStats, ScheduleCache
+from .dispatcher import Dispatcher, QueueFullError
+from .metrics import DispatchMetrics, LatencySeries, percentile
+
+__all__ = [
+    "BucketingPolicy", "ExactBucketing", "ExplicitBuckets",
+    "PowerOfTwoBuckets", "make_policy",
+    "CacheStats", "ScheduleCache",
+    "Dispatcher", "QueueFullError",
+    "DispatchMetrics", "LatencySeries", "percentile",
+]

@@ -1,0 +1,194 @@
+"""Schedule cache: amortize the AoT pre-run across tenants and requests.
+
+Nimble (paper §4.1) pays the pre-run once per (function, shape) and replays
+forever after — but only inside one ``Nimble`` wrapper.  Under multi-tenant
+traffic the same (function, shape) arrives from many callers, so the sealed
+:class:`~repro.core.aot.TaskSchedule` must live in a shared, bounded cache:
+
+* keyed by :class:`~repro.core.aot.ScheduleKey` — (fn identity, flattened
+  arg shapes/dtypes, scheduler options) — the exact reuse condition of a
+  shape-specialized executable;
+* LRU-bounded (sealed executables hold device code and reserved arenas;
+  unbounded growth is a memory leak under shape churn);
+* build-coalescing: concurrent callers that miss on the same key wait on one
+  per-key build lock, so a pre-run is never duplicated.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from collections import OrderedDict
+from typing import Any, Callable, Optional
+
+from repro.core.aot import AoTScheduler, ScheduleKey, TaskSchedule
+
+
+@dataclasses.dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+    evictions: int = 0
+    builds: int = 0               # actual pre-runs (== misses that compiled)
+    build_seconds: float = 0.0    # total time spent inside builders
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+    def as_dict(self) -> dict:
+        return {
+            "hits": self.hits,
+            "misses": self.misses,
+            "evictions": self.evictions,
+            "builds": self.builds,
+            "build_seconds": self.build_seconds,
+            "hit_rate": self.hit_rate,
+        }
+
+
+@dataclasses.dataclass
+class _Entry:
+    value: Any
+    pin: Any = None               # keeps fn objects alive while cached, so
+    build_seconds: float = 0.0    # id(fn) in the key cannot be recycled
+
+
+class ScheduleCache:
+    """LRU cache of sealed schedules/executables with build coalescing.
+
+    Two entry points:
+
+    * :meth:`get_or_schedule` — the Nimble path: key derived from
+      ``(fn, example_args, scheduler.options_key())``, value an
+      :class:`~repro.core.aot.TaskSchedule` produced by the scheduler's
+      pre-run.
+    * :meth:`get_or_build` — the generic path: any hashable key, any builder
+      producing a sealed artifact (the serving engine caches raw XLA
+      executables for its prefill buckets this way).
+    """
+
+    def __init__(
+        self,
+        capacity: int = 64,
+        *,
+        scheduler: Optional[AoTScheduler] = None,
+    ) -> None:
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        self.capacity = capacity
+        self.scheduler = scheduler or AoTScheduler()
+        self.stats = CacheStats()
+        self._entries: "OrderedDict[Any, _Entry]" = OrderedDict()
+        self._mu = threading.Lock()               # guards entries + stats
+        self._build_locks: dict[Any, threading.Lock] = {}
+
+    # -- inspection --------------------------------------------------------
+
+    def __len__(self) -> int:
+        with self._mu:
+            return len(self._entries)
+
+    def __contains__(self, key: Any) -> bool:
+        with self._mu:
+            return key in self._entries
+
+    def keys(self) -> list:
+        with self._mu:
+            return list(self._entries)
+
+    # -- core paths --------------------------------------------------------
+
+    def get(self, key: Any) -> Optional[Any]:
+        """Lookup without building; counts a hit or a miss."""
+        with self._mu:
+            entry = self._entries.get(key)
+            if entry is None:
+                self.stats.misses += 1
+                return None
+            self._entries.move_to_end(key)
+            self.stats.hits += 1
+            return entry.value
+
+    def put(self, key: Any, value: Any, *, pin: Any = None) -> None:
+        with self._mu:
+            self._entries[key] = _Entry(value=value, pin=pin)
+            self._entries.move_to_end(key)
+            self._evict_locked()
+
+    def get_or_build(
+        self,
+        key: Any,
+        build: Callable[[], Any],
+        *,
+        pin: Any = None,
+    ) -> Any:
+        """Return the cached value for ``key``, building it at most once.
+
+        Concurrent callers missing on the same key coalesce on a per-key
+        lock: one performs the build, the rest wait and receive the cached
+        result — a pre-run is never duplicated (ISSUE §tentpole).
+        """
+        with self._mu:
+            entry = self._entries.get(key)
+            if entry is not None:
+                self._entries.move_to_end(key)
+                self.stats.hits += 1
+                return entry.value
+            self.stats.misses += 1
+            lock = self._build_locks.setdefault(key, threading.Lock())
+
+        with lock:
+            # double-check: another caller may have built while we waited —
+            # served from cache, so reclassify the provisional miss as a hit
+            with self._mu:
+                entry = self._entries.get(key)
+                if entry is not None:
+                    self._entries.move_to_end(key)
+                    self.stats.hits += 1
+                    self.stats.misses -= 1
+                    return entry.value
+            t0 = time.perf_counter()
+            value = build()
+            dt = time.perf_counter() - t0
+            with self._mu:
+                self.stats.builds += 1
+                self.stats.build_seconds += dt
+                self._entries[key] = _Entry(
+                    value=value, pin=pin, build_seconds=dt
+                )
+                self._entries.move_to_end(key)
+                self._evict_locked()
+                self._build_locks.pop(key, None)
+            return value
+
+    def get_or_schedule(
+        self,
+        fn: Callable,
+        *example_args: Any,
+        scheduler: Optional[AoTScheduler] = None,
+        fn_id: Optional[str] = None,
+    ) -> TaskSchedule:
+        """The Nimble path: one shared pre-run per (fn, shapes, options)."""
+        sched = scheduler or self.scheduler
+        key = sched.schedule_key(fn, *example_args, fn_id=fn_id)
+        return self.get_or_build(
+            key, lambda: sched.schedule(fn, *example_args), pin=fn
+        )
+
+    def invalidate(self, key: Any) -> bool:
+        with self._mu:
+            return self._entries.pop(key, None) is not None
+
+    def clear(self) -> None:
+        with self._mu:
+            self._entries.clear()
+
+    # -- internals ---------------------------------------------------------
+
+    def _evict_locked(self) -> None:
+        while len(self._entries) > self.capacity:
+            self._entries.popitem(last=False)
+            self.stats.evictions += 1

@@ -1,0 +1,199 @@
+"""Multi-tenant dispatcher: route requests onto pre-sealed schedules.
+
+The layer the GPU-datacenter scheduling survey (Gao et al.) calls out as
+missing from single-model AoT systems: many models ("tenants"), each with
+its own :class:`~repro.serving.ServingEngine` over cached schedules, served
+from one submission front door.
+
+Flow (mirroring the related ``gpu_dispatch`` repo's submit/monitor shape,
+but cooperative and in-process — the repo's engines are synchronous):
+
+    submit(model, prompt)           # backpressure: bounded total queue
+      └─ per-model lane (FIFO)
+    step()                          # round-robin across models (fairness)
+      ├─ admission control: fill free engine slots from the model's lane
+      ├─ engine.step(): one sealed decode step + prefills
+      └─ completion callbacks + metrics for every finished request
+
+Fairness is round-robin over *models*: each ``step()`` rotates which lane
+admits and decodes first, so a flood on one model cannot starve another.
+Backpressure is a bounded pending count: ``submit`` raises
+:class:`QueueFullError` once ``max_pending`` requests are queued or
+in-flight, pushing the wait upstream instead of growing memory.
+"""
+
+from __future__ import annotations
+
+import time
+from collections import deque
+from typing import Any, Callable, Optional
+
+import numpy as np
+
+from .metrics import DispatchMetrics
+
+
+class QueueFullError(RuntimeError):
+    """Raised by :meth:`Dispatcher.submit` when the bounded queue is full."""
+
+
+class Dispatcher:
+    """Round-robin multi-tenant front door over per-model serving engines.
+
+    Engines are duck-typed: anything with ``submit(request)``,
+    ``step() -> list[Request]``, ``free_slots()``, and ``idle`` works
+    (``repro.serving.ServingEngine`` is the canonical one).
+    """
+
+    def __init__(
+        self,
+        *,
+        max_pending: int = 256,
+        metrics: Optional[DispatchMetrics] = None,
+    ) -> None:
+        if max_pending < 1:
+            raise ValueError(f"max_pending must be >= 1, got {max_pending}")
+        self.max_pending = max_pending
+        self.metrics = metrics or DispatchMetrics()
+        self._engines: dict[str, Any] = {}
+        self._lanes: dict[str, deque] = {}
+        self._order: list[str] = []
+        self._rr = 0                     # rotation cursor (fairness)
+        self._next_rid = 0
+        self.completed: list = []        # finished Requests, completion order
+
+    # -- registration ------------------------------------------------------
+
+    def register_model(self, name: str, engine: Any) -> Any:
+        if name in self._engines:
+            raise ValueError(f"model {name!r} already registered")
+        self._engines[name] = engine
+        self._lanes[name] = deque()
+        self._order.append(name)
+        return engine
+
+    @property
+    def models(self) -> tuple[str, ...]:
+        return tuple(self._order)
+
+    def engine(self, name: str) -> Any:
+        return self._engines[name]
+
+    # -- submission (backpressure) -----------------------------------------
+
+    def pending(self) -> int:
+        """Requests queued in lanes plus live in the engines."""
+        lanes = sum(len(q) for q in self._lanes.values())
+        live = sum(
+            len(getattr(e, "queue", ())) +
+            sum(1 for s in getattr(e, "slots", ()) if s is not None)
+            for e in self._engines.values()
+        )
+        return lanes + live
+
+    def submit(
+        self,
+        model: str,
+        prompt: np.ndarray,
+        *,
+        max_new_tokens: int = 16,
+        tenant: str = "",
+        on_complete: Optional[Callable[[str, Any], None]] = None,
+    ):
+        """Enqueue one request for ``model``; returns the ``Request``."""
+        from repro.serving.engine import Request  # lazy: avoid import cycle
+
+        if model not in self._engines:
+            raise KeyError(f"unknown model {model!r}")
+        if self.pending() >= self.max_pending:
+            self.metrics.on_reject()
+            raise QueueFullError(
+                f"dispatcher at capacity ({self.max_pending} pending)"
+            )
+        req = Request(
+            rid=self._next_rid,
+            prompt=np.asarray(prompt, np.int32),
+            max_new_tokens=max_new_tokens,
+            tenant=tenant,
+            model=model,
+            on_complete=on_complete,
+        )
+        self._next_rid += 1
+        req.t_submit = time.perf_counter()
+        self.metrics.on_submit(req.t_submit)
+        self._lanes[model].append(req)
+        return req
+
+    def submit_request(self, model: str, req: Any) -> Any:
+        """Enqueue a caller-constructed ``Request`` (keeps its rid/fields)."""
+        if model not in self._engines:
+            raise KeyError(f"unknown model {model!r}")
+        if self.pending() >= self.max_pending:
+            self.metrics.on_reject()
+            raise QueueFullError(
+                f"dispatcher at capacity ({self.max_pending} pending)"
+            )
+        req.model = model
+        req.t_submit = time.perf_counter()
+        self.metrics.on_submit(req.t_submit)
+        self._lanes[model].append(req)
+        return req
+
+    # -- the serving loop --------------------------------------------------
+
+    def step(self) -> list:
+        """One dispatch iteration over all models; returns requests that
+        finished during it.  Round-robin: the lane that admits/decodes first
+        rotates every step."""
+        n = len(self._order)
+        if n == 0:
+            return []
+        order = [self._order[(self._rr + i) % n] for i in range(n)]
+        self._rr = (self._rr + 1) % n
+
+        finished = []
+        for name in order:
+            engine = self._engines[name]
+            lane = self._lanes[name]
+            # admission control: only hand the engine what it can seat now,
+            # so queueing (and therefore backpressure) stays visible here
+            while lane and engine.free_slots() > 0:
+                engine.submit(lane.popleft())
+            for req in engine.step():
+                self.metrics.observe_request(req)
+                self.completed.append(req)
+                finished.append(req)
+                cb = getattr(req, "on_complete", None)
+                if cb is not None:
+                    cb(name, req)
+        return finished
+
+    @property
+    def idle(self) -> bool:
+        return all(len(q) == 0 for q in self._lanes.values()) and all(
+            e.idle for e in self._engines.values()
+        )
+
+    def run_until_drained(self, max_steps: int = 100_000) -> list:
+        """Step until every lane and engine is empty; returns all requests
+        finished during the drain, in completion order."""
+        finished = []
+        for _ in range(max_steps):
+            finished.extend(self.step())
+            if self.idle:
+                break
+        return finished
+
+    def snapshot(self) -> dict:
+        """Metrics snapshot including per-model schedule-cache stats."""
+        caches = {}
+        for name, e in self._engines.items():
+            cache = getattr(e, "schedule_cache", None)
+            if cache is not None:
+                caches[name] = cache.stats.as_dict()
+        snap = self.metrics.snapshot()
+        if caches:
+            snap["schedule_cache"] = caches
+        snap["models"] = list(self._order)
+        snap["pending"] = self.pending()
+        return snap

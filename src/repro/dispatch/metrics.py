@@ -1,0 +1,124 @@
+"""Serving metrics: latency percentiles, throughput, cache snapshots.
+
+The quantities a dispatch layer is judged by (GPU-datacenter scheduling
+survey, Gao et al.): time-to-first-token (prefill + queueing), per-token
+decode latency, end-to-end request latency, aggregate token throughput —
+plus the schedule-cache hit statistics that show the AoT pre-run actually
+amortizing.  Everything exports as a plain dict so benchmarks and examples
+can print or JSON-dump a snapshot.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Optional
+
+import numpy as np
+
+
+def percentile(values, q: float) -> float:
+    """Linear-interpolated percentile; 0.0 on empty input."""
+    if not len(values):
+        return 0.0
+    return float(np.percentile(np.asarray(values, dtype=np.float64), q))
+
+
+@dataclasses.dataclass
+class LatencySeries:
+    """One latency distribution, recorded in seconds."""
+
+    name: str
+    values: list = dataclasses.field(default_factory=list)
+
+    def record(self, seconds: float) -> None:
+        self.values.append(float(seconds))
+
+    @property
+    def count(self) -> int:
+        return len(self.values)
+
+    def summary_ms(self) -> dict:
+        vals = np.asarray(self.values, dtype=np.float64) * 1e3
+        if not len(vals):
+            return {"count": 0, "mean": 0.0, "p50": 0.0, "p90": 0.0,
+                    "p99": 0.0, "max": 0.0}
+        return {
+            "count": int(len(vals)),
+            "mean": float(vals.mean()),
+            "p50": percentile(vals, 50),
+            "p90": percentile(vals, 90),
+            "p99": percentile(vals, 99),
+            "max": float(vals.max()),
+        }
+
+
+class DispatchMetrics:
+    """Aggregates per-request observations into a serving-level snapshot."""
+
+    def __init__(self) -> None:
+        self.ttft = LatencySeries("ttft")            # submit -> first token
+        self.per_token = LatencySeries("per_token")  # decode time / token
+        self.e2e = LatencySeries("e2e")              # submit -> done
+        self.requests_done = 0
+        self.tokens_out = 0
+        self.rejected = 0                             # backpressure refusals
+        self._t_first_submit: Optional[float] = None
+        self._t_last_done: Optional[float] = None
+
+    def on_submit(self, t_submit: Optional[float] = None) -> None:
+        t = time.perf_counter() if t_submit is None else t_submit
+        if self._t_first_submit is None or t < self._t_first_submit:
+            self._t_first_submit = t
+
+    def on_reject(self) -> None:
+        self.rejected += 1
+
+    def observe_request(self, req: Any) -> None:
+        """Fold one finished request (serving ``Request`` timestamps) in."""
+        ntok = len(req.generated)
+        self.requests_done += 1
+        self.tokens_out += ntok
+        if req.t_first and req.t_submit:
+            self.ttft.record(req.t_first - req.t_submit)
+        if req.t_done and req.t_submit:
+            self.e2e.record(req.t_done - req.t_submit)
+            if ntok > 1 and req.t_first:
+                # decode tokens exclude the one produced by prefill
+                self.per_token.record(
+                    (req.t_done - req.t_first) / (ntok - 1)
+                )
+        if self._t_last_done is None or req.t_done > self._t_last_done:
+            self._t_last_done = req.t_done
+
+    @property
+    def wall_seconds(self) -> float:
+        if self._t_first_submit is None or self._t_last_done is None:
+            return 0.0
+        return max(0.0, self._t_last_done - self._t_first_submit)
+
+    @property
+    def tokens_per_second(self) -> float:
+        wall = self.wall_seconds
+        return self.tokens_out / wall if wall else 0.0
+
+    @property
+    def requests_per_second(self) -> float:
+        wall = self.wall_seconds
+        return self.requests_done / wall if wall else 0.0
+
+    def snapshot(self, cache_stats: Optional[dict] = None) -> dict:
+        snap = {
+            "requests_done": self.requests_done,
+            "tokens_out": self.tokens_out,
+            "rejected": self.rejected,
+            "wall_seconds": self.wall_seconds,
+            "tokens_per_second": self.tokens_per_second,
+            "requests_per_second": self.requests_per_second,
+            "ttft_ms": self.ttft.summary_ms(),
+            "per_token_ms": self.per_token.summary_ms(),
+            "e2e_ms": self.e2e.summary_ms(),
+        }
+        if cache_stats is not None:
+            snap["schedule_cache"] = dict(cache_stats)
+        return snap

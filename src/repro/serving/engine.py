@@ -4,23 +4,29 @@ The Nimble story applied to inference serving: both step functions are
 scheduled **once** ahead of time (traced, compiled, memory reserved — the
 task schedule), and the request loop only *submits* them.  Per-request state
 lives in batch slots of a shared KV cache; each slot decodes at its own
-offset (``cache["pos"]`` is per-slot), so finished requests are replaced
+offset (``kv_cache["pos"]`` is per-slot), so finished requests are replaced
 without disturbing neighbours — iteration-level continuous batching.
 
-Prefill runs per request into its slot (padded to a bucket length so a small
-fixed family of sealed executables covers all prompt lengths).
+Sealed executables are obtained through a ``repro.dispatch.ScheduleCache``
+rather than compiled inline: prefill runs per request into its slot, padded
+to a bucket length chosen by a ``repro.dispatch.bucketing`` policy, and each
+(bucket, config) executable is built at most once — shared across engines
+that use the same cache, and evicted LRU under shape churn.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Optional
+from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.aot import ScheduleKey
+from repro.dispatch.bucketing import BucketingPolicy, make_policy
+from repro.dispatch.cache import ScheduleCache
 from repro.models import decode_step, forward, init_cache, init_model
 from repro.models.transformer import encode_memory
 
@@ -30,6 +36,11 @@ class Request:
     rid: int
     prompt: np.ndarray                 # (P,) int32
     max_new_tokens: int = 16
+    tenant: str = ""                   # set by the dispatcher (multi-tenant)
+    model: str = ""
+    on_complete: Optional[Callable] = dataclasses.field(
+        default=None, repr=False, compare=False
+    )
     # filled by the engine:
     generated: list = dataclasses.field(default_factory=list)
     done: bool = False
@@ -63,6 +74,9 @@ class ServingEngine:
         max_slots: int = 4,
         max_len: int = 256,
         prompt_buckets: tuple[int, ...] = (32, 128),
+        bucketing: Any = None,
+        schedule_cache: Optional[ScheduleCache] = None,
+        warmup: bool = True,
         greedy: bool = True,
     ) -> None:
         if cfg.family in ("hybrid", "ssm"):
@@ -74,34 +88,98 @@ class ServingEngine:
         self.params = params
         self.max_slots = max_slots
         self.max_len = max_len
-        self.prompt_buckets = tuple(sorted(prompt_buckets))
+        # `bucketing` (policy/spec) generalizes the old `prompt_buckets`
+        # tuple, which remains as the explicit-buckets shorthand.
+        self.bucketing: BucketingPolicy = make_policy(
+            bucketing if bucketing is not None else prompt_buckets
+        )
+        # explicit None-check: an empty ScheduleCache is falsy (__len__ == 0)
+        self.schedule_cache = (
+            ScheduleCache(capacity=32) if schedule_cache is None else schedule_cache
+        )
         self.greedy = greedy
         self.stats = EngineStats()
 
-        # --- AoT scheduling: seal the step executables ------------------
-        self.cache = init_cache(cfg, max_slots, max_len)
-        self._decode = jax.jit(self._decode_impl).lower(
-            self.params, self.cache,
-            jax.ShapeDtypeStruct((max_slots, 1), jnp.int32),
-        ).compile()
-        self.stats.decode_compiles += 1
+        # sealed-executable identity beyond arg shapes: anything that changes
+        # the traced computation without changing input shapes
+        self._key_options = (
+            ("cfg", repr(cfg)),
+            ("max_len", max_len),
+            ("max_slots", max_slots),
+        )
 
-        # one sealed prefill executable per prompt bucket; the slot index is
-        # a traced scalar (dynamic_update_slice), so slots share executables
-        self._prefill_exec: dict[int, Callable] = {}
-        for b in self.prompt_buckets:
-            self._prefill_exec[b] = jax.jit(self._prefill_dyn).lower(
-                self.params,
-                jax.ShapeDtypeStruct((1, b), jnp.int32),
-                self.cache,
-                jax.ShapeDtypeStruct((), jnp.int32),
-                jax.ShapeDtypeStruct((), jnp.int32),
-            ).compile()
-            self.stats.prefill_compiles += 1
+        # --- AoT scheduling: seal the step executables through the cache --
+        self.kv_cache = init_cache(cfg, max_slots, max_len)
+        # per-engine memo: key construction flattens the whole params pytree,
+        # too costly per admitted request — pay it once per bucket
+        self._prefill_memo: dict[int, Any] = {}
+        self._decode = self._get_decode_exec()
+        if warmup:
+            for b in self._warm_buckets():
+                self._get_prefill_exec(b)
 
         self.slots: list[Optional[Request]] = [None] * max_slots
         self.queue: list[Request] = []
         self._next_tok = np.zeros((max_slots, 1), np.int32)
+
+    # -- sealed executables through the schedule cache ---------------------
+    def _warm_buckets(self) -> tuple[int, ...]:
+        static = self.bucketing.static_buckets()
+        if static is None:
+            return ()
+        return tuple(b for b in static if b <= self.max_len)
+
+    @property
+    def prompt_buckets(self) -> tuple[int, ...]:
+        """Bucket family currently pre-sealable (exact policies: empty)."""
+        return self._warm_buckets()
+
+    def _get_decode_exec(self):
+        key = ScheduleKey.from_call(
+            decode_step,
+            (self.params, self.kv_cache,
+             jax.ShapeDtypeStruct((self.max_slots, 1), jnp.int32)),
+            self._key_options,
+            fn_id=f"serving.decode/{self.cfg.name}",
+        )
+
+        def build():
+            exe = jax.jit(self._decode_impl).lower(
+                self.params, self.kv_cache,
+                jax.ShapeDtypeStruct((self.max_slots, 1), jnp.int32),
+            ).compile()
+            self.stats.decode_compiles += 1
+            return exe
+
+        return self.schedule_cache.get_or_build(key, build, pin=self.params)
+
+    def _get_prefill_exec(self, bucket: int):
+        exe = self._prefill_memo.get(bucket)
+        if exe is not None:
+            return exe
+        key = ScheduleKey.from_call(
+            decode_step,
+            (self.params,
+             jax.ShapeDtypeStruct((1, bucket), jnp.int32),
+             self.kv_cache),
+            self._key_options,
+            fn_id=f"serving.prefill/{self.cfg.name}",
+        )
+
+        def build():
+            exe = jax.jit(self._prefill_dyn).lower(
+                self.params,
+                jax.ShapeDtypeStruct((1, bucket), jnp.int32),
+                self.kv_cache,
+                jax.ShapeDtypeStruct((), jnp.int32),
+                jax.ShapeDtypeStruct((), jnp.int32),
+            ).compile()
+            self.stats.prefill_compiles += 1
+            return exe
+
+        exe = self.schedule_cache.get_or_build(key, build, pin=self.params)
+        self._prefill_memo[bucket] = exe
+        return exe
 
     # -- sealed step bodies ------------------------------------------------
     def _decode_impl(self, params, cache, tokens):
@@ -141,44 +219,75 @@ class ServingEngine:
 
     # -- request flow --------------------------------------------------------
     def submit(self, req: Request) -> None:
-        req.t_submit = time.perf_counter()
+        if not req.t_submit:         # dispatcher may have stamped lane entry
+            req.t_submit = time.perf_counter()
         self.queue.append(req)
 
-    def _bucket(self, plen: int) -> int:
-        for b in self.prompt_buckets:
-            if plen <= b:
-                return b
-        raise ValueError(f"prompt length {plen} exceeds largest bucket")
+    def free_slots(self) -> int:
+        """Seats available right now (admission control hook)."""
+        return sum(1 for s in self.slots if s is None) - len(self.queue)
 
-    def _admit(self) -> None:
+    @property
+    def idle(self) -> bool:
+        return not self.queue and all(s is None for s in self.slots)
+
+    def _bucket(self, plen: int) -> int:
+        b = self.bucketing.bucket(plen)
+        if b > self.max_len:
+            raise ValueError(
+                f"prompt bucket {b} exceeds engine max_len {self.max_len}"
+            )
+        return b
+
+    def _finish(self, req: Request, slot: int) -> None:
+        req.done = True
+        req.t_done = time.perf_counter()
+        self.slots[slot] = None
+        # reset the slot's write offset for the next occupant
+        self.kv_cache["pos"] = self.kv_cache["pos"].at[slot].set(0)
+
+    def _admit(self) -> list[Request]:
+        finished: list[Request] = []
         for slot in range(self.max_slots):
             if self.slots[slot] is not None or not self.queue:
                 continue
             req = self.queue.pop(0)
             plen = len(req.prompt)
             b = self._bucket(plen)
+            exe = self._get_prefill_exec(b)    # schedule-cache hit when warm
             padded = np.zeros((1, b), np.int32)
             padded[0, :plen] = req.prompt
             t0 = time.perf_counter()
-            nxt, self.cache = self._prefill_exec[b](
-                self.params, jnp.asarray(padded), self.cache,
+            nxt, self.kv_cache = exe(
+                self.params, jnp.asarray(padded), self.kv_cache,
                 jnp.int32(slot), jnp.int32(plen),
             )
             self.stats.prefill_s += time.perf_counter() - t0
             req.t_first = time.perf_counter()
             req.generated.append(int(nxt))
+            if len(req.generated) >= req.max_new_tokens:
+                # e.g. a 1-token request: done at prefill, never seats
+                self._finish(req, slot)
+                finished.append(req)
+                continue
             self._next_tok[slot, 0] = int(nxt)
             self.slots[slot] = req
+        return finished
 
-    def step(self) -> None:
-        """One engine iteration: admit + one decode step for all live slots."""
-        self._admit()
+    def step(self) -> list[Request]:
+        """One engine iteration: admit + one decode step for all live slots.
+
+        Returns every request that finished during this step — including
+        those admitted and completed within it (they were invisible to the
+        old snapshot-based ``run_until_drained``).
+        """
+        finished = self._admit()
         live = [s for s in range(self.max_slots) if self.slots[s] is not None]
         if not live:
-            return
+            return finished
         t0 = time.perf_counter()
-        nxt, self.cache = self._decode(
-            self.params, self.cache, jnp.asarray(self._next_tok)
+        nxt, self.kv_cache = self._decode(
+            self.params, self.kv_cache, jnp.asarray(self._next_tok)
         )
         self.stats.decode_s += time.perf_counter() - t0
         self.stats.steps += 1
@@ -190,18 +299,14 @@ class ServingEngine:
             self.stats.tokens_out += 1
             pos_full = len(req.prompt) + len(req.generated)
             if len(req.generated) >= req.max_new_tokens or pos_full >= self.max_len - 1:
-                req.done = True
-                req.t_done = time.perf_counter()
-                self.slots[s] = None
-                # reset the slot's write offset for the next occupant
-                self.cache["pos"] = self.cache["pos"].at[s].set(0)
+                self._finish(req, s)
+                finished.append(req)
+        return finished
 
     def run_until_drained(self, max_steps: int = 10_000) -> list[Request]:
         finished: list[Request] = []
         for _ in range(max_steps):
-            before = [r for r in self.slots if r is not None]
-            self.step()
-            finished.extend(r for r in before if r.done)
-            if not self.queue and all(s is None for s in self.slots):
+            finished.extend(self.step())
+            if self.idle:
                 break
         return finished

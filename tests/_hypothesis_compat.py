@@ -1,0 +1,96 @@
+"""hypothesis shim: use the real library when present, else a tiny fallback.
+
+The property tests (`test_streams_properties.py`, `test_aot_engine.py`) only
+need `given`, `settings`, and the `integers`/`booleans`/`composite`
+strategies.  The clean environment does not ship hypothesis, so this module
+provides a deterministic random-sampling substitute with the same surface:
+each `@given` test runs `max_examples` examples drawn from a PRNG seeded by
+the test name.  No shrinking, no database — just coverage, so the tier-1
+suite passes from a fresh checkout.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        """A sampler: `example(rng)` draws one value."""
+
+        def __init__(self, sample):
+            self._sample = sample
+
+        def example(self, rng: random.Random):
+            return self._sample(rng)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value=0, max_value=None):
+            hi = (1 << 30) if max_value is None else max_value
+            return _Strategy(lambda rng: rng.randint(min_value, hi))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: rng.random() < 0.5)
+
+        @staticmethod
+        def sampled_from(options):
+            opts = list(options)
+            return _Strategy(lambda rng: opts[rng.randrange(len(opts))])
+
+        @staticmethod
+        def composite(build):
+            def make(*args, **kwargs):
+                def sample(rng):
+                    return build(lambda s: s.example(rng), *args, **kwargs)
+
+                return _Strategy(sample)
+
+            return make
+
+    st = _Strategies()
+
+    def settings(max_examples: int = 100, deadline=None, **_ignored):
+        def deco(test):
+            test._max_examples = max_examples
+            return test
+
+        return deco
+
+    def given(*strategies, **kw_strategies):
+        def deco(test):
+            @functools.wraps(test)
+            def wrapper(*args, **kwargs):
+                n = getattr(test, "_max_examples", 100)
+                rng = random.Random(test.__qualname__)
+                for _ in range(n):
+                    drawn = tuple(s.example(rng) for s in strategies)
+                    kw_drawn = {
+                        k: s.example(rng) for k, s in kw_strategies.items()
+                    }
+                    test(*args, *drawn, **kwargs, **kw_drawn)
+
+            # hide the strategy-bound parameters from pytest so it does not
+            # look for fixtures with those names (trailing positionals for
+            # @given(strat, ...), named ones for @given(x=strat, ...))
+            sig = inspect.signature(test)
+            params = [
+                p for p in sig.parameters.values()
+                if p.name not in kw_strategies
+            ]
+            kept = params[: len(params) - len(strategies)]
+            wrapper.__signature__ = sig.replace(parameters=kept)
+            return wrapper
+
+        return deco
+
+
+__all__ = ["HAVE_HYPOTHESIS", "given", "settings", "st"]

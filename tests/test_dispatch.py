@@ -1,0 +1,336 @@
+"""repro.dispatch tests: schedule cache, bucketing, dispatcher, metrics."""
+
+import threading
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import AoTScheduler, Nimble, ScheduleKey
+from repro.dispatch import (
+    Dispatcher,
+    ExactBucketing,
+    ExplicitBuckets,
+    PowerOfTwoBuckets,
+    QueueFullError,
+    ScheduleCache,
+    make_policy,
+)
+
+
+def _mlp(x, w):
+    return jnp.tanh(jnp.dot(x, w))
+
+
+def _args(seed=0, n=16):
+    rng = np.random.default_rng(seed)
+    return (
+        rng.standard_normal((4, n), dtype=np.float32),
+        rng.standard_normal((n, n), dtype=np.float32),
+    )
+
+
+# -- ScheduleKey --------------------------------------------------------------
+
+def test_schedule_key_stable_across_calls():
+    sched = AoTScheduler()
+    a = _args(0)
+    b = _args(1)           # different values, same shapes/dtypes
+    assert sched.schedule_key(_mlp, *a) == sched.schedule_key(_mlp, *b)
+
+
+def test_schedule_key_varies_with_shapes_options_and_fn():
+    sched = AoTScheduler()
+    base = sched.schedule_key(_mlp, *_args(n=16))
+    assert base != sched.schedule_key(_mlp, *_args(n=8))
+    assert base != AoTScheduler(multi_stream=False).schedule_key(
+        _mlp, *_args(n=16)
+    )
+
+    def other(x, w):
+        return jnp.dot(x, w)
+
+    assert base != sched.schedule_key(other, *_args(n=16))
+    assert hash(base) == hash(sched.schedule_key(_mlp, *_args(n=16)))
+
+
+def test_schedule_key_handles_shape_dtype_structs():
+    import jax
+
+    key = ScheduleKey.from_call(
+        _mlp,
+        (jax.ShapeDtypeStruct((4, 16), jnp.float32),
+         jax.ShapeDtypeStruct((16, 16), jnp.float32)),
+        fn_id="x",
+    )
+    concrete = ScheduleKey.from_call(_mlp, _args(), fn_id="x")
+    assert key == concrete
+
+
+# -- ScheduleCache ------------------------------------------------------------
+
+def test_cache_hit_miss_eviction_counts():
+    cache = ScheduleCache(capacity=2)
+    built = []
+
+    def builder(tag):
+        return lambda: built.append(tag) or tag
+
+    assert cache.get_or_build("a", builder("a")) == "a"   # miss + build
+    assert cache.get_or_build("a", builder("a2")) == "a"  # hit
+    cache.get_or_build("b", builder("b"))                  # miss
+    cache.get_or_build("c", builder("c"))                  # miss -> evicts "a"
+    assert cache.stats.hits == 1
+    assert cache.stats.misses == 3
+    assert cache.stats.evictions == 1
+    assert built == ["a", "b", "c"]
+    assert "a" not in cache and "b" in cache and "c" in cache
+
+
+def test_cache_lru_order_refreshes_on_hit():
+    cache = ScheduleCache(capacity=2)
+    cache.put("a", 1)
+    cache.put("b", 2)
+    assert cache.get("a") == 1     # refresh "a": now "b" is LRU
+    cache.put("c", 3)
+    assert "b" not in cache and "a" in cache and "c" in cache
+
+
+def test_cache_get_or_schedule_reuses_prerun_and_matches_nimble():
+    args = _args()
+    cache = ScheduleCache(capacity=4)
+    s1 = cache.get_or_schedule(_mlp, *args)
+    s2 = cache.get_or_schedule(_mlp, *args)
+    assert s1 is s2
+    assert cache.stats.builds == 1 and cache.stats.hits == 1
+    ref = Nimble(_mlp, *args)(*args)
+    np.testing.assert_array_equal(np.asarray(s1.replay(*args)),
+                                  np.asarray(ref))
+
+
+def test_cache_concurrent_callers_build_once():
+    cache = ScheduleCache(capacity=4)
+    builds = []
+
+    def slow_build():
+        time.sleep(0.05)
+        builds.append(1)
+        return "sealed"
+
+    results = []
+
+    def worker():
+        results.append(cache.get_or_build("k", slow_build))
+
+    threads = [threading.Thread(target=worker) for _ in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert results == ["sealed"] * 8
+    assert len(builds) == 1         # the pre-run is never duplicated
+    assert cache.stats.builds == 1
+
+
+def test_nimble_shares_schedule_through_cache():
+    args = _args()
+    cache = ScheduleCache(capacity=4)
+    n1 = Nimble(_mlp, *args, cache=cache)
+    n2 = Nimble(_mlp, *args, cache=cache)
+    assert cache.stats.builds == 1
+    assert n1.schedule is n2.schedule
+    assert n1.key == n2.key
+    np.testing.assert_array_equal(np.asarray(n1(*args)), np.asarray(n2(*args)))
+
+
+def test_nimble_reprepare_same_shapes_is_noop():
+    args = _args()
+    n = Nimble(_mlp, *args)
+    sched = n.schedule
+    n.prepare(*_args(seed=3))       # same shapes, different values
+    assert n.schedule is sched
+
+
+# -- bucketing ----------------------------------------------------------------
+
+def test_exact_bucketing():
+    p = ExactBucketing()
+    assert p.bucket(7) == 7
+    assert p.static_buckets() is None
+    with pytest.raises(ValueError):
+        ExactBucketing(max_length=8).bucket(9)
+    with pytest.raises(ValueError):
+        p.bucket(0)
+
+
+def test_explicit_buckets():
+    p = ExplicitBuckets((32, 8, 16))
+    assert p.buckets == (8, 16, 32)      # sorted, deduped
+    assert p.bucket(1) == 8
+    assert p.bucket(8) == 8
+    assert p.bucket(9) == 16
+    assert p.bucket(32) == 32
+    with pytest.raises(ValueError):
+        p.bucket(33)
+    with pytest.raises(ValueError):
+        ExplicitBuckets(())
+
+
+def test_pow2_buckets():
+    p = PowerOfTwoBuckets(min_bucket=8, max_bucket=64)
+    assert p.bucket(1) == 8
+    assert p.bucket(9) == 16
+    assert p.bucket(64) == 64
+    assert p.static_buckets() == (8, 16, 32, 64)
+    with pytest.raises(ValueError):
+        p.bucket(65)
+
+
+def test_make_policy_coercions():
+    assert isinstance(make_policy(None), PowerOfTwoBuckets)
+    assert isinstance(make_policy("exact"), ExactBucketing)
+    assert make_policy("pow2:4:32").bucket(5) == 8
+    assert make_policy((8, 16)).bucket(10) == 16
+    p = ExplicitBuckets((4,))
+    assert make_policy(p) is p
+    with pytest.raises(ValueError):
+        make_policy("nope")
+
+
+# -- dispatcher (fake engines: fairness, backpressure, drain) -----------------
+
+class FakeEngine:
+    """Duck-typed engine: each request takes `cost` step() calls."""
+
+    def __init__(self, name, log, slots=1, cost=2):
+        self.name = name
+        self.log = log
+        self.cost = cost
+        self.slots = [None] * slots
+        self.queue = []
+        self._left = {}
+
+    def submit(self, req):
+        self.queue.append(req)
+
+    def free_slots(self):
+        return sum(1 for s in self.slots if s is None) - len(self.queue)
+
+    @property
+    def idle(self):
+        return not self.queue and all(s is None for s in self.slots)
+
+    def step(self):
+        self.log.append(self.name)
+        for i, s in enumerate(self.slots):
+            if s is None and self.queue:
+                req = self.queue.pop(0)
+                self.slots[i] = req
+                self._left[req.rid] = self.cost
+        finished = []
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            self._left[req.rid] -= 1
+            if self._left[req.rid] == 0:
+                req.generated.append(0)
+                req.done = True
+                req.t_first = req.t_done = time.perf_counter()
+                self.slots[i] = None
+                finished.append(req)
+        return finished
+
+
+def _fake_dispatcher(reqs_per_model=3, **kw):
+    log = []
+    d = Dispatcher(**kw)
+    d.register_model("a", FakeEngine("a", log))
+    d.register_model("b", FakeEngine("b", log))
+    for i in range(reqs_per_model):
+        d.submit("a", np.array([1], np.int32))
+        d.submit("b", np.array([1], np.int32))
+    return d, log
+
+
+def test_dispatcher_round_robin_rotation():
+    d, log = _fake_dispatcher()
+    d.step()
+    d.step()
+    # fairness: the model served first rotates every step
+    assert log[:4] == ["a", "b", "b", "a"]
+
+
+def test_dispatcher_drains_all_and_fires_callbacks():
+    seen = []
+    d = Dispatcher(max_pending=16)
+    log = []
+    d.register_model("a", FakeEngine("a", log))
+    d.register_model("b", FakeEngine("b", log))
+    for i in range(4):
+        d.submit("a" if i % 2 else "b", np.array([1], np.int32),
+                 on_complete=lambda model, req: seen.append((model, req.rid)))
+    done = d.run_until_drained()
+    assert len(done) == 4
+    assert d.idle and d.pending() == 0
+    assert sorted(r for _, r in seen) == [0, 1, 2, 3]
+    assert {m for m, _ in seen} == {"a", "b"}
+    assert d.metrics.requests_done == 4
+
+
+def test_dispatcher_completions_interleave_models():
+    d, _log = _fake_dispatcher(reqs_per_model=3)
+    done = d.run_until_drained()
+    models = [r.model for r in done]
+    # per-model engines progress together: no model finishes all its
+    # requests before the other finishes any (no starvation)
+    first_b = models.index("b")
+    last_a = len(models) - 1 - models[::-1].index("a")
+    assert first_b < last_a
+
+
+def test_dispatcher_backpressure():
+    d = Dispatcher(max_pending=2)
+    log = []
+    d.register_model("a", FakeEngine("a", log))
+    d.submit("a", np.array([1], np.int32))
+    d.submit("a", np.array([1], np.int32))
+    with pytest.raises(QueueFullError):
+        d.submit("a", np.array([1], np.int32))
+    assert d.metrics.rejected == 1
+    d.run_until_drained()
+    d.submit("a", np.array([1], np.int32))   # capacity freed by draining
+
+
+def test_dispatcher_rejects_unknown_model_and_duplicates():
+    d = Dispatcher()
+    log = []
+    d.register_model("a", FakeEngine("a", log))
+    with pytest.raises(KeyError):
+        d.submit("zzz", np.array([1], np.int32))
+    with pytest.raises(ValueError):
+        d.register_model("a", FakeEngine("a", log))
+
+
+# -- metrics ------------------------------------------------------------------
+
+def test_metrics_snapshot_shape():
+    from repro.dispatch import DispatchMetrics
+
+    m = DispatchMetrics()
+
+    class R:
+        generated = [1, 2, 3]
+        t_submit, t_first, t_done = 1.0, 1.5, 2.0
+
+    m.on_submit(1.0)
+    m.observe_request(R())
+    snap = m.snapshot(cache_stats={"hits": 1})
+    assert snap["requests_done"] == 1
+    assert snap["tokens_out"] == 3
+    assert snap["ttft_ms"]["p50"] == pytest.approx(500.0)
+    assert snap["per_token_ms"]["p50"] == pytest.approx(250.0)
+    assert snap["e2e_ms"]["max"] == pytest.approx(1000.0)
+    assert snap["wall_seconds"] == pytest.approx(1.0)
+    assert snap["tokens_per_second"] == pytest.approx(3.0)
+    assert snap["schedule_cache"] == {"hits": 1}

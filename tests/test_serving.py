@@ -1,0 +1,118 @@
+"""Serving-engine regressions: drain accounting, schedule-cache wiring, and
+dispatcher-vs-direct numerics on a real (smoke) model."""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+import repro.configs as C
+from repro.dispatch import Dispatcher, ScheduleCache
+from repro.models import init_model
+from repro.serving import Request, ServingEngine
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = dataclasses.replace(C.get("phi4-mini-3.8b", smoke=True), dtype="float32")
+    params, _ = init_model(jax.random.key(0), cfg)
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def shared_cache():
+    return ScheduleCache(capacity=16)
+
+
+def _engine(model, cache, **kw):
+    cfg, params = model
+    kw.setdefault("max_slots", 2)
+    kw.setdefault("max_len", 48)
+    kw.setdefault("prompt_buckets", (8, 16))
+    return ServingEngine(cfg, params, schedule_cache=cache, **kw)
+
+
+def _reqs(cfg, n, max_new=4, seed=1, plen=5):
+    rng = np.random.default_rng(seed)
+    return [
+        Request(rid=i, prompt=rng.integers(0, cfg.vocab, plen).astype(np.int32),
+                max_new_tokens=max_new)
+        for i in range(n)
+    ]
+
+
+def test_one_token_request_not_dropped(model, shared_cache):
+    """Regression: a request admitted and finished within the same step()
+    used to vanish from run_until_drained's return value."""
+    cfg, _ = model
+    eng = _engine(model, shared_cache)
+    eng.submit(_reqs(cfg, 1, max_new=1)[0])
+    done = eng.run_until_drained()
+    assert len(done) == 1
+    assert done[0].done
+    assert len(done[0].generated) == 1     # exactly one token, from prefill
+    assert done[0].t_done >= done[0].t_first > 0
+    assert eng.idle
+
+
+def test_mixed_lengths_all_reported_once(model, shared_cache):
+    cfg, _ = model
+    eng = _engine(model, shared_cache)
+    reqs = [r for i, r in enumerate(_reqs(cfg, 6))]
+    for i, r in enumerate(reqs):
+        r.max_new_tokens = 1 if i % 2 == 0 else 3
+        eng.submit(r)
+    done = eng.run_until_drained()
+    assert sorted(r.rid for r in done) == list(range(6))
+    for r in done:
+        assert len(r.generated) == r.max_new_tokens
+
+
+def test_step_returns_finished(model, shared_cache):
+    cfg, _ = model
+    eng = _engine(model, shared_cache)
+    eng.submit(_reqs(cfg, 1, max_new=1)[0])
+    finished = eng.step()
+    assert [r.rid for r in finished] == [0]
+
+
+def test_engines_share_sealed_executables(model):
+    """The tentpole property: a second engine over the same (cfg, shapes)
+    pays zero compiles — the pre-run amortizes through the cache."""
+    cache = ScheduleCache(capacity=16)
+    first = _engine(model, cache)          # pays the pre-runs
+    builds_after_first = cache.stats.builds
+    assert builds_after_first > 0
+    assert first.stats.prefill_compiles + first.stats.decode_compiles \
+        == builds_after_first
+    second = _engine(model, cache)
+    assert cache.stats.builds == builds_after_first
+    assert second.stats.prefill_compiles == 0
+    assert second.stats.decode_compiles == 0
+
+
+def test_bucketing_policy_replaces_prompt_buckets(model, shared_cache):
+    cfg, _ = model
+    eng = _engine(model, shared_cache, bucketing="pow2:8:16")
+    assert eng.prompt_buckets == (8, 16)
+    assert eng._bucket(5) == 8
+    with pytest.raises(ValueError):
+        eng._bucket(17)                    # 32 > pow2 max_bucket 16
+
+
+def test_dispatcher_matches_direct_engine(model, shared_cache):
+    """Token-identical outputs: dispatcher multiplexing vs direct serving."""
+    cfg, _ = model
+    direct = _engine(model, shared_cache)
+    for r in _reqs(cfg, 5, seed=3):
+        direct.submit(r)
+    ref = {r.rid: r.generated for r in direct.run_until_drained()}
+
+    disp = Dispatcher(max_pending=16)
+    disp.register_model("m", _engine(model, shared_cache))
+    for r in _reqs(cfg, 5, seed=3):
+        disp.submit_request("m", r)
+    got = {r.rid: r.generated for r in disp.run_until_drained()}
+    assert got == ref
+    assert disp.snapshot()["requests_done"] == 5

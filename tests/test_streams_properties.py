@@ -7,7 +7,7 @@ walk-through, checked over random DAGs with hypothesis.
 import itertools
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.graph import TaskGraph
 from repro.core.matching import ford_fulkerson, hopcroft_karp, matching_size
