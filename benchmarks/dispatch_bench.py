@@ -1,15 +1,19 @@
-"""Dispatch-layer benchmark: schedule-cache amortization + multi-tenant serving.
+"""Dispatch-layer benchmark: cache amortization + async multi-tenant serving.
 
-Two measurements backing ISSUE 1's acceptance criteria:
+Three measurements backing ISSUE 1/2 acceptance criteria:
 
 1. **warm vs cold** — a cold ``AoTScheduler.schedule`` (trace + stream
    assignment + memory plan + XLA AOT compile) against a warm
    ``ScheduleCache.get_or_schedule`` hit for the same (fn, shape).  The warm
    path must be ≥ 10× faster: that ratio IS the pre-run amortization the
    cache exists to buy.
-2. **multi-tenant** — ≥ 2 models × ≥ 3 prompt shapes through the
-   ``Dispatcher``, checked token-identical against direct ``ServingEngine``
-   runs, reporting aggregate throughput.
+2. **async multi-tenant** — ≥ 2 models × ≥ 3 prompt shapes submitted as
+   futures through the ``AsyncDispatcher`` (stepping on a daemon thread),
+   checked token-identical against direct ``ServingEngine`` runs, reporting
+   aggregate throughput, submit-side latency, and that the stepping thread
+   compiled nothing.
+3. **weighted fairness** — two saturated tenants at 3:1 weights; reports the
+   realized decode-quantum ratio (should sit at ~3).
 
     PYTHONPATH=src python -m benchmarks.dispatch_bench
 """
@@ -24,7 +28,7 @@ import numpy as np
 
 import repro.configs as C
 from repro.core import AoTScheduler
-from repro.dispatch import Dispatcher, ScheduleCache
+from repro.dispatch import AsyncDispatcher, ScheduleCache
 from repro.models import init_model
 from repro.serving import Request, ServingEngine
 
@@ -78,12 +82,17 @@ def _engine(cfg, params, cache=None) -> ServingEngine:
     )
 
 
-def multi_tenant() -> list[tuple[str, float, str]]:
+def _cases():
     cases = []
     for arch in ARCHS:
         cfg = dataclasses.replace(C.get(arch, smoke=True), dtype="float32")
         params, _ = init_model(jax.random.key(0), cfg)
         cases.append((arch, cfg, params))
+    return cases
+
+
+def multi_tenant() -> list[tuple[str, float, str]]:
+    cases = _cases()
 
     # -- reference: each model served directly, in isolation ---------------
     reference: dict[str, list[list[int]]] = {}
@@ -94,16 +103,19 @@ def multi_tenant() -> list[tuple[str, float, str]]:
         done = eng.run_until_drained()
         reference[arch] = [r.generated for r in sorted(done, key=lambda r: r.rid)]
 
-    # -- dispatcher: same traffic, multiplexed through one front door ------
+    # -- async dispatcher: same traffic, futures through one front door ----
     cache = ScheduleCache(capacity=32)
-    disp = Dispatcher(max_pending=1024)
+    disp = AsyncDispatcher(max_pending=1024)
     for arch, cfg, params in cases:
         disp.register_model(arch, _engine(cfg, params, cache))
-    for arch, cfg, params in cases:
-        for r in _requests(cfg):
-            disp.submit_request(arch, r)
     t0 = time.perf_counter()
-    done = disp.run_until_drained()
+    futures = []
+    with disp:
+        for arch, cfg, params in cases:
+            for r in _requests(cfg):
+                futures.append(disp.submit_request(arch, r))
+        submit_us = (time.perf_counter() - t0) * 1e6
+        done = [f.result(timeout=600) for f in futures]
     wall = time.perf_counter() - t0
 
     # byte-identical outputs (greedy argmax over identical slot traffic)
@@ -116,17 +128,52 @@ def multi_tenant() -> list[tuple[str, float, str]]:
     snap = disp.snapshot()
     n_req = len(done)
     return [(
-        "dispatch/multi_tenant",
+        "dispatch/async_multi_tenant",
         wall / n_req * 1e6 if n_req else 0.0,
         f"models={len(cases)};shapes={len(PROMPT_LENS)};requests={n_req};"
         f"tok_per_s={snap['tokens_per_second']:.0f};"
         f"identical={'yes' if mismatches == 0 else 'NO'};"
+        f"submit_us_per_req={submit_us / n_req if n_req else 0:.0f};"
+        f"builds_on_thread={snap['async']['builds_on_thread']};"
         f"cache_builds={cache.stats.builds};cache_hits={cache.stats.hits}",
     )]
 
 
+def weighted_fairness() -> list[tuple[str, float, str]]:
+    """Two saturated tenants at 3:1 weights: realized decode-quantum ratio."""
+    cases = _cases()[:2]
+    cache = ScheduleCache(capacity=32)
+    disp = AsyncDispatcher(max_pending=1024, fairness="weighted")
+    for (arch, cfg, params), weight in zip(cases, (3.0, 1.0)):
+        disp.register_model(arch, _engine(cfg, params, cache), weight=weight)
+    t0 = time.perf_counter()
+    by_model: dict[str, list] = {}
+    with disp:
+        # long decodes keep both lanes saturated; sample the quantum split
+        # the moment the heavy lane drains (afterwards the light lane runs
+        # alone and the cumulative ratio would wash out toward 1:1)
+        for arch, cfg, params in cases:
+            by_model[arch] = [
+                disp.submit_request(arch, r)
+                for r in _requests(cfg, n=6, max_new=24)
+            ]
+        for f in by_model[cases[0][0]]:
+            f.result(timeout=600)
+        served = dict(disp.snapshot()["fairness"]["served_steps"])
+        for f in by_model[cases[1][0]]:
+            f.result(timeout=600)
+    wall = time.perf_counter() - t0
+    heavy, light = (served[c[0]] for c in cases)
+    return [(
+        "dispatch/weighted_fairness",
+        wall * 1e6 / max(sum(served.values()), 1),
+        f"weights=3:1;steps_heavy={heavy};steps_light={light};"
+        f"ratio={heavy / light if light else float('inf'):.2f}",
+    )]
+
+
 def run() -> list[tuple[str, float, str]]:
-    return warm_vs_cold() + multi_tenant()
+    return warm_vs_cold() + multi_tenant() + weighted_fairness()
 
 
 if __name__ == "__main__":

@@ -256,7 +256,7 @@ class Nimble:
             return self                       # already sealed for these shapes
         if self._cache is not None:
             self._schedule = self._cache.get_or_schedule(
-                self._fn, *example_args, scheduler=self._sched
+                self._fn, *example_args, scheduler=self._sched, key=key
             )
         else:
             self._schedule = self._sched.schedule(self._fn, *example_args)

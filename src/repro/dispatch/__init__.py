@@ -4,11 +4,15 @@ Turns the single-schedule ``Nimble`` wrapper into a serving layer: sealed
 schedules live in a shared LRU :class:`ScheduleCache` keyed by
 :class:`~repro.core.aot.ScheduleKey`; incoming shapes map onto cached
 shapes via :mod:`bucketing`; the :class:`Dispatcher` multiplexes tenant
-requests over per-model engines with fairness and backpressure; and
-:mod:`metrics` reports the latency/throughput/cache numbers.  See
-DESIGN.md §dispatch for the mapping back to the paper.
+requests over per-model engines with pluggable :mod:`fairness` (round-robin
+rotation, weighted fair queueing, token-rate quotas) and backpressure; the
+:class:`AsyncDispatcher` puts that loop on a daemon thread behind a
+future-returning ``submit``; and :mod:`metrics` reports the
+latency/throughput/cache numbers.  See DESIGN.md §dispatch for the mapping
+back to the paper.
 """
 
+from .async_dispatcher import AsyncDispatcher
 from .bucketing import (
     BucketingPolicy,
     ExactBucketing,
@@ -17,13 +21,22 @@ from .bucketing import (
     make_policy,
 )
 from .cache import CacheStats, ScheduleCache
-from .dispatcher import Dispatcher, QueueFullError
+from .dispatcher import Dispatcher, DrainTimeoutError, QueueFullError
+from .fairness import (
+    FairnessPolicy,
+    QuotaFairness,
+    RoundRobinFairness,
+    WeightedFairness,
+    make_fairness,
+)
 from .metrics import DispatchMetrics, LatencySeries, percentile
 
 __all__ = [
     "BucketingPolicy", "ExactBucketing", "ExplicitBuckets",
     "PowerOfTwoBuckets", "make_policy",
     "CacheStats", "ScheduleCache",
-    "Dispatcher", "QueueFullError",
+    "Dispatcher", "AsyncDispatcher", "QueueFullError", "DrainTimeoutError",
+    "FairnessPolicy", "RoundRobinFairness", "WeightedFairness",
+    "QuotaFairness", "make_fairness",
     "DispatchMetrics", "LatencySeries", "percentile",
 ]

@@ -1,0 +1,404 @@
+"""Async front door: future-returning ``submit`` over a stepping thread.
+
+Nimble's run-time loop is pure submission — every scheduling decision was
+paid ahead of time (paper §4.1, §4.3) — but the synchronous ``Dispatcher``
+still makes callers *host* that loop: ``run_until_drained`` blocks the
+submitting thread.  :class:`AsyncDispatcher` moves the loop onto a daemon
+thread so the caller's critical path is exactly one bounded-queue append:
+
+    async_disp = AsyncDispatcher(fairness="weighted")
+    async_disp.register_model("m", engine, weight=3.0)
+    async_disp.start()
+    fut = async_disp.submit("m", prompt)      # returns immediately
+    req = fut.result(timeout=30)              # tokens in req.generated
+    async_disp.stop()                         # drains, then joins
+
+Invariant (the paper's): the stepping thread NEVER traces or compiles — it
+only replays sealed executables.  Engines must be warmed at registration
+(finite bucketing policies warm eagerly; an exact policy can lazily build
+on the stepping thread, which the ``builds_on_thread`` counter exposes so
+tests and operators can assert the invariant holds).
+
+Locking protocol (deadlock-free by ordering): the stepping thread and
+submitters take the dispatcher's lock first and this class's condition
+second, never the reverse — ``drain`` and ``stop`` wait only on
+loop-published state (``_idle``, ``_pending``) and never call into the
+dispatcher while holding the condition.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from concurrent.futures import Future
+from typing import Any, Callable, Optional
+
+from .dispatcher import Dispatcher, DrainTimeoutError
+from .fairness import FairnessSpec
+from .metrics import DispatchMetrics
+
+
+class AsyncDispatcher:
+    """Threaded serving front door wrapping a (thread-safe) ``Dispatcher``.
+
+    Composition, not inheritance: the synchronous dispatcher keeps owning
+    lanes/fairness/backpressure; this class owns only the thread, the
+    futures, and the lifecycle.  Either construct it over an existing
+    ``Dispatcher`` or pass the same keyword arguments through.
+    """
+
+    def __init__(
+        self,
+        dispatcher: Optional[Dispatcher] = None,
+        *,
+        max_pending: int = 256,
+        metrics: Optional[DispatchMetrics] = None,
+        fairness: FairnessSpec = None,
+        idle_wait: float = 0.02,
+    ) -> None:
+        if dispatcher is None:
+            dispatcher = Dispatcher(
+                max_pending=max_pending, metrics=metrics, fairness=fairness
+            )
+        self.dispatcher = dispatcher
+        self.idle_wait = idle_wait
+        self._cv = threading.Condition()
+        self._thread: Optional[threading.Thread] = None
+        self._stop_flag = False
+        self._idle = True                 # loop-published; read under _cv
+        self._error: Optional[BaseException] = None
+        self._pending: set[Future] = set()
+        # stepping-thread build attribution: the cache tags builds with the
+        # builder's thread ident (unique among live threads), so counting
+        # needs no racy before/after deltas.  Counts from past stepping
+        # threads are frozen at exit (idents can be recycled once dead).
+        self._live_ident: Optional[int] = None
+        self._live_baseline = 0      # ident's pre-existing count (recycling)
+        self._builds_frozen = 0
+
+    # -- passthroughs ------------------------------------------------------
+
+    def register_model(self, name: str, engine: Any, *, weight: float = 1.0) -> Any:
+        return self.dispatcher.register_model(name, engine, weight=weight)
+
+    @property
+    def models(self) -> tuple[str, ...]:
+        return self.dispatcher.models
+
+    def engine(self, name: str) -> Any:
+        return self.dispatcher.engine(name)
+
+    def pending(self) -> int:
+        return self.dispatcher.pending()
+
+    @property
+    def metrics(self) -> DispatchMetrics:
+        return self.dispatcher.metrics
+
+    # -- lifecycle ---------------------------------------------------------
+
+    @property
+    def running(self) -> bool:
+        return self._thread is not None and self._thread.is_alive()
+
+    def start(self) -> "AsyncDispatcher":
+        """Spawn the daemon stepping thread (idempotent while running)."""
+        with self._cv:
+            # check-and-spawn is one critical section: two concurrent
+            # start() calls must not each observe "not running" and spawn
+            # rival stepping threads
+            if self._error is not None:
+                raise RuntimeError(
+                    "dispatcher previously failed; construct a new one"
+                ) from self._error
+            if self._thread is not None and self._thread.is_alive():
+                return self
+            self._stop_flag = False
+            self._thread = threading.Thread(
+                target=self._run, name="repro-dispatch-step", daemon=True
+            )
+            self._thread.start()
+        return self
+
+    def stop(self, *, drain: bool = True, timeout: Optional[float] = None) -> None:
+        """Stop the stepping thread; by default drain all work first.
+
+        The thread is stopped even when the drain raises (a wedged engine
+        must not leave the loop running behind a DrainTimeoutError).  Any
+        futures still unresolved after the thread exits — ``drain=False``
+        leftovers, or stragglers that raced the stop — are cancelled, never
+        silently stranded.  ``timeout`` bounds both the drain and the join.
+        """
+        if self._thread is None:
+            return
+        alive = False
+        try:
+            if drain and self._error is None:
+                self.drain(timeout=timeout)
+        finally:
+            with self._cv:
+                self._stop_flag = True
+                self._cv.notify_all()
+            self._thread.join(10.0 if timeout is None else max(timeout, 0.1))
+            alive = self._thread.is_alive()
+            if not alive:
+                self._thread = None
+            with self._cv:
+                leftovers, self._pending = self._pending, set()
+            for fut in leftovers:
+                fut.cancel()
+        if alive:                              # pragma: no cover - diagnostics
+            raise DrainTimeoutError("stepping thread failed to stop")
+
+    def __enter__(self) -> "AsyncDispatcher":
+        return self.start()
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.stop(drain=exc_type is None)
+
+    # -- submission --------------------------------------------------------
+
+    def submit(
+        self,
+        model: str,
+        prompt: Any,
+        *,
+        max_new_tokens: int = 16,
+        tenant: str = "",
+        on_complete: Optional[Callable[[str, Any], None]] = None,
+    ) -> Future:
+        """Enqueue a request; returns a ``Future`` resolving to the finished
+        ``Request`` (tokens in ``.generated``).
+
+        Raises ``QueueFullError`` synchronously at capacity (backpressure
+        belongs on the submitter, not inside the future), and raises
+        ``RuntimeError`` when the loop is dead or was never started — new
+        traffic is never silently queued behind a loop that will not serve
+        it.
+        """
+        fut = self._new_future()
+        try:
+            self.dispatcher.submit(
+                model,
+                prompt,
+                max_new_tokens=max_new_tokens,
+                tenant=tenant,
+                on_complete=self._completion(fut, on_complete),
+            )
+        except BaseException:
+            self._forget(fut)
+            raise
+        self._kick()
+        return fut
+
+    def submit_request(self, model: str, req: Any) -> Future:
+        """Enqueue a caller-constructed ``Request``; returns its ``Future``.
+
+        Chains (does not replace) any ``on_complete`` already on the
+        request.
+        """
+        fut = self._new_future()
+        original_cb = getattr(req, "on_complete", None)
+        req.on_complete = self._completion(fut, original_cb)
+        try:
+            self.dispatcher.submit_request(model, req)
+        except BaseException:
+            # a rejected request must come back unchanged, or a retry would
+            # chain the dead future's wrapper under its own
+            req.on_complete = original_cb
+            self._forget(fut)
+            raise
+        self._kick()
+        return fut
+
+    # -- introspection -----------------------------------------------------
+
+    def _count_builds_of(self, ident: Optional[int], baseline: int) -> int:
+        if ident is None:
+            return 0
+        raw = sum(
+            c.stats.builds_by_thread.get(ident, 0) for c in self._caches()
+        )
+        return max(0, raw - baseline)
+
+    @property
+    def builds_on_thread(self) -> int:
+        """Schedule-cache builds performed BY the stepping thread (should
+        stay 0 when engines are warmed — the paper's pure-submission
+        invariant).  Attribution is by builder thread ident, so concurrent
+        foreground compiles (late registrations, Nimble.prepare on a shared
+        cache) are never miscounted against the stepping thread."""
+        # snapshot frozen+ident atomically, count outside _cv (counting
+        # walks the dispatcher, which must never happen while holding _cv)
+        with self._cv:
+            frozen = self._builds_frozen
+            ident = self._live_ident
+            baseline = self._live_baseline
+        return frozen + self._count_builds_of(ident, baseline)
+
+    def snapshot(self) -> dict:
+        snap = self.dispatcher.snapshot()
+        builds = self.builds_on_thread
+        with self._cv:
+            snap["async"] = {
+                "running": self.running,
+                "futures_pending": len(self._pending),
+                "builds_on_thread": builds,
+                "failed": self._error is not None,
+            }
+        return snap
+
+    # -- draining ----------------------------------------------------------
+
+    def drain(self, timeout: Optional[float] = None) -> None:
+        """Block until every submitted future has resolved.
+
+        Raises :class:`DrainTimeoutError` on timeout and re-raises the
+        stepping thread's exception if it died.
+        """
+        if not self.running:
+            self._ensure_alive()
+            if self.dispatcher.idle and not self._pending:
+                return
+            raise RuntimeError("cannot drain: dispatcher is not running")
+        deadline = None if timeout is None else (_now() + timeout)
+        # never touch the dispatcher (its lock) while holding _cv: the
+        # stepping thread takes them in the opposite nesting
+        with self._cv:
+            while True:
+                if self._error is not None:
+                    raise RuntimeError(
+                        "stepping thread failed"
+                    ) from self._error
+                if self._idle and not self._pending:
+                    return
+                remaining = self.idle_wait if deadline is None else deadline - _now()
+                if remaining <= 0:
+                    unresolved = len(self._pending)
+                    break
+                self._cv.wait(min(remaining, self.idle_wait))
+        raise DrainTimeoutError(
+            f"drain timed out with {unresolved} futures unresolved "
+            f"({self.dispatcher.pending()} requests pending)"
+        )
+
+    # -- internals ---------------------------------------------------------
+
+    def _new_future(self) -> Future:
+        fut: Future = Future()
+        with self._cv:
+            # the liveness checks and the pending-set insert must share one
+            # critical section: checked-then-added across two would let a
+            # concurrent _fail() miss this future and leave it unresolvable
+            if self._error is not None:
+                raise RuntimeError(
+                    "stepping thread failed; no new submissions accepted"
+                ) from self._error
+            if self._thread is None or not self._thread.is_alive():
+                raise RuntimeError(
+                    "dispatcher is not running; call start() before submit"
+                )
+            self._pending.add(fut)
+        return fut
+
+    def _forget(self, fut: Future) -> None:
+        with self._cv:
+            self._pending.discard(fut)
+
+    def _ensure_alive(self) -> None:
+        with self._cv:
+            if self._error is not None:
+                raise RuntimeError(
+                    "stepping thread failed; no new submissions accepted"
+                ) from self._error
+
+    def _completion(
+        self, fut: Future, user_cb: Optional[Callable[[str, Any], None]]
+    ) -> Callable[[str, Any], None]:
+        # runs on the stepping thread, inside Dispatcher.step's lock; taking
+        # _cv here respects the dispatcher-lock→condition ordering.  The
+        # future resolves BEFORE the user callback runs: a raising callback
+        # poisons the dispatcher (loudly, via _fail) but must never leave an
+        # already-completed request's future unresolvable.
+        def done(model: str, req: Any) -> None:
+            self._forget(fut)
+            if fut.set_running_or_notify_cancel():
+                fut.set_result(req)
+            if user_cb is not None:
+                user_cb(model, req)
+
+        return done
+
+    def _kick(self) -> None:
+        with self._cv:
+            self._idle = False
+            self._cv.notify_all()
+
+    def _caches(self) -> list:
+        # only queried off the hot loop (builds_on_thread / snapshot), so a
+        # fresh walk per call is fine and always sees late registrations
+        seen: dict[int, Any] = {}
+        for name in self.dispatcher.models:
+            cache = getattr(self.dispatcher.engine(name), "schedule_cache", None)
+            if cache is not None:
+                seen.setdefault(id(cache), cache)
+        return list(seen.values())
+
+    def _run(self) -> None:
+        ident = threading.get_ident()
+        # the OS recycles idents of dead threads: any counts already tagged
+        # with ours belong to a previous occupant, not this stepping thread
+        baseline = sum(
+            c.stats.builds_by_thread.get(ident, 0) for c in self._caches()
+        )
+        with self._cv:
+            self._live_baseline = baseline
+            self._live_ident = ident
+        try:
+            while True:
+                with self._cv:
+                    if self._stop_flag:
+                        return
+                if self.dispatcher.idle:
+                    with self._cv:
+                        # publish idleness and sleep; a submit racing this
+                        # block resets _idle under the same condition, so the
+                        # stale publish is corrected before anyone trusts it
+                        if not self._pending:
+                            self._idle = True
+                            self._cv.notify_all()
+                        if self._stop_flag:
+                            return
+                        if self._idle:
+                            self._cv.wait(self.idle_wait)
+                    continue
+                try:
+                    self.dispatcher.step()
+                except BaseException as exc:  # noqa: BLE001 - fail all futures
+                    self._fail(exc)
+                    return
+                with self._cv:
+                    self._cv.notify_all()
+        finally:
+            # freeze this thread's build count: once the thread is dead its
+            # ident may be recycled by an unrelated foreground thread.  The
+            # count happens before taking _cv (lock ordering), and the swap
+            # is atomic under _cv so builds_on_thread readers never see the
+            # live count both frozen and still live
+            live = self._count_builds_of(ident, baseline)
+            with self._cv:
+                self._builds_frozen += live
+                self._live_ident = None
+
+    def _fail(self, exc: BaseException) -> None:
+        with self._cv:
+            self._error = exc
+            victims, self._pending = self._pending, set()
+            self._cv.notify_all()
+        for fut in victims:
+            if fut.set_running_or_notify_cancel():
+                fut.set_exception(exc)
+
+
+def _now() -> float:
+    return time.monotonic()

@@ -12,6 +12,12 @@ traffic the same (function, shape) arrives from many callers, so the sealed
   unbounded growth is a memory leak under shape churn);
 * build-coalescing: concurrent callers that miss on the same key wait on one
   per-key build lock, so a pre-run is never duplicated.
+
+Thread-safety contract: every public method is safe from any thread.  One
+internal lock guards the entry map and stats; builds run *outside* it (so
+different keys compile in parallel) under per-key locks.  A failed build
+leaves its key retryable: the next caller (still coalescing on the same
+per-key lock) performs a fresh build.
 """
 
 from __future__ import annotations
@@ -32,6 +38,10 @@ class CacheStats:
     evictions: int = 0
     builds: int = 0               # actual pre-runs (== misses that compiled)
     build_seconds: float = 0.0    # total time spent inside builders
+    # builds attributed to the thread that ran them (ident -> count): lets a
+    # stepping thread prove it never compiled (AsyncDispatcher's §4.3
+    # invariant) without guessing from racy before/after deltas
+    builds_by_thread: dict = dataclasses.field(default_factory=dict)
 
     @property
     def hit_rate(self) -> float:
@@ -54,6 +64,20 @@ class _Entry:
     value: Any
     pin: Any = None               # keeps fn objects alive while cached, so
     build_seconds: float = 0.0    # id(fn) in the key cannot be recycled
+    arena_bytes: int = 0          # reserved-memory estimate (0 if unknown)
+
+
+def _arena_bytes(value: Any) -> int:
+    """Reserved arena estimate of a cached artifact.
+
+    ``TaskSchedule`` carries it in ``stats.arena_bytes``; raw executables
+    (the serving engine's prefill/decode path) report 0 — groundwork for
+    byte-based eviction (ROADMAP "cache memory accounting")."""
+    stats = getattr(value, "stats", None)
+    try:
+        return int(getattr(stats, "arena_bytes", 0) or 0)
+    except (TypeError, ValueError):
+        return 0
 
 
 class ScheduleCache:
@@ -114,7 +138,9 @@ class ScheduleCache:
 
     def put(self, key: Any, value: Any, *, pin: Any = None) -> None:
         with self._mu:
-            self._entries[key] = _Entry(value=value, pin=pin)
+            self._entries[key] = _Entry(
+                value=value, pin=pin, arena_bytes=_arena_bytes(value)
+            )
             self._entries.move_to_end(key)
             self._evict_locked()
 
@@ -151,13 +177,22 @@ class ScheduleCache:
                     self.stats.misses -= 1
                     return entry.value
             t0 = time.perf_counter()
+            # on failure the per-key lock stays in _build_locks: waiters and
+            # later callers coalesce on it for the retry.  Popping it here
+            # would let a fresh caller mint a second lock and duplicate the
+            # build a waiter is already retrying.
             value = build()
             dt = time.perf_counter() - t0
+            tid = threading.get_ident()
             with self._mu:
                 self.stats.builds += 1
                 self.stats.build_seconds += dt
+                self.stats.builds_by_thread[tid] = (
+                    self.stats.builds_by_thread.get(tid, 0) + 1
+                )
                 self._entries[key] = _Entry(
-                    value=value, pin=pin, build_seconds=dt
+                    value=value, pin=pin, build_seconds=dt,
+                    arena_bytes=_arena_bytes(value),
                 )
                 self._entries.move_to_end(key)
                 self._evict_locked()
@@ -170,13 +205,45 @@ class ScheduleCache:
         *example_args: Any,
         scheduler: Optional[AoTScheduler] = None,
         fn_id: Optional[str] = None,
+        key: Optional[ScheduleKey] = None,
     ) -> TaskSchedule:
-        """The Nimble path: one shared pre-run per (fn, shapes, options)."""
+        """The Nimble path: one shared pre-run per (fn, shapes, options).
+
+        ``key`` lets a caller that already derived the :class:`ScheduleKey`
+        (``Nimble.prepare`` does, to detect no-op re-prepares) skip the
+        second flatten of the argument pytree."""
         sched = scheduler or self.scheduler
-        key = sched.schedule_key(fn, *example_args, fn_id=fn_id)
+        if key is None:
+            key = sched.schedule_key(fn, *example_args, fn_id=fn_id)
         return self.get_or_build(
             key, lambda: sched.schedule(fn, *example_args), pin=fn
         )
+
+    def snapshot(self) -> dict:
+        """Cache state for metrics: stats plus per-entry memory accounting.
+
+        ``entries`` lists (LRU→MRU) each cached artifact's ``arena_bytes``
+        (the memory the sealed schedule statically reserves — from
+        ``TaskSchedule.stats``; 0 for raw executables) and build time;
+        ``arena_bytes_total`` is their sum, the number a byte-based evictor
+        will budget against (ROADMAP "cache memory accounting").
+        """
+        with self._mu:
+            entries = [
+                {
+                    "key": repr(key),
+                    "arena_bytes": e.arena_bytes,
+                    "build_seconds": e.build_seconds,
+                }
+                for key, e in self._entries.items()
+            ]
+            return {
+                "capacity": self.capacity,
+                "size": len(entries),
+                "arena_bytes_total": sum(e["arena_bytes"] for e in entries),
+                "entries": entries,
+                "stats": self.stats.as_dict(),
+            }
 
     def invalidate(self, key: Any) -> bool:
         with self._mu:

@@ -10,26 +10,35 @@ but cooperative and in-process — the repo's engines are synchronous):
 
     submit(model, prompt)           # backpressure: bounded total queue
       └─ per-model lane (FIFO)
-    step()                          # round-robin across models (fairness)
+    step()                          # fairness policy picks lanes to serve
       ├─ admission control: fill free engine slots from the model's lane
       ├─ engine.step(): one sealed decode step + prefills
       └─ completion callbacks + metrics for every finished request
 
-Fairness is round-robin over *models*: each ``step()`` rotates which lane
-admits and decodes first, so a flood on one model cannot starve another.
-Backpressure is a bounded pending count: ``submit`` raises
+Fairness is pluggable (:mod:`repro.dispatch.fairness`): the default
+``round_robin`` policy rotates which lane admits and decodes first, so a
+flood on one model cannot starve another; ``weighted`` gives lanes decode
+quanta proportional to their weights; ``quota`` enforces token-rate
+budgets.  Backpressure is a bounded pending count: ``submit`` raises
 :class:`QueueFullError` once ``max_pending`` requests are queued or
 in-flight, pushing the wait upstream instead of growing memory.
+
+Thread-safety: every public method takes one reentrant lock, so a
+background stepping thread (``AsyncDispatcher``) and foreground submitters
+interleave safely.  The lock is coarse — ``submit`` can wait out one engine
+step — which is the right trade at this scale; see DESIGN.md §open-seams.
 """
 
 from __future__ import annotations
 
+import threading
 import time
 from collections import deque
 from typing import Any, Callable, Optional
 
 import numpy as np
 
+from .fairness import FairnessPolicy, FairnessSpec, make_fairness
 from .metrics import DispatchMetrics
 
 
@@ -37,8 +46,12 @@ class QueueFullError(RuntimeError):
     """Raised by :meth:`Dispatcher.submit` when the bounded queue is full."""
 
 
+class DrainTimeoutError(RuntimeError):
+    """Raised when a drain exhausts its step/time budget with work pending."""
+
+
 class Dispatcher:
-    """Round-robin multi-tenant front door over per-model serving engines.
+    """Multi-tenant front door over per-model serving engines.
 
     Engines are duck-typed: anything with ``submit(request)``,
     ``step() -> list[Request]``, ``free_slots()``, and ``idle`` works
@@ -50,46 +63,56 @@ class Dispatcher:
         *,
         max_pending: int = 256,
         metrics: Optional[DispatchMetrics] = None,
+        fairness: FairnessSpec = None,
+        completed_log: int = 4096,
     ) -> None:
         if max_pending < 1:
             raise ValueError(f"max_pending must be >= 1, got {max_pending}")
         self.max_pending = max_pending
         self.metrics = metrics or DispatchMetrics()
+        self.fairness = make_fairness(fairness)
         self._engines: dict[str, Any] = {}
         self._lanes: dict[str, deque] = {}
         self._order: list[str] = []
-        self._rr = 0                     # rotation cursor (fairness)
         self._next_rid = 0
-        self.completed: list = []        # finished Requests, completion order
+        # finished Requests, completion order; bounded — a long-running
+        # service must not retain every request it ever served
+        self.completed: deque = deque(maxlen=completed_log)
+        self._mu = threading.RLock()     # guards all mutable dispatch state
 
     # -- registration ------------------------------------------------------
 
-    def register_model(self, name: str, engine: Any) -> Any:
-        if name in self._engines:
-            raise ValueError(f"model {name!r} already registered")
-        self._engines[name] = engine
-        self._lanes[name] = deque()
-        self._order.append(name)
-        return engine
+    def register_model(self, name: str, engine: Any, *, weight: float = 1.0) -> Any:
+        with self._mu:
+            if name in self._engines:
+                raise ValueError(f"model {name!r} already registered")
+            self._engines[name] = engine
+            self._lanes[name] = deque()
+            self._order.append(name)
+            self.fairness.register(name, weight=weight)
+            return engine
 
     @property
     def models(self) -> tuple[str, ...]:
-        return tuple(self._order)
+        with self._mu:
+            return tuple(self._order)
 
     def engine(self, name: str) -> Any:
-        return self._engines[name]
+        with self._mu:
+            return self._engines[name]
 
     # -- submission (backpressure) -----------------------------------------
 
     def pending(self) -> int:
         """Requests queued in lanes plus live in the engines."""
-        lanes = sum(len(q) for q in self._lanes.values())
-        live = sum(
-            len(getattr(e, "queue", ())) +
-            sum(1 for s in getattr(e, "slots", ()) if s is not None)
-            for e in self._engines.values()
-        )
-        return lanes + live
+        with self._mu:
+            lanes = sum(len(q) for q in self._lanes.values())
+            live = sum(
+                len(getattr(e, "queue", ())) +
+                sum(1 for s in getattr(e, "slots", ()) if s is not None)
+                for e in self._engines.values()
+            )
+            return lanes + live
 
     def submit(
         self,
@@ -103,97 +126,150 @@ class Dispatcher:
         """Enqueue one request for ``model``; returns the ``Request``."""
         from repro.serving.engine import Request  # lazy: avoid import cycle
 
-        if model not in self._engines:
-            raise KeyError(f"unknown model {model!r}")
-        if self.pending() >= self.max_pending:
-            self.metrics.on_reject()
-            raise QueueFullError(
-                f"dispatcher at capacity ({self.max_pending} pending)"
+        with self._mu:
+            if model not in self._engines:
+                raise KeyError(f"unknown model {model!r}")
+            if self.pending() >= self.max_pending:
+                self.metrics.on_reject()
+                raise QueueFullError(
+                    f"dispatcher at capacity ({self.max_pending} pending)"
+                )
+            req = Request(
+                rid=self._next_rid,
+                prompt=np.asarray(prompt, np.int32),
+                max_new_tokens=max_new_tokens,
+                tenant=tenant,
+                model=model,
+                on_complete=on_complete,
             )
-        req = Request(
-            rid=self._next_rid,
-            prompt=np.asarray(prompt, np.int32),
-            max_new_tokens=max_new_tokens,
-            tenant=tenant,
-            model=model,
-            on_complete=on_complete,
-        )
-        self._next_rid += 1
-        req.t_submit = time.perf_counter()
-        self.metrics.on_submit(req.t_submit)
-        self._lanes[model].append(req)
-        return req
+            self._validate_locked(model, req)
+            self._next_rid += 1
+            req.t_submit = time.perf_counter()
+            self.metrics.on_submit(req.t_submit)
+            self._lanes[model].append(req)
+            return req
 
     def submit_request(self, model: str, req: Any) -> Any:
         """Enqueue a caller-constructed ``Request`` (keeps its rid/fields)."""
-        if model not in self._engines:
-            raise KeyError(f"unknown model {model!r}")
-        if self.pending() >= self.max_pending:
-            self.metrics.on_reject()
-            raise QueueFullError(
-                f"dispatcher at capacity ({self.max_pending} pending)"
-            )
-        req.model = model
-        req.t_submit = time.perf_counter()
-        self.metrics.on_submit(req.t_submit)
-        self._lanes[model].append(req)
-        return req
+        with self._mu:
+            if model not in self._engines:
+                raise KeyError(f"unknown model {model!r}")
+            if self.pending() >= self.max_pending:
+                self.metrics.on_reject()
+                raise QueueFullError(
+                    f"dispatcher at capacity ({self.max_pending} pending)"
+                )
+            self._validate_locked(model, req)
+            req.model = model
+            req.t_submit = time.perf_counter()
+            self.metrics.on_submit(req.t_submit)
+            self._lanes[model].append(req)
+            return req
+
+    def _validate_locked(self, model: str, req: Any) -> None:
+        """An unservable request (e.g. prompt beyond the engine's bucket
+        family) must raise HERE, on the submitter — once it reaches a lane,
+        the failure would surface on the stepping thread and poison every
+        tenant's in-flight work."""
+        validate = getattr(self._engines[model], "validate_request", None)
+        if validate is not None:
+            validate(req)
 
     # -- the serving loop --------------------------------------------------
 
-    def step(self) -> list:
-        """One dispatch iteration over all models; returns requests that
-        finished during it.  Round-robin: the lane that admits/decodes first
-        rotates every step."""
-        n = len(self._order)
-        if n == 0:
-            return []
-        order = [self._order[(self._rr + i) % n] for i in range(n)]
-        self._rr = (self._rr + 1) % n
+    @staticmethod
+    def _engine_tokens(stats: Any) -> Optional[int]:
+        """Total tokens an engine has emitted (prefill + decode), or None
+        when the engine keeps no token stats."""
+        out = getattr(stats, "tokens_out", None)
+        if out is None:
+            return None
+        return out + getattr(stats, "prefill_tokens", 0)
 
-        finished = []
-        for name in order:
-            engine = self._engines[name]
-            lane = self._lanes[name]
-            # admission control: only hand the engine what it can seat now,
-            # so queueing (and therefore backpressure) stays visible here
-            while lane and engine.free_slots() > 0:
-                engine.submit(lane.popleft())
-            for req in engine.step():
-                self.metrics.observe_request(req)
-                self.completed.append(req)
-                finished.append(req)
-                cb = getattr(req, "on_complete", None)
-                if cb is not None:
-                    cb(name, req)
-        return finished
+    def _active_locked(self) -> list[str]:
+        return [
+            name for name in self._order
+            if self._lanes[name] or not self._engines[name].idle
+        ]
+
+    def step(self) -> list:
+        """One dispatch quantum; returns requests that finished during it.
+
+        The fairness policy picks which active lanes (lanes with queued or
+        in-flight work) are served and in what order; each served lane is
+        charged the decode step and the tokens it produced, so ``weighted``
+        and ``quota`` policies converge on their configured shares.
+        """
+        with self._mu:
+            active = self._active_locked()
+            if not active:
+                return []
+            finished = []
+            for name in self.fairness.select(active):
+                engine = self._engines[name]
+                lane = self._lanes[name]
+                # admission control: only hand the engine what it can seat
+                # now, so queueing (and thus backpressure) stays visible here
+                while lane and engine.free_slots() > 0:
+                    engine.submit(lane.popleft())
+                stats = getattr(engine, "stats", None)
+                tok_before = self._engine_tokens(stats)
+                newly = engine.step()
+                if tok_before is not None:
+                    tokens = self._engine_tokens(stats) - tok_before
+                else:
+                    # duck-typed engine without token stats: charge a
+                    # finished request's output in one burst at completion
+                    tokens = sum(len(r.generated) for r in newly)
+                self.fairness.charge(name, steps=1, tokens=tokens)
+                for req in newly:
+                    self.metrics.observe_request(req)
+                    self.completed.append(req)
+                    finished.append(req)
+                    cb = getattr(req, "on_complete", None)
+                    if cb is not None:
+                        cb(name, req)
+            return finished
 
     @property
     def idle(self) -> bool:
-        return all(len(q) == 0 for q in self._lanes.values()) and all(
-            e.idle for e in self._engines.values()
-        )
+        with self._mu:
+            return all(len(q) == 0 for q in self._lanes.values()) and all(
+                e.idle for e in self._engines.values()
+            )
 
     def run_until_drained(self, max_steps: int = 100_000) -> list:
         """Step until every lane and engine is empty; returns all requests
-        finished during the drain, in completion order."""
+        finished during the drain, in completion order.
+
+        Raises :class:`DrainTimeoutError` if ``max_steps`` quanta pass with
+        requests still pending — a wedged engine or a non-work-conserving
+        policy must surface, not silently return a partial drain.
+        """
         finished = []
         for _ in range(max_steps):
             finished.extend(self.step())
             if self.idle:
-                break
-        return finished
+                return finished
+        if self.idle:
+            return finished
+        raise DrainTimeoutError(
+            f"drain exhausted {max_steps} steps with "
+            f"{self.pending()} requests still pending"
+        )
 
     def snapshot(self) -> dict:
         """Metrics snapshot including per-model schedule-cache stats."""
-        caches = {}
-        for name, e in self._engines.items():
-            cache = getattr(e, "schedule_cache", None)
-            if cache is not None:
-                caches[name] = cache.stats.as_dict()
-        snap = self.metrics.snapshot()
-        if caches:
-            snap["schedule_cache"] = caches
-        snap["models"] = list(self._order)
-        snap["pending"] = self.pending()
-        return snap
+        with self._mu:
+            caches = {}
+            for name, e in self._engines.items():
+                cache = getattr(e, "schedule_cache", None)
+                if cache is not None:
+                    caches[name] = cache.stats.as_dict()
+            snap = self.metrics.snapshot()
+            if caches:
+                snap["schedule_cache"] = caches
+            snap["models"] = list(self._order)
+            snap["pending"] = self.pending()
+            snap["fairness"] = self.fairness.snapshot()
+            return snap

@@ -1,0 +1,247 @@
+"""Fairness policies: who gets the next scheduling quantum.
+
+The dispatcher's serving loop is a sequence of *quanta*: each
+``Dispatcher.step()`` asks its policy which lanes (models) to serve and in
+what order, serves them, then reports what each lane consumed.  The policy
+is the only place scheduling preference lives — engines and the dispatcher
+itself stay policy-free, which is what lets the same implementations back
+both the synchronous ``Dispatcher`` and the threaded ``AsyncDispatcher``.
+
+Three implementations, a strict generalization ladder:
+
+* :class:`RoundRobinFairness` — serve every active lane each quantum,
+  rotating which goes first (the original ``Dispatcher`` behavior);
+* :class:`WeightedFairness` — stride scheduling (weighted fair queueing):
+  one lane per quantum, the one with the smallest virtual *pass*; a lane of
+  weight ``w`` advances its pass by ``1/w`` per quantum served, so under
+  saturation lane shares converge to the weight ratio (a 3:1 lane gets ~3×
+  the decode steps) while no active lane is ever starved — the pass gap is
+  bounded by ``ceil(W/w) + n`` quanta;
+* :class:`QuotaFairness` — token-rate quotas: each lane owns a token bucket
+  refilled by ``rate`` tokens per quantum up to ``burst``; lanes with credit
+  are served richest-first and debited what they produce.  Work-conserving
+  by default (if nobody has credit, the least-indebted lane still runs).
+
+Policies are NOT internally locked: the owning dispatcher serializes all
+calls (its submit/step lock).  Mutating a policy from two dispatchers at
+once is a usage error.
+"""
+
+from __future__ import annotations
+
+from typing import Mapping, Optional, Sequence, Union
+
+_MIN_WEIGHT = 1e-6      # stride floor: weight 0 means "background", not "never"
+
+
+class FairnessPolicy:
+    """Decides the service order of lanes, one scheduling quantum at a time."""
+
+    def register(self, lane: str, *, weight: float = 1.0) -> None:
+        """Admit ``lane`` to the schedule (called once per model)."""
+        raise NotImplementedError
+
+    def select(self, active: Sequence[str]) -> list[str]:
+        """Lanes to serve this quantum, in order.
+
+        ``active`` holds the lanes that currently have work (queued requests
+        or live slots), in registration order.  The result is a subset of
+        ``active``; lanes not returned are skipped this quantum.
+        """
+        raise NotImplementedError
+
+    def charge(self, lane: str, *, steps: int = 1, tokens: int = 0) -> None:
+        """Account actual consumption after ``lane`` was served."""
+
+    def snapshot(self) -> dict:
+        """Policy state for metrics/debugging (plain dict)."""
+        return {"policy": type(self).__name__}
+
+
+class RoundRobinFairness(FairnessPolicy):
+    """Serve every active lane each quantum; the head rotates per quantum."""
+
+    def __init__(self) -> None:
+        self._turn = 0
+        self._served: dict[str, int] = {}
+
+    def register(self, lane: str, *, weight: float = 1.0) -> None:
+        self._served[lane] = 0
+
+    def select(self, active: Sequence[str]) -> list[str]:
+        if not active:
+            return []
+        k = self._turn % len(active)
+        self._turn += 1
+        return list(active[k:]) + list(active[:k])
+
+    def charge(self, lane: str, *, steps: int = 1, tokens: int = 0) -> None:
+        self._served[lane] = self._served.get(lane, 0) + steps
+
+    def snapshot(self) -> dict:
+        return {"policy": "round_robin", "served_steps": dict(self._served)}
+
+
+class WeightedFairness(FairnessPolicy):
+    """Stride scheduling: one lane per quantum, smallest virtual pass first.
+
+    ``weights`` presets per-lane weights by name; ``register(weight=...)``
+    covers lanes not preset.  Weights must be ≥ 0 and normalize over the
+    registered set (all-zero → uniform); a zero weight is clamped to a tiny
+    stride floor so the lane still progresses (starvation-freedom).
+    """
+
+    def __init__(self, weights: Optional[Mapping[str, float]] = None) -> None:
+        self._preset = dict(weights or {})
+        self._order: list[str] = []
+        self._weight: dict[str, float] = {}
+        self._pass: dict[str, float] = {}
+        self._served: dict[str, int] = {}
+        self._last_active: frozenset = frozenset()
+
+    def register(self, lane: str, *, weight: float = 1.0) -> None:
+        w = float(self._preset.get(lane, weight))
+        if w < 0:
+            raise ValueError(f"weight must be >= 0, got {w} for {lane!r}")
+        self._order.append(lane)
+        self._weight[lane] = w
+        self._pass[lane] = 0.0
+        self._served[lane] = 0
+
+    def normalized(self) -> dict[str, float]:
+        """Weights normalized to sum 1 (uniform when all weights are 0)."""
+        total = sum(self._weight.values())
+        if total <= 0:
+            n = len(self._weight)
+            return {lane: 1.0 / n for lane in self._weight} if n else {}
+        return {lane: w / total for lane, w in self._weight.items()}
+
+    def _stride(self, lane: str) -> float:
+        return 1.0 / max(self._weight[lane], _MIN_WEIGHT)
+
+    def select(self, active: Sequence[str]) -> list[str]:
+        if not active:
+            self._last_active = frozenset()
+            return []
+        # a lane re-joining after idleness must not burst through its backlog
+        # of unspent quanta: lift its pass to the continuing lanes' floor
+        continuing = [l for l in active if l in self._last_active]
+        if continuing and len(continuing) < len(active):
+            floor = min(self._pass[l] for l in continuing)
+            for lane in active:
+                if lane not in self._last_active:
+                    self._pass[lane] = max(self._pass[lane], floor)
+        self._last_active = frozenset(active)
+        rank = {lane: i for i, lane in enumerate(self._order)}
+        return [min(active, key=lambda l: (self._pass[l], rank[l]))]
+
+    def charge(self, lane: str, *, steps: int = 1, tokens: int = 0) -> None:
+        self._pass[lane] += steps * self._stride(lane)
+        self._served[lane] = self._served.get(lane, 0) + steps
+
+    def snapshot(self) -> dict:
+        return {
+            "policy": "weighted",
+            "weights": self.normalized(),
+            "served_steps": dict(self._served),
+            "virtual_pass": dict(self._pass),
+        }
+
+
+class QuotaFairness(FairnessPolicy):
+    """Token-rate quotas: each lane's bucket refills by ``rate`` tokens per
+    quantum up to ``burst``; serving debits tokens actually produced.
+
+    ``work_conserving=True`` (default) never idles hardware: when no lane
+    has credit, the least-indebted active lane runs anyway.  With it off,
+    ``select`` may return nothing — callers see an idle quantum, and a
+    drain over a permanently-broke lane raises ``DrainTimeoutError``
+    instead of looping forever.
+    """
+
+    def __init__(
+        self,
+        rate: float = 8.0,
+        burst: float = 64.0,
+        *,
+        rates: Optional[Mapping[str, float]] = None,
+        work_conserving: bool = True,
+    ) -> None:
+        if rate <= 0 or burst <= 0:
+            raise ValueError(f"rate/burst must be > 0, got {rate}/{burst}")
+        self.rate = float(rate)
+        self.burst = float(burst)
+        self._rates = dict(rates or {})
+        self.work_conserving = work_conserving
+        self._budget: dict[str, float] = {}
+        self._rate_of: dict[str, float] = {}
+        self._served: dict[str, int] = {}
+        self._tokens: dict[str, int] = {}
+
+    def register(self, lane: str, *, weight: float = 1.0) -> None:
+        # weight scales the base refill rate, so `register_model(weight=3)`
+        # means the same thing under quota as under weighted fairness
+        rate = float(self._rates.get(lane, self.rate * max(weight, 0.0)))
+        self._rate_of[lane] = rate
+        self._budget[lane] = min(rate, self.burst)
+        self._served[lane] = 0
+        self._tokens[lane] = 0
+
+    def select(self, active: Sequence[str]) -> list[str]:
+        if not active:
+            return []
+        for lane in active:
+            self._budget[lane] = min(
+                self.burst, self._budget[lane] + self._rate_of[lane]
+            )
+        funded = [l for l in active if self._budget[l] > 0]
+        if funded:
+            return sorted(funded, key=lambda l: -self._budget[l])
+        if self.work_conserving:
+            return [max(active, key=lambda l: self._budget[l])]
+        return []
+
+    def charge(self, lane: str, *, steps: int = 1, tokens: int = 0) -> None:
+        self._budget[lane] -= tokens
+        self._served[lane] = self._served.get(lane, 0) + steps
+        self._tokens[lane] = self._tokens.get(lane, 0) + tokens
+
+    def snapshot(self) -> dict:
+        return {
+            "policy": "quota",
+            "budget": dict(self._budget),
+            "served_steps": dict(self._served),
+            "served_tokens": dict(self._tokens),
+        }
+
+
+FairnessSpec = Union[FairnessPolicy, str, Mapping[str, float], None]
+
+
+def make_fairness(spec: FairnessSpec) -> FairnessPolicy:
+    """Coerce user-facing specs into a policy.
+
+    ``None`` / ``"round_robin"`` → rotation; ``"weighted"`` → stride
+    scheduling (weights from ``register``); a ``{lane: weight}`` mapping →
+    stride scheduling with preset weights; ``"quota[:RATE[:BURST]]"`` →
+    token-rate quotas.
+    """
+    if spec is None:
+        return RoundRobinFairness()
+    if isinstance(spec, FairnessPolicy):
+        return spec
+    if isinstance(spec, Mapping):
+        return WeightedFairness(weights=spec)
+    if isinstance(spec, str):
+        name, _, rest = spec.partition(":")
+        if name == "round_robin":
+            return RoundRobinFairness()
+        if name == "weighted":
+            return WeightedFairness()
+        if name == "quota":
+            if rest:
+                rate, _, burst = rest.partition(":")
+                return QuotaFairness(float(rate), float(burst or 64.0))
+            return QuotaFairness()
+        raise ValueError(f"unknown fairness policy {spec!r}")
+    raise TypeError(f"cannot build a fairness policy from {spec!r}")

@@ -6,12 +6,21 @@ decode latency, end-to-end request latency, aggregate token throughput —
 plus the schedule-cache hit statistics that show the AoT pre-run actually
 amortizing.  Everything exports as a plain dict so benchmarks and examples
 can print or JSON-dump a snapshot.
+
+Thread-safety contract: :class:`DispatchMetrics` is safe to feed from any
+number of threads — a background stepping thread observing completions races
+foreground submitters calling ``on_submit``/``on_reject`` and monitoring
+threads calling ``snapshot`` — one internal lock serializes every
+mutation and every aggregate read.  Bare :class:`LatencySeries` objects are
+*not* internally locked; they are only mutated under their owner's lock.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
+from collections import deque
 from typing import Any, Optional
 
 import numpy as np
@@ -26,10 +35,19 @@ def percentile(values, q: float) -> float:
 
 @dataclasses.dataclass
 class LatencySeries:
-    """One latency distribution, recorded in seconds."""
+    """One latency distribution, recorded in seconds.
+
+    ``window`` bounds retention: percentiles are computed over the most
+    recent observations (a deque ring, O(1) per record), so a long-running
+    service reports current behavior instead of leaking memory linearly
+    with traffic."""
 
     name: str
-    values: list = dataclasses.field(default_factory=list)
+    values: Any = dataclasses.field(default_factory=list)
+    window: int = 65536
+
+    def __post_init__(self) -> None:
+        self.values = deque(self.values, maxlen=self.window)
 
     def record(self, seconds: float) -> None:
         self.values.append(float(seconds))
@@ -65,60 +83,77 @@ class DispatchMetrics:
         self.rejected = 0                             # backpressure refusals
         self._t_first_submit: Optional[float] = None
         self._t_last_done: Optional[float] = None
+        self._mu = threading.Lock()
 
     def on_submit(self, t_submit: Optional[float] = None) -> None:
         t = time.perf_counter() if t_submit is None else t_submit
-        if self._t_first_submit is None or t < self._t_first_submit:
-            self._t_first_submit = t
+        with self._mu:
+            if self._t_first_submit is None or t < self._t_first_submit:
+                self._t_first_submit = t
 
     def on_reject(self) -> None:
-        self.rejected += 1
+        with self._mu:
+            self.rejected += 1
 
     def observe_request(self, req: Any) -> None:
         """Fold one finished request (serving ``Request`` timestamps) in."""
         ntok = len(req.generated)
-        self.requests_done += 1
-        self.tokens_out += ntok
-        if req.t_first and req.t_submit:
-            self.ttft.record(req.t_first - req.t_submit)
-        if req.t_done and req.t_submit:
-            self.e2e.record(req.t_done - req.t_submit)
-            if ntok > 1 and req.t_first:
-                # decode tokens exclude the one produced by prefill
-                self.per_token.record(
-                    (req.t_done - req.t_first) / (ntok - 1)
-                )
-        if self._t_last_done is None or req.t_done > self._t_last_done:
-            self._t_last_done = req.t_done
+        with self._mu:
+            self.requests_done += 1
+            self.tokens_out += ntok
+            if req.t_first and req.t_submit:
+                self.ttft.record(req.t_first - req.t_submit)
+            if req.t_done and req.t_submit:
+                self.e2e.record(req.t_done - req.t_submit)
+                if ntok > 1 and req.t_first:
+                    # decode tokens exclude the one produced by prefill
+                    self.per_token.record(
+                        (req.t_done - req.t_first) / (ntok - 1)
+                    )
+            if self._t_last_done is None or req.t_done > self._t_last_done:
+                self._t_last_done = req.t_done
 
-    @property
-    def wall_seconds(self) -> float:
+    def _wall_locked(self) -> float:
         if self._t_first_submit is None or self._t_last_done is None:
             return 0.0
         return max(0.0, self._t_last_done - self._t_first_submit)
 
+    def _tokens_per_second_locked(self) -> float:
+        wall = self._wall_locked()
+        return self.tokens_out / wall if wall else 0.0
+
+    def _requests_per_second_locked(self) -> float:
+        wall = self._wall_locked()
+        return self.requests_done / wall if wall else 0.0
+
+    @property
+    def wall_seconds(self) -> float:
+        with self._mu:
+            return self._wall_locked()
+
     @property
     def tokens_per_second(self) -> float:
-        wall = self.wall_seconds
-        return self.tokens_out / wall if wall else 0.0
+        with self._mu:
+            return self._tokens_per_second_locked()
 
     @property
     def requests_per_second(self) -> float:
-        wall = self.wall_seconds
-        return self.requests_done / wall if wall else 0.0
+        with self._mu:
+            return self._requests_per_second_locked()
 
     def snapshot(self, cache_stats: Optional[dict] = None) -> dict:
-        snap = {
-            "requests_done": self.requests_done,
-            "tokens_out": self.tokens_out,
-            "rejected": self.rejected,
-            "wall_seconds": self.wall_seconds,
-            "tokens_per_second": self.tokens_per_second,
-            "requests_per_second": self.requests_per_second,
-            "ttft_ms": self.ttft.summary_ms(),
-            "per_token_ms": self.per_token.summary_ms(),
-            "e2e_ms": self.e2e.summary_ms(),
-        }
+        with self._mu:
+            snap = {
+                "requests_done": self.requests_done,
+                "tokens_out": self.tokens_out,
+                "rejected": self.rejected,
+                "wall_seconds": self._wall_locked(),
+                "tokens_per_second": self._tokens_per_second_locked(),
+                "requests_per_second": self._requests_per_second_locked(),
+                "ttft_ms": self.ttft.summary_ms(),
+                "per_token_ms": self.per_token.summary_ms(),
+                "e2e_ms": self.e2e.summary_ms(),
+            }
         if cache_stats is not None:
             snap["schedule_cache"] = dict(cache_stats)
         return snap

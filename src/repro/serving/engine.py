@@ -17,7 +17,9 @@ that use the same cache, and evicted LRU under shape churn.
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
+from collections import OrderedDict
 from typing import Any, Callable, Optional
 
 import jax
@@ -54,7 +56,8 @@ class EngineStats:
     prefill_compiles: int = 0
     decode_compiles: int = 0
     steps: int = 0
-    tokens_out: int = 0
+    tokens_out: int = 0          # decode-produced tokens only
+    prefill_tokens: int = 0      # first tokens, produced by prefill
     prefill_s: float = 0.0
     decode_s: float = 0.0
 
@@ -110,9 +113,13 @@ class ServingEngine:
 
         # --- AoT scheduling: seal the step executables through the cache --
         self.kv_cache = init_cache(cfg, max_slots, max_len)
-        # per-engine memo: key construction flattens the whole params pytree,
-        # too costly per admitted request — pay it once per bucket
-        self._prefill_memo: dict[int, Any] = {}
+        # per-engine memo of bucket -> ScheduleKey: key construction flattens
+        # the whole params pytree, too costly per admitted request.  Only the
+        # *key* is memoized — executables stay owned by the shared cache, so
+        # its LRU eviction and invalidate()/clear() genuinely govern their
+        # lifetime (an evicted bucket transparently rebuilds on next use).
+        self._prefill_keys: "OrderedDict[int, ScheduleKey]" = OrderedDict()
+        self._prefill_key_cap = 64
         self._decode = self._get_decode_exec()
         if warmup:
             for b in self._warm_buckets():
@@ -121,6 +128,11 @@ class ServingEngine:
         self.slots: list[Optional[Request]] = [None] * max_slots
         self.queue: list[Request] = []
         self._next_tok = np.zeros((max_slots, 1), np.int32)
+        # thread-safety contract: the engine is single-stepper — exactly one
+        # thread may drive step() at a time (the dispatcher's lock provides
+        # that).  This guard turns an accidental second stepper into a loud
+        # error instead of corrupted KV state.
+        self._step_mu = threading.Lock()
 
     # -- sealed executables through the schedule cache ---------------------
     def _warm_buckets(self) -> tuple[int, ...]:
@@ -151,12 +163,16 @@ class ServingEngine:
             self.stats.decode_compiles += 1
             return exe
 
-        return self.schedule_cache.get_or_build(key, build, pin=self.params)
+        # no pin: the key's fn_id is an explicit string (no id() component
+        # to protect), and pinning params would keep a dropped engine's
+        # whole weight pytree alive in a shared cache until eviction
+        return self.schedule_cache.get_or_build(key, build)
 
-    def _get_prefill_exec(self, bucket: int):
-        exe = self._prefill_memo.get(bucket)
-        if exe is not None:
-            return exe
+    def _prefill_key(self, bucket: int) -> ScheduleKey:
+        key = self._prefill_keys.get(bucket)
+        if key is not None:
+            self._prefill_keys.move_to_end(bucket)
+            return key
         key = ScheduleKey.from_call(
             decode_step,
             (self.params,
@@ -165,6 +181,13 @@ class ServingEngine:
             self._key_options,
             fn_id=f"serving.prefill/{self.cfg.name}",
         )
+        self._prefill_keys[bucket] = key
+        while len(self._prefill_keys) > self._prefill_key_cap:
+            self._prefill_keys.popitem(last=False)
+        return key
+
+    def _get_prefill_exec(self, bucket: int):
+        key = self._prefill_key(bucket)
 
         def build():
             exe = jax.jit(self._prefill_dyn).lower(
@@ -177,9 +200,7 @@ class ServingEngine:
             self.stats.prefill_compiles += 1
             return exe
 
-        exe = self.schedule_cache.get_or_build(key, build, pin=self.params)
-        self._prefill_memo[bucket] = exe
-        return exe
+        return self.schedule_cache.get_or_build(key, build)
 
     # -- sealed step bodies ------------------------------------------------
     def _decode_impl(self, params, cache, tokens):
@@ -218,6 +239,15 @@ class ServingEngine:
         return nxt, new_cache
 
     # -- request flow --------------------------------------------------------
+    def validate_request(self, req: Request) -> None:
+        """Reject requests this engine can never serve.
+
+        Dispatchers call this at submit time so an unservable prompt raises
+        on the *submitter* (synchronous backpressure semantics), not later
+        on a stepping thread where it would poison every tenant's futures.
+        """
+        self._bucket(len(req.prompt))          # ValueError if unservable
+
     def submit(self, req: Request) -> None:
         if not req.t_submit:         # dispatcher may have stamped lane entry
             req.t_submit = time.perf_counter()
@@ -265,6 +295,7 @@ class ServingEngine:
             self.stats.prefill_s += time.perf_counter() - t0
             req.t_first = time.perf_counter()
             req.generated.append(int(nxt))
+            self.stats.prefill_tokens += 1
             if len(req.generated) >= req.max_new_tokens:
                 # e.g. a 1-token request: done at prefill, never seats
                 self._finish(req, slot)
@@ -281,6 +312,18 @@ class ServingEngine:
         those admitted and completed within it (they were invisible to the
         old snapshot-based ``run_until_drained``).
         """
+        if not self._step_mu.acquire(blocking=False):
+            raise RuntimeError(
+                "ServingEngine.step() entered concurrently: the engine is "
+                "single-stepper; drive it from one thread (e.g. through a "
+                "Dispatcher)"
+            )
+        try:
+            return self._step_locked()
+        finally:
+            self._step_mu.release()
+
+    def _step_locked(self) -> list[Request]:
         finished = self._admit()
         live = [s for s in range(self.max_slots) if self.slots[s] is not None]
         if not live:
@@ -304,9 +347,20 @@ class ServingEngine:
         return finished
 
     def run_until_drained(self, max_steps: int = 10_000) -> list[Request]:
+        """Step until queue and slots are empty; raises
+        :class:`~repro.dispatch.DrainTimeoutError` if ``max_steps`` pass
+        with requests still in flight (mirrors ``Dispatcher``)."""
+        from repro.dispatch.dispatcher import DrainTimeoutError
+
         finished: list[Request] = []
         for _ in range(max_steps):
             finished.extend(self.step())
             if self.idle:
-                break
-        return finished
+                return finished
+        if self.idle:
+            return finished
+        raise DrainTimeoutError(
+            f"engine drain exhausted {max_steps} steps with "
+            f"{len(self.queue) + sum(s is not None for s in self.slots)} "
+            f"requests still in flight"
+        )

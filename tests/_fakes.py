@@ -1,0 +1,61 @@
+"""Duck-typed fake engines for dispatcher tests.
+
+The dispatcher only needs ``submit``/``step``/``free_slots``/``idle``
+(``repro.serving.ServingEngine`` is the real implementation); these fakes
+make fairness, backpressure, drain, and threading behavior testable in
+microseconds, without models or compiles.
+"""
+
+import time
+
+
+class FakeEngine:
+    """Each request takes ``cost`` step() calls; ``log`` records step order."""
+
+    def __init__(self, name, log, slots=1, cost=2):
+        self.name = name
+        self.log = log
+        self.cost = cost
+        self.slots = [None] * slots
+        self.queue = []
+        self._left = {}
+
+    def submit(self, req):
+        self.queue.append(req)
+
+    def free_slots(self):
+        return sum(1 for s in self.slots if s is None) - len(self.queue)
+
+    @property
+    def idle(self):
+        return not self.queue and all(s is None for s in self.slots)
+
+    def step(self):
+        self.log.append(self.name)
+        for i, s in enumerate(self.slots):
+            if s is None and self.queue:
+                req = self.queue.pop(0)
+                self.slots[i] = req
+                self._left[req.rid] = self.cost
+        finished = []
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            self._left[req.rid] -= 1
+            if self._left[req.rid] == 0:
+                req.generated.append(0)
+                req.done = True
+                req.t_first = req.t_done = time.perf_counter()
+                self.slots[i] = None
+                finished.append(req)
+        return finished
+
+
+class FailingEngine(FakeEngine):
+    """Accepts requests, then blows up on the first step that has work —
+    exercises the async dispatcher's error propagation path."""
+
+    def step(self):
+        if not self.idle:
+            raise RuntimeError(f"engine {self.name} exploded")
+        return []

@@ -1,0 +1,60 @@
+"""Suite-wide liveness guard: enforce ``@pytest.mark.timeout`` everywhere.
+
+The concurrency tests (ISSUE 2) drive real threads; a hung stepping thread
+must FAIL the suite, not wedge it.  CI installs ``pytest-timeout`` (see the
+``dev`` extra) and gets its full implementation.  The clean environment does
+not ship it, so this conftest provides a fallback: when the plugin is
+absent, a ``timeout`` mark arms ``SIGALRM`` around the test body and raises
+if the alarm fires first.
+
+The fallback is main-thread/POSIX only (exactly the tier-1 environment) and
+best-effort — a test blocked in non-interruptible C code can outlive its
+alarm — so keep joins/waits bounded (``join(timeout=...)``) in tests; the
+alarm is the backstop, not the primary exit.
+"""
+
+from __future__ import annotations
+
+import signal
+
+import pytest
+
+
+def _has_timeout_plugin(config) -> bool:
+    return config.pluginmanager.hasplugin("timeout")
+
+
+def pytest_configure(config):
+    if not _has_timeout_plugin(config):
+        config.addinivalue_line(
+            "markers",
+            "timeout(seconds): fail the test if it runs longer than this "
+            "(fallback enforcement via SIGALRM when pytest-timeout is absent)",
+        )
+
+
+@pytest.hookimpl(hookwrapper=True)
+def pytest_runtest_call(item):
+    marker = item.get_closest_marker("timeout")
+    if (
+        marker is None
+        or _has_timeout_plugin(item.config)
+        or not hasattr(signal, "SIGALRM")
+    ):
+        yield
+        return
+    seconds = float(marker.args[0] if marker.args else marker.kwargs.get("seconds", 60))
+
+    def on_alarm(signum, frame):
+        raise TimeoutError(
+            f"{item.nodeid} exceeded its {seconds:g}s timeout "
+            "(fallback SIGALRM guard)"
+        )
+
+    previous = signal.signal(signal.SIGALRM, on_alarm)
+    signal.setitimer(signal.ITIMER_REAL, seconds)
+    try:
+        yield
+    finally:
+        signal.setitimer(signal.ITIMER_REAL, 0)
+        signal.signal(signal.SIGALRM, previous)

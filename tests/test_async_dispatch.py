@@ -1,0 +1,150 @@
+"""AsyncDispatcher over real (smoke) models: the ISSUE 2 acceptance check.
+
+``submit()`` futures must resolve to exactly the tokens the synchronous
+``Dispatcher`` produces for an identical 2-model × 3-shape workload, and the
+stepping thread must never build (trace/compile) anything — engines are
+warmed at registration, so the background loop is pure submission (the
+paper's §4.3 invariant, now on a real thread).
+"""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+import repro.configs as C
+from repro.dispatch import AsyncDispatcher, Dispatcher, ScheduleCache
+from repro.models import init_model
+from repro.serving import Request, ServingEngine
+
+ARCHS = ("stablelm-1.6b", "phi4-mini-3.8b")
+PROMPT_LENS = (5, 13, 27)            # -> three distinct buckets of (8, 16, 32)
+BUCKETS = (8, 16, 32)
+N_REQS = 6
+MAX_NEW = 4
+
+
+@pytest.fixture(scope="module")
+def models():
+    out = []
+    for arch in ARCHS:
+        cfg = dataclasses.replace(C.get(arch, smoke=True), dtype="float32")
+        params, _ = init_model(jax.random.key(0), cfg)
+        out.append((arch, cfg, params))
+    return out
+
+
+@pytest.fixture(scope="module")
+def shared_cache():
+    # one cache for every engine in this module: identical (cfg, shapes,
+    # options) keys resolve to the same sealed executables, so the sync
+    # reference and the async run replay literally the same code
+    return ScheduleCache(capacity=32)
+
+
+def _engine(cfg, params, cache):
+    return ServingEngine(
+        cfg, params, max_slots=2, max_len=64, prompt_buckets=BUCKETS,
+        schedule_cache=cache,
+    )
+
+
+def _requests(cfg):
+    rng = np.random.default_rng(11)
+    return [
+        Request(
+            rid=i,
+            prompt=rng.integers(
+                0, cfg.vocab, PROMPT_LENS[i % len(PROMPT_LENS)]
+            ).astype(np.int32),
+            max_new_tokens=MAX_NEW,
+        )
+        for i in range(N_REQS)
+    ]
+
+
+@pytest.mark.timeout(300)
+def test_async_futures_token_identical_to_sync(models, shared_cache):
+    # -- synchronous reference: 2 models x 3 shapes through Dispatcher -----
+    sync = Dispatcher(max_pending=256)
+    for arch, cfg, params in models:
+        sync.register_model(arch, _engine(cfg, params, shared_cache))
+    for arch, cfg, params in models:
+        for r in _requests(cfg):
+            sync.submit_request(arch, r)
+    reference = {
+        (r.model, r.rid): list(r.generated) for r in sync.run_until_drained()
+    }
+    assert len(reference) == len(models) * N_REQS
+
+    # -- async: same workload, futures resolved off the stepping thread ----
+    ad = AsyncDispatcher(max_pending=256)
+    for arch, cfg, params in models:
+        ad.register_model(arch, _engine(cfg, params, shared_cache))
+    futures = {}
+    with ad:
+        for arch, cfg, params in models:
+            for r in _requests(cfg):
+                futures[(arch, r.rid)] = ad.submit_request(arch, r)
+        got = {
+            key: list(fut.result(timeout=120).generated)
+            for key, fut in futures.items()
+        }
+    assert got == reference
+
+    # the stepping thread replayed sealed executables only: zero builds
+    # happened off the registration path (paper §4.3: pure submission)
+    assert ad.builds_on_thread == 0
+    snap = ad.snapshot()
+    assert snap["async"]["futures_pending"] == 0
+    assert snap["requests_done"] == len(models) * N_REQS
+
+
+@pytest.mark.timeout(120)
+def test_cache_snapshot_exposes_arena_bytes(shared_cache):
+    """Satellite (ISSUE 2): per-entry arena accounting through the cache.
+
+    Raw serving executables report 0 (no TaskSchedule stats); sealed
+    schedules report their reserved arena, and the snapshot total matches
+    the sum over `TaskSchedule.stats`."""
+    import jax.numpy as jnp
+
+    from repro.core import AoTScheduler
+
+    def f(x):
+        return jnp.tanh(x) @ x
+
+    def g(x):
+        return x @ x + 1.0
+
+    cache = ScheduleCache(capacity=8, scheduler=AoTScheduler())
+    x = np.ones((8, 8), np.float32)
+    schedules = [cache.get_or_schedule(f, x), cache.get_or_schedule(g, x)]
+    snap = cache.snapshot()
+    assert snap["size"] == 2
+    expected = sum(s.stats.arena_bytes for s in schedules)
+    assert expected > 0
+    assert snap["arena_bytes_total"] == expected
+    assert sorted(e["arena_bytes"] for e in snap["entries"]) == sorted(
+        s.stats.arena_bytes for s in schedules
+    )
+    # the serving engines' raw executables carry no arena stats -> 0, but
+    # they are present in the accounting (groundwork for byte eviction)
+    serving_snap = shared_cache.snapshot()
+    assert serving_snap["size"] == len(shared_cache)
+    assert all(e["arena_bytes"] >= 0 for e in serving_snap["entries"])
+
+
+@pytest.mark.timeout(120)
+def test_engine_step_guard_rejects_second_stepper(models, shared_cache):
+    arch, cfg, params = models[0]
+    eng = _engine(cfg, params, shared_cache)
+    assert eng._step_mu.acquire(blocking=False)   # pose as a stepping thread
+    try:
+        with pytest.raises(RuntimeError, match="single-stepper"):
+            eng.step()
+    finally:
+        eng._step_mu.release()
+    eng.submit(_requests(cfg)[0])
+    assert eng.run_until_drained()                # guard releases cleanly

@@ -1,0 +1,352 @@
+"""Real-thread concurrency suite (ISSUE 2): cache stress, metrics races,
+async dispatcher lifecycle and error propagation.
+
+Every test carries an explicit ``timeout`` mark — a hung stepping thread or
+a deadlocked lock order must FAIL the suite, not wedge it (pytest-timeout
+in CI, the SIGALRM fallback in tests/conftest.py otherwise).  All joins and
+future waits are bounded for the same reason.
+"""
+
+import threading
+import time
+from concurrent.futures import CancelledError
+
+import numpy as np
+import pytest
+from _fakes import FailingEngine, FakeEngine
+
+from repro.dispatch import (
+    AsyncDispatcher,
+    DispatchMetrics,
+    Dispatcher,
+    DrainTimeoutError,
+    QueueFullError,
+    ScheduleCache,
+)
+
+PROMPT = np.array([1, 2, 3], np.int32)
+
+
+# -- ScheduleCache under real threads -----------------------------------------
+
+@pytest.mark.timeout(60)
+def test_cache_real_thread_stress_builds_once_per_key():
+    """N threads x M keys hammering get_or_schedule's underlying path: the
+    per-key build-coalescing lock must hold up under a real thundering herd
+    — builds == unique keys, and every caller sees the built value."""
+    n_threads, n_keys, n_rounds = 8, 6, 5
+    cache = ScheduleCache(capacity=2 * n_keys)
+    build_counts = {k: 0 for k in range(n_keys)}
+    count_mu = threading.Lock()
+    barrier = threading.Barrier(n_threads)
+    results: list[list] = [[] for _ in range(n_threads)]
+    errors: list[BaseException] = []
+
+    def builder(key):
+        def build():
+            time.sleep(0.005)       # widen the race window
+            with count_mu:
+                build_counts[key] += 1
+            return f"sealed-{key}"
+        return build
+
+    def worker(tid):
+        try:
+            barrier.wait(timeout=10)
+            for r in range(n_rounds):
+                for k in range(n_keys):
+                    key = (tid + k + r) % n_keys    # threads collide on keys
+                    results[tid].append(cache.get_or_build(key, builder(key)))
+        except BaseException as exc:  # noqa: BLE001 - surface in main thread
+            errors.append(exc)
+
+    threads = [threading.Thread(target=worker, args=(t,)) for t in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=30)
+    assert not errors
+    assert all(not t.is_alive() for t in threads)
+    assert build_counts == {k: 1 for k in range(n_keys)}
+    assert cache.stats.builds == n_keys
+    for tid in range(n_threads):
+        assert all(v.startswith("sealed-") for v in results[tid])
+        assert len(results[tid]) == n_rounds * n_keys
+    # accounting stays coherent: every lookup was either a hit or a miss
+    assert cache.stats.hits + cache.stats.misses == n_threads * n_rounds * n_keys
+
+
+@pytest.mark.timeout(60)
+def test_cache_failed_build_is_retryable_and_still_coalesces():
+    cache = ScheduleCache(capacity=4)
+    calls = []
+
+    def flaky():
+        calls.append(1)
+        if len(calls) == 1:
+            raise RuntimeError("first build dies")
+        return "ok"
+
+    with pytest.raises(RuntimeError):
+        cache.get_or_build("k", flaky)
+    assert cache.get_or_build("k", flaky) == "ok"   # no wedged per-key lock
+    assert len(calls) == 2
+    # the retry reused the ORIGINAL per-key lock: a failure must not mint a
+    # second lock that would let two callers build the same key at once
+    assert len(cache._build_locks) == 0 or "k" not in cache._build_locks
+
+
+# -- DispatchMetrics under real threads ---------------------------------------
+
+class _Req:
+    def __init__(self, t0):
+        t0 += 1.0       # keep t_submit truthy (0.0 means "never stamped")
+        self.generated = [1, 2]
+        self.t_submit, self.t_first, self.t_done = t0, t0 + 0.1, t0 + 0.2
+
+
+@pytest.mark.timeout(60)
+def test_metrics_concurrent_observers_lose_nothing():
+    m = DispatchMetrics()
+    n_threads, n_each = 8, 200
+    barrier = threading.Barrier(n_threads)
+
+    def worker(tid):
+        barrier.wait(timeout=10)
+        for i in range(n_each):
+            m.on_submit(float(tid))
+            m.observe_request(_Req(float(tid) + i * 1e-6))
+            m.on_reject()
+            m.snapshot()                      # aggregate reads race mutations
+
+    threads = [threading.Thread(target=worker, args=(t,)) for t in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=30)
+    assert all(not t.is_alive() for t in threads)
+    total = n_threads * n_each
+    snap = m.snapshot()
+    assert snap["requests_done"] == total
+    assert snap["tokens_out"] == 2 * total
+    assert snap["rejected"] == total
+    assert snap["e2e_ms"]["count"] == total
+
+
+# -- AsyncDispatcher lifecycle, futures, and failure --------------------------
+
+@pytest.mark.timeout(60)
+def test_async_dispatcher_futures_resolve():
+    log = []
+    ad = AsyncDispatcher(max_pending=64)
+    ad.register_model("a", FakeEngine("a", log, slots=2))
+    with ad:
+        futs = [ad.submit("a", PROMPT, max_new_tokens=1) for _ in range(8)]
+        reqs = [f.result(timeout=30) for f in futs]
+    assert [r.done for r in reqs] == [True] * 8
+    assert sorted(r.rid for r in reqs) == list(range(8))
+    assert not ad.running
+    assert ad.metrics.requests_done == 8
+
+
+@pytest.mark.timeout(60)
+def test_async_dispatcher_concurrent_submitters():
+    """Foreground submitter threads race the stepping thread; every future
+    resolves exactly once and totals add up."""
+    log = []
+    ad = AsyncDispatcher(max_pending=1024)
+    ad.register_model("a", FakeEngine("a", log, slots=2))
+    ad.register_model("b", FakeEngine("b", log, slots=2))
+    ad.start()
+    n_threads, n_each = 4, 10
+    futures: list[list] = [[] for _ in range(n_threads)]
+    barrier = threading.Barrier(n_threads)
+
+    def submitter(tid):
+        barrier.wait(timeout=10)
+        for i in range(n_each):
+            futures[tid].append(
+                ad.submit("a" if (tid + i) % 2 else "b", PROMPT)
+            )
+
+    threads = [threading.Thread(target=submitter, args=(t,)) for t in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=30)
+    done = [f.result(timeout=30) for fs in futures for f in fs]
+    ad.stop()
+    assert len(done) == n_threads * n_each
+    assert len({r.rid for r in done}) == len(done)
+    assert ad.metrics.requests_done == len(done)
+    assert ad.snapshot()["async"]["futures_pending"] == 0
+
+
+@pytest.mark.timeout(60)
+def test_async_dispatcher_drain_and_restart():
+    log = []
+    ad = AsyncDispatcher()
+    ad.register_model("a", FakeEngine("a", log))
+    ad.start()
+    f1 = ad.submit("a", PROMPT)
+    ad.drain(timeout=30)
+    assert f1.done() and ad.dispatcher.idle
+    ad.stop()
+    ad.start()                               # lifecycle is restartable
+    f2 = ad.submit("a", PROMPT)
+    assert f2.result(timeout=30).done
+    ad.stop()
+
+
+@pytest.mark.timeout(60)
+def test_async_dispatcher_stop_without_drain_cancels_queued():
+    log = []
+    ad = AsyncDispatcher(max_pending=64)
+    # slots=1 and huge cost: later submissions stay queued forever
+    ad.register_model("a", FakeEngine("a", log, slots=1, cost=10**9))
+    ad.start()
+    futs = [ad.submit("a", PROMPT) for _ in range(4)]
+    time.sleep(0.05)                          # let the loop pick up work
+    ad.stop(drain=False)
+    assert not ad.running
+    for f in futs:
+        assert f.cancelled()
+        with pytest.raises(CancelledError):
+            f.result(timeout=1)
+
+
+@pytest.mark.timeout(60)
+def test_async_dispatcher_engine_error_fails_futures():
+    log = []
+    ad = AsyncDispatcher()
+    ad.register_model("a", FailingEngine("a", log))
+    ad.start()
+    fut = ad.submit("a", PROMPT)
+    exc = fut.exception(timeout=30)
+    assert isinstance(exc, RuntimeError) and "exploded" in str(exc)
+    with pytest.raises(RuntimeError):
+        ad.drain(timeout=5)                   # drain re-raises the failure
+    with pytest.raises(RuntimeError):
+        ad.submit("a", PROMPT)                # no silent queueing behind a corpse
+    with pytest.raises(RuntimeError):
+        ad.start()                            # dead dispatchers stay dead
+    ad.stop(drain=False)
+
+
+@pytest.mark.timeout(60)
+def test_async_dispatcher_backpressure_is_synchronous():
+    log = []
+    ad = AsyncDispatcher(max_pending=2)
+    ad.register_model("a", FakeEngine("a", log, slots=1, cost=10**9))
+    ad.start()
+    ad.submit("a", PROMPT)
+    ad.submit("a", PROMPT)
+    with pytest.raises(QueueFullError):
+        ad.submit("a", PROMPT)
+    assert ad.snapshot()["async"]["futures_pending"] == 2   # reject left no orphan
+    ad.stop(drain=False)
+
+
+@pytest.mark.timeout(60)
+def test_submit_requires_running_loop():
+    """No silent queueing behind a loop that will not serve: submit before
+    start() (or after stop()) raises instead of returning a dead future."""
+    ad = AsyncDispatcher()
+    ad.register_model("a", FakeEngine("a", []))
+    with pytest.raises(RuntimeError, match="not running"):
+        ad.submit("a", PROMPT)
+    ad.start()
+    assert ad.submit("a", PROMPT).result(timeout=30).done
+    ad.stop()
+    with pytest.raises(RuntimeError, match="not running"):
+        ad.submit("a", PROMPT)
+
+
+@pytest.mark.timeout(60)
+def test_stop_stops_thread_even_when_drain_times_out():
+    ad = AsyncDispatcher()
+    ad.register_model("a", FakeEngine("a", [], cost=10**9))   # never finishes
+    ad.start()
+    fut = ad.submit("a", PROMPT)
+    with pytest.raises(DrainTimeoutError):
+        ad.stop(timeout=0.3)
+    assert not ad.running          # the loop did not outlive the failed stop
+    assert fut.cancelled()         # and the straggler future was not stranded
+
+
+@pytest.mark.timeout(60)
+def test_rejected_submit_request_leaves_request_reusable():
+    """Backpressure retry must not nest completion wrappers: a rejected
+    Request comes back with its original on_complete intact."""
+    from repro.serving import Request
+
+    seen = []
+    ad = AsyncDispatcher(max_pending=1)
+    ad.register_model("a", FakeEngine("a", [], cost=10**9))
+    ad.start()
+    ad.submit("a", PROMPT)                     # fill the only pending slot
+    req = Request(rid=99, prompt=PROMPT, max_new_tokens=1,
+                  on_complete=lambda m, r: seen.append(r.rid))
+    original_cb = req.on_complete
+    with pytest.raises(QueueFullError):
+        ad.submit_request("a", req)
+    assert req.on_complete is original_cb      # unwrapped after rejection
+    ad.stop(drain=False)
+
+
+@pytest.mark.timeout(60)
+def test_builds_on_thread_ignores_foreground_builds():
+    """builds_on_thread attributes builds by builder thread: a foreground
+    compile into a shared cache while the loop is running must not read as
+    a stepping-thread invariant violation."""
+    log = []
+    cache = ScheduleCache(capacity=8)
+    eng = FakeEngine("a", log)
+    eng.schedule_cache = cache           # duck-typed cache discovery
+    ad = AsyncDispatcher()
+    ad.register_model("a", eng)
+    with ad:
+        fut = ad.submit("a", PROMPT)
+        cache.get_or_build("foreground", lambda: "sealed")   # main thread
+        fut.result(timeout=30)
+        assert ad.builds_on_thread == 0
+    assert ad.builds_on_thread == 0      # count stays frozen after stop
+    assert cache.stats.builds == 1
+
+
+@pytest.mark.timeout(60)
+def test_async_dispatcher_rejects_unservable_without_poisoning():
+    """A malformed request fails its own submitter; the stepping thread and
+    every other tenant's futures stay healthy."""
+    class PickyEngine(FakeEngine):
+        def validate_request(self, req):
+            if len(req.prompt) > len(PROMPT):
+                raise ValueError("unservable prompt")
+
+    ad = AsyncDispatcher()
+    ad.register_model("a", PickyEngine("a", []))
+    with ad:
+        with pytest.raises(ValueError, match="unservable"):
+            ad.submit("a", np.arange(99, dtype=np.int32))
+        fut = ad.submit("a", PROMPT)          # service continues unpoisoned
+        assert fut.result(timeout=30).done
+    assert ad.snapshot()["async"]["failed"] is False
+
+
+@pytest.mark.timeout(60)
+def test_async_dispatcher_weighted_fairness_under_saturation():
+    log = []
+    ad = AsyncDispatcher(max_pending=64, fairness="weighted")
+    ad.register_model("heavy", FakeEngine("heavy", log, cost=10**9), weight=3.0)
+    ad.register_model("light", FakeEngine("light", log, cost=10**9), weight=1.0)
+    ad.start()
+    ad.submit("heavy", PROMPT)
+    ad.submit("light", PROMPT)
+    deadline = time.monotonic() + 20
+    while len(log) < 200 and time.monotonic() < deadline:
+        time.sleep(0.01)
+    ad.stop(drain=False)
+    window = log[:200]
+    assert len(window) == 200, "stepping thread stalled under saturation"
+    ratio = window.count("heavy") / max(window.count("light"), 1)
+    assert 2.5 <= ratio <= 3.5               # ~3x decode quanta for 3x weight

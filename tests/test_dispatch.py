@@ -1,4 +1,5 @@
-"""repro.dispatch tests: schedule cache, bucketing, dispatcher, metrics."""
+"""repro.dispatch tests: schedule cache, bucketing, dispatcher, fairness,
+metrics."""
 
 import threading
 import time
@@ -6,15 +7,21 @@ import time
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from _fakes import FakeEngine
 
 from repro.core import AoTScheduler, Nimble, ScheduleKey
 from repro.dispatch import (
     Dispatcher,
+    DrainTimeoutError,
     ExactBucketing,
     ExplicitBuckets,
     PowerOfTwoBuckets,
     QueueFullError,
+    QuotaFairness,
+    RoundRobinFairness,
     ScheduleCache,
+    WeightedFairness,
+    make_fairness,
     make_policy,
 )
 
@@ -200,48 +207,6 @@ def test_make_policy_coercions():
 
 # -- dispatcher (fake engines: fairness, backpressure, drain) -----------------
 
-class FakeEngine:
-    """Duck-typed engine: each request takes `cost` step() calls."""
-
-    def __init__(self, name, log, slots=1, cost=2):
-        self.name = name
-        self.log = log
-        self.cost = cost
-        self.slots = [None] * slots
-        self.queue = []
-        self._left = {}
-
-    def submit(self, req):
-        self.queue.append(req)
-
-    def free_slots(self):
-        return sum(1 for s in self.slots if s is None) - len(self.queue)
-
-    @property
-    def idle(self):
-        return not self.queue and all(s is None for s in self.slots)
-
-    def step(self):
-        self.log.append(self.name)
-        for i, s in enumerate(self.slots):
-            if s is None and self.queue:
-                req = self.queue.pop(0)
-                self.slots[i] = req
-                self._left[req.rid] = self.cost
-        finished = []
-        for i, req in enumerate(self.slots):
-            if req is None:
-                continue
-            self._left[req.rid] -= 1
-            if self._left[req.rid] == 0:
-                req.generated.append(0)
-                req.done = True
-                req.t_first = req.t_done = time.perf_counter()
-                self.slots[i] = None
-                finished.append(req)
-        return finished
-
-
 def _fake_dispatcher(reqs_per_model=3, **kw):
     log = []
     d = Dispatcher(**kw)
@@ -310,6 +275,156 @@ def test_dispatcher_rejects_unknown_model_and_duplicates():
         d.submit("zzz", np.array([1], np.int32))
     with pytest.raises(ValueError):
         d.register_model("a", FakeEngine("a", log))
+
+
+def test_submit_validates_unservable_requests_synchronously():
+    """An engine that can never serve a request must reject it at submit
+    (on the submitter), not later on a stepping thread."""
+    class PickyEngine(FakeEngine):
+        def validate_request(self, req):
+            if len(req.prompt) > 2:
+                raise ValueError("prompt too long for any bucket")
+
+    d = Dispatcher()
+    d.register_model("a", PickyEngine("a", []))
+    with pytest.raises(ValueError, match="too long"):
+        d.submit("a", np.array([1, 2, 3], np.int32))
+    assert d.pending() == 0                       # nothing leaked into a lane
+    ok = d.submit("a", np.array([1], np.int32))   # dispatcher still healthy
+    assert ok.rid == 0                            # failed submit burned no rid
+
+
+def test_completed_log_is_bounded():
+    d = Dispatcher(completed_log=2)
+    d.register_model("a", FakeEngine("a", [], slots=2))
+    for _ in range(5):
+        d.submit("a", np.array([1], np.int32))
+    done = d.run_until_drained()
+    assert len(done) == 5                         # drain reports everything
+    assert len(d.completed) == 2                  # retention stays bounded
+    assert [r.rid for r in d.completed] == [r.rid for r in done[-2:]]
+
+
+def test_latency_series_window_bounds_memory():
+    from repro.dispatch import LatencySeries
+
+    s = LatencySeries("x", window=3)
+    for i in range(10):
+        s.record(float(i))
+    assert list(s.values) == [7.0, 8.0, 9.0]
+    assert s.count == 3
+    assert s.summary_ms()["max"] == pytest.approx(9000.0)
+
+
+def test_run_until_drained_raises_when_steps_exhausted():
+    """Satellite (ISSUE 2): an exhausted drain must raise, not silently
+    return a partial completion list."""
+    d = Dispatcher()
+    log = []
+    d.register_model("a", FakeEngine("a", log, cost=50))
+    d.submit("a", np.array([1], np.int32))
+    with pytest.raises(DrainTimeoutError, match="still pending"):
+        d.run_until_drained(max_steps=3)
+    # progress was not lost: finishing the drain afterwards still works
+    done = d.run_until_drained()
+    assert len(done) == 1 and d.idle
+
+
+# -- fairness policies --------------------------------------------------------
+
+def test_make_fairness_coercions():
+    assert isinstance(make_fairness(None), RoundRobinFairness)
+    assert isinstance(make_fairness("round_robin"), RoundRobinFairness)
+    assert isinstance(make_fairness("weighted"), WeightedFairness)
+    assert isinstance(make_fairness({"a": 3.0}), WeightedFairness)
+    q = make_fairness("quota:2:8")
+    assert isinstance(q, QuotaFairness) and q.rate == 2.0 and q.burst == 8.0
+    p = WeightedFairness()
+    assert make_fairness(p) is p
+    with pytest.raises(ValueError):
+        make_fairness("nope")
+    with pytest.raises(TypeError):
+        make_fairness(3)
+
+
+def test_weighted_normalization_and_validation():
+    w = WeightedFairness()
+    w.register("a", weight=3.0)
+    w.register("b", weight=1.0)
+    assert w.normalized() == {"a": 0.75, "b": 0.25}
+    with pytest.raises(ValueError):
+        w.register("c", weight=-1.0)
+    z = WeightedFairness()
+    z.register("a", weight=0.0)
+    z.register("b", weight=0.0)
+    assert z.normalized() == {"a": 0.5, "b": 0.5}   # all-zero -> uniform
+
+
+def test_weighted_dispatcher_gives_3x_decode_steps():
+    """Acceptance (ISSUE 2): under saturation a 3:1-weighted tenant gets
+    ~3x the decode quanta of its peer."""
+    log = []
+    d = Dispatcher(max_pending=256, fairness="weighted")
+    d.register_model("heavy", FakeEngine("heavy", log, cost=1000), weight=3.0)
+    d.register_model("light", FakeEngine("light", log, cost=1000), weight=1.0)
+    for _ in range(4):      # cost is huge: both lanes stay saturated
+        d.submit("heavy", np.array([1], np.int32))
+        d.submit("light", np.array([1], np.int32))
+    for _ in range(80):
+        d.step()
+    assert log.count("heavy") == 60 and log.count("light") == 20
+    served = d.snapshot()["fairness"]["served_steps"]
+    assert served == {"heavy": 60, "light": 20}
+
+
+def test_weighted_work_conserving_and_no_rejoin_burst():
+    """An idle heavy lane neither blocks the light lane nor banks credit
+    to burst through when it comes back."""
+    log = []
+    d = Dispatcher(fairness={"heavy": 3.0, "light": 1.0})
+    d.register_model("heavy", FakeEngine("heavy", log, cost=1000))
+    d.register_model("light", FakeEngine("light", log, cost=1000))
+    d.submit("light", np.array([1], np.int32))
+    for _ in range(20):
+        d.step()
+    assert log == ["light"] * 20          # only active lane is served
+    d.submit("heavy", np.array([1], np.int32))
+    tail = []
+    for _ in range(40):
+        d.step()
+    tail = log[20:]
+    # heavy converges to its 3:1 share but does not monopolize on rejoin:
+    # its pass was lifted to the light lane's floor, so light still runs
+    assert tail.count("light") >= 8
+    assert 2.0 <= tail.count("heavy") / tail.count("light") <= 4.0
+
+
+def test_quota_budget_enforcement():
+    q = QuotaFairness(rate=2.0, burst=4.0)
+    q.register("a")
+    q.register("b")
+    assert q.select(["a", "b"]) == ["a", "b"]     # both funded, tie order
+    q.charge("a", tokens=10)                      # a deep in debt
+    assert q.select(["a", "b"]) == ["b"]
+    q.charge("b", tokens=100)                     # now everyone is broke
+    assert q.select(["a", "b"]) == ["a"]          # work-conserving: least debt
+    strict = QuotaFairness(rate=1.0, burst=2.0, work_conserving=False)
+    strict.register("a")
+    strict.charge("a", tokens=50)
+    assert strict.select(["a"]) == []             # broke lane idles the quantum
+    snap = q.snapshot()
+    assert snap["policy"] == "quota" and snap["served_tokens"]["b"] == 100
+
+
+def test_quota_dispatcher_charges_engine_tokens():
+    log = []
+    d = Dispatcher(fairness=QuotaFairness(rate=1.0, burst=2.0))
+    d.register_model("a", FakeEngine("a", log, cost=2))
+    d.submit("a", np.array([1], np.int32))
+    d.run_until_drained()
+    snap = d.snapshot()["fairness"]
+    assert snap["served_tokens"]["a"] == 1        # FakeEngine emits 1 token
+    assert snap["served_steps"]["a"] >= 2
 
 
 # -- metrics ------------------------------------------------------------------

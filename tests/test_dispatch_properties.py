@@ -1,0 +1,172 @@
+"""Property-based tests (via the hypothesis shim) for bucketing policies
+and fairness invariants (ISSUE 2).
+
+Bucketing laws, for every policy and any in-range length:
+
+* coverage     — ``bucket(n) >= n`` (a bucket must fit the request);
+* idempotence  — ``bucket(bucket(n)) == bucket(n)`` (buckets are fixed
+  points: re-dispatching a padded request lands on the same schedule);
+* monotonicity — ``n <= m  ==>  bucket(n) <= bucket(m)`` (a longer prompt
+  never maps to a smaller schedule).
+
+Fairness invariants, over arbitrary weights and randomized schedules:
+
+* weights ≥ 0 normalize to a distribution (all-zero → uniform);
+* proportional share — under saturation, served quanta track weights;
+* starvation-freedom — a lane that stays active is served within
+  ``ceil(W/w) + n`` quanta of joining, for any randomized submit schedule.
+"""
+
+import math
+
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.dispatch import (
+    ExactBucketing,
+    ExplicitBuckets,
+    PowerOfTwoBuckets,
+    WeightedFairness,
+)
+
+MAX_LEN = 2048
+
+POLICIES = (
+    ExactBucketing(max_length=MAX_LEN),
+    PowerOfTwoBuckets(min_bucket=8, max_bucket=MAX_LEN),
+    ExplicitBuckets((8, 24, 100, 512, MAX_LEN)),
+)
+
+
+# -- bucketing laws -----------------------------------------------------------
+
+@given(st.integers(min_value=1, max_value=MAX_LEN))
+@settings(max_examples=200, deadline=None)
+def test_bucket_covers_and_is_idempotent(n):
+    for policy in POLICIES:
+        b = policy.bucket(n)
+        assert b >= n
+        assert policy.bucket(b) == b
+
+
+@given(
+    st.integers(min_value=1, max_value=MAX_LEN),
+    st.integers(min_value=1, max_value=MAX_LEN),
+)
+@settings(max_examples=200, deadline=None)
+def test_bucket_is_monotone(n, m):
+    lo, hi = sorted((n, m))
+    for policy in POLICIES:
+        assert policy.bucket(lo) <= policy.bucket(hi)
+
+
+@given(st.integers(min_value=1, max_value=MAX_LEN))
+@settings(max_examples=200, deadline=None)
+def test_static_buckets_are_the_image(n):
+    """Every bucket a finite policy produces is in its declared family."""
+    for policy in POLICIES:
+        static = policy.static_buckets()
+        if static is not None:
+            assert policy.bucket(n) in static
+
+
+# -- fairness invariants ------------------------------------------------------
+
+@st.composite
+def weight_maps(draw, max_lanes=5, max_weight=10):
+    n = draw(st.integers(min_value=1, max_value=max_lanes))
+    return {
+        f"lane{i}": float(draw(st.integers(min_value=0, max_value=max_weight)))
+        for i in range(n)
+    }
+
+
+@given(weight_maps())
+@settings(max_examples=100, deadline=None)
+def test_weights_normalize_to_distribution(weights):
+    policy = WeightedFairness()
+    for lane, w in weights.items():
+        policy.register(lane, weight=w)
+    norm = policy.normalized()
+    assert set(norm) == set(weights)
+    assert all(v >= 0 for v in norm.values())
+    assert sum(norm.values()) == pytest.approx(1.0)
+    total = sum(weights.values())
+    if total > 0:
+        for lane, w in weights.items():
+            assert norm[lane] == pytest.approx(w / total)
+
+
+def _serve(policy, active):
+    """One quantum: ask the policy, charge what it picked."""
+    picked = policy.select(active)
+    for lane in picked:
+        policy.charge(lane, steps=1, tokens=1)
+    return picked
+
+
+@given(weight_maps(max_weight=8))
+@settings(max_examples=50, deadline=None)
+def test_saturated_shares_track_weights(weights):
+    # all-zero weights degenerate to uniform; give the ratio check signal
+    if sum(weights.values()) == 0:
+        weights = {k: 1.0 for k in weights}
+    policy = WeightedFairness(weights=weights)
+    lanes = sorted(weights)
+    for lane in lanes:
+        policy.register(lane)
+    quanta = 400
+    served = {lane: 0 for lane in lanes}
+    for _ in range(quanta):
+        for lane in _serve(policy, lanes):
+            served[lane] += 1
+    norm = policy.normalized()
+    for lane in lanes:
+        # stride scheduling's lag bound: at most one stride's worth of
+        # quanta away from the exact proportional share
+        slack = 1.0 / max(norm[lane], 1e-6) + len(lanes)
+        assert abs(served[lane] - quanta * norm[lane]) <= slack
+
+
+@st.composite
+def active_schedules(draw, steps=120, max_lanes=4):
+    n = draw(st.integers(min_value=2, max_value=max_lanes))
+    lanes = [f"lane{i}" for i in range(n)]
+    weights = {
+        lane: float(draw(st.integers(min_value=1, max_value=8)))
+        for lane in lanes
+    }
+    # a randomized submit schedule: any non-empty subset may be active
+    schedule = []
+    for _ in range(steps):
+        active = [l for l in lanes if draw(st.booleans())]
+        schedule.append(active or [lanes[draw(st.integers(0, n - 1))]])
+    return weights, schedule
+
+
+@given(active_schedules())
+@settings(max_examples=50, deadline=None)
+def test_no_starvation_under_randomized_schedule(case):
+    """While a lane stays continuously active, stride scheduling serves it
+    within ceil(W/w) + n quanta — no submit pattern can starve it."""
+    weights, schedule = case
+    policy = WeightedFairness(weights=weights)
+    for lane in weights:
+        policy.register(lane)
+    total = sum(weights.values())
+    waiting: dict[str, int] = {}      # lane -> quanta active since last serve
+    for active in schedule:
+        picked = set(_serve(policy, active))
+        for lane in list(waiting):
+            if lane not in active:
+                waiting.pop(lane)     # lane went idle: streak broken
+        for lane in active:
+            if lane in picked:
+                waiting[lane] = 0
+            else:
+                waiting[lane] = waiting.get(lane, 0) + 1
+                bound = math.ceil(total / weights[lane]) + len(weights)
+                assert waiting[lane] <= bound, (
+                    f"{lane} starved for {waiting[lane]} quanta "
+                    f"(bound {bound}, weights {weights})"
+                )

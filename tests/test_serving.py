@@ -101,6 +101,55 @@ def test_bucketing_policy_replaces_prompt_buckets(model, shared_cache):
         eng._bucket(17)                    # 32 > pow2 max_bucket 16
 
 
+def test_engine_validates_unservable_prompt_at_submit(model, shared_cache):
+    """Dispatcher submit rejects a prompt beyond the engine's bucket family
+    synchronously (the async stepping thread must never see it)."""
+    cfg, _ = model
+    disp = Dispatcher(max_pending=16)
+    disp.register_model("m", _engine(model, shared_cache))   # buckets (8, 16)
+    with pytest.raises(ValueError):
+        disp.submit("m", np.zeros(17, np.int32))
+    assert disp.pending() == 0
+
+
+def test_prefill_key_memo_is_lru_bounded(model, shared_cache):
+    """The per-engine bucket->ScheduleKey memo is bounded, and it memoizes
+    only keys — executables remain governed by the shared cache's LRU."""
+    eng = _engine(model, shared_cache, warmup=False)
+    eng._prefill_key_cap = 1
+    eng._get_prefill_exec(8)
+    eng._get_prefill_exec(16)
+    assert list(eng._prefill_keys) == [16]       # oldest bucket key dropped
+    eng._get_prefill_exec(8)                     # re-derive key, cache hit
+    assert list(eng._prefill_keys) == [8]
+
+
+def test_cache_invalidation_reaches_warm_engine(model):
+    """clear()/invalidate() on the shared cache must actually force a warm
+    engine to rebuild — the engine may not serve a privately-pinned copy."""
+    cfg, _ = model
+    cache = ScheduleCache(capacity=16)
+    eng = _engine(model, cache, warmup=False)
+    eng._get_prefill_exec(8)
+    builds = cache.stats.builds
+    eng._get_prefill_exec(8)                     # warm: no new build
+    assert cache.stats.builds == builds
+    cache.clear()
+    eng._get_prefill_exec(8)
+    assert cache.stats.builds == builds + 1      # rebuild observed
+
+
+def test_prefill_tokens_counted_separately(model, shared_cache):
+    cfg, _ = model
+    eng = _engine(model, shared_cache)
+    for r in _reqs(cfg, 2, max_new=3):
+        eng.submit(r)
+    eng.run_until_drained()
+    assert eng.stats.prefill_tokens == 2         # one first-token per request
+    assert eng.stats.tokens_out == 4             # the remaining decode tokens
+    assert Dispatcher._engine_tokens(eng.stats) == 6
+
+
 def test_dispatcher_matches_direct_engine(model, shared_cache):
     """Token-identical outputs: dispatcher multiplexing vs direct serving."""
     cfg, _ = model
