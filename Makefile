@@ -1,10 +1,13 @@
 # Tier-1 verification (ROADMAP.md): must pass from a fresh checkout.
 PY ?= python
 
-.PHONY: test bench-dispatch serve-example
+.PHONY: test bench-dispatch serve-example docs-check
 
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
+
+docs-check:
+	$(PY) tools/check_docs.py
 
 bench-dispatch:
 	PYTHONPATH=src $(PY) -m benchmarks.dispatch_bench

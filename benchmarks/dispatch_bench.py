@@ -1,6 +1,6 @@
 """Dispatch-layer benchmark: cache amortization + async multi-tenant serving.
 
-Three measurements backing ISSUE 1/2 acceptance criteria:
+Four measurements backing ISSUE 1/2/3 acceptance criteria:
 
 1. **warm vs cold** — a cold ``AoTScheduler.schedule`` (trace + stream
    assignment + memory plan + XLA AOT compile) against a warm
@@ -8,12 +8,17 @@ Three measurements backing ISSUE 1/2 acceptance criteria:
    path must be ≥ 10× faster: that ratio IS the pre-run amortization the
    cache exists to buy.
 2. **async multi-tenant** — ≥ 2 models × ≥ 3 prompt shapes submitted as
-   futures through the ``AsyncDispatcher`` (stepping on a daemon thread),
+   futures through the ``AsyncDispatcher`` (stepping on daemon threads),
    checked token-identical against direct ``ServingEngine`` runs, reporting
-   aggregate throughput, submit-side latency, and that the stepping thread
+   aggregate throughput, submit-side latency, and that the stepping threads
    compiled nothing.
 3. **weighted fairness** — two saturated tenants at 3:1 weights; reports the
    realized decode-quantum ratio (should sit at ~3).
+4. **parallel stepping** — two saturated tenants, each engine pinned to its
+   own XLA host device, stepped by the legacy single thread vs per-engine
+   steppers (ISSUE 3 acceptance: ≥ 1.5× aggregate decode-step throughput).
+   Runs in subprocesses so ``--xla_force_host_platform_device_count=2`` is
+   set before jax initializes, and so each mode gets a cold, fair process.
 
     PYTHONPATH=src python -m benchmarks.dispatch_bench
 """
@@ -21,6 +26,9 @@ Three measurements backing ISSUE 1/2 acceptance criteria:
 from __future__ import annotations
 
 import dataclasses
+import os
+import subprocess
+import sys
 import time
 
 import jax
@@ -172,11 +180,91 @@ def weighted_fairness() -> list[tuple[str, float, str]]:
     )]
 
 
+def _stepping_child(mode: str, duration: float = 4.0) -> float:
+    """One parallel-stepping measurement: two saturated heavier-config
+    tenants, one per XLA host device, stepped under ``mode``; returns
+    aggregate engine steps/second over the steady-state window."""
+    devices = jax.devices()
+    cache = ScheduleCache(capacity=64)
+    disp = AsyncDispatcher(max_pending=100_000, stepping=mode)
+    engines = []
+    for i, arch in enumerate(ARCHS):
+        cfg = C.get(arch, smoke=True)
+        # heavier than smoke defaults so decode compute (GIL-free XLA time)
+        # dominates Python dispatch overhead — the regime where per-engine
+        # overlap pays; slots=8 batches more decode work per step
+        cfg = dataclasses.replace(cfg, dtype="float32", d_model=cfg.d_model * 2)
+        params, _ = init_model(jax.random.key(0), cfg)
+        eng = ServingEngine(
+            cfg, params, max_slots=8, max_len=64, prompt_buckets=BUCKETS,
+            schedule_cache=cache, device=devices[i % len(devices)],
+        )
+        disp.register_model(arch, eng)
+        engines.append((arch, cfg, eng))
+    rng = np.random.default_rng(3)
+    disp.start()
+    try:
+        for arch, cfg, _eng in engines:
+            for i in range(600):       # deep backlog: no lane drains mid-window
+                disp.submit(
+                    arch,
+                    rng.integers(
+                        0, cfg.vocab, PROMPT_LENS[i % len(PROMPT_LENS)]
+                    ).astype(np.int32),
+                    max_new_tokens=40,
+                )
+        time.sleep(1.0)                 # warm: prefill churn settles
+        s0 = sum(eng.stats.steps for _, _, eng in engines)
+        t0 = time.perf_counter()
+        time.sleep(duration)
+        steps = sum(eng.stats.steps for _, _, eng in engines) - s0
+        wall = time.perf_counter() - t0
+    finally:
+        disp.stop(drain=False)
+    return steps / wall
+
+
+def parallel_stepping() -> list[tuple[str, float, str]]:
+    """Single-stepper vs per-engine stepping, measured in subprocesses so
+    each mode initializes jax with 2 host devices (one per engine)."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (
+        env.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=2"
+    ).strip()
+    rates = {}
+    for mode in ("single", "per-engine"):
+        out = subprocess.run(
+            [sys.executable, "-m", "benchmarks.dispatch_bench",
+             "--stepping-child", mode],
+            env=env, capture_output=True, text=True, timeout=900,
+        )
+        if out.returncode != 0:
+            raise RuntimeError(
+                f"stepping child ({mode}) failed:\n{out.stderr[-2000:]}"
+            )
+        rates[mode] = float(out.stdout.strip().splitlines()[-1])
+    speedup = rates["per-engine"] / rates["single"] if rates["single"] else 0.0
+    return [(
+        "dispatch/parallel_stepping",
+        1e6 / rates["per-engine"] if rates["per-engine"] else 0.0,
+        f"single_steps_per_s={rates['single']:.0f};"
+        f"per_engine_steps_per_s={rates['per-engine']:.0f};"
+        f"speedup={speedup:.2f}x",
+    )]
+
+
 def run() -> list[tuple[str, float, str]]:
-    return warm_vs_cold() + multi_tenant() + weighted_fairness()
+    """All dispatch-layer measurements, as (name, us_per_call, derived)."""
+    return (
+        warm_vs_cold() + multi_tenant() + weighted_fairness()
+        + parallel_stepping()
+    )
 
 
 if __name__ == "__main__":
-    print("name,us_per_call,derived")
-    for row in run():
-        print(",".join(str(x) for x in row))
+    if len(sys.argv) >= 3 and sys.argv[1] == "--stepping-child":
+        print(_stepping_child(sys.argv[2]))
+    else:
+        print("name,us_per_call,derived")
+        for row in run():
+            print(",".join(str(x) for x in row))

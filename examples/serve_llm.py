@@ -5,12 +5,15 @@
         --fairness weighted --weights 3,1
 
 Prefill and decode are sealed once per (model, bucket) through the shared
-``ScheduleCache``; the ``AsyncDispatcher`` steps tenant requests on a
-daemon thread while ``submit`` returns futures immediately — the request
+``ScheduleCache``; the ``AsyncDispatcher`` steps each tenant on its own
+daemon thread (``--stepping per-engine``, the default — decode overlaps
+across models) while ``submit`` returns futures immediately — the request
 loop is pure submission (the inference-serving face of the paper's AoT
-scheduling), and the stepping thread never compiles (``builds_on_thread``
-below stays 0).  ``--fairness`` picks the policy: round-robin rotation,
-weighted fair queueing (``--weights``, per arch), or token-rate quotas.
+scheduling), and no stepper ever compiles (``builds_on_thread`` below
+stays 0).  ``--fairness`` picks the policy: round-robin rotation, weighted
+fair queueing (``--weights``, per arch), or token-rate quotas (tokens per
+wall-clock second).  ``--cache-budget-mb`` caps the reserved-arena bytes
+the shared schedule cache may hold (LRU entries are evicted past it).
 """
 
 import argparse
@@ -40,6 +43,14 @@ def main():
                     help='"round_robin", "weighted", or "quota[:RATE[:BURST]]"')
     ap.add_argument("--weights", default="",
                     help="comma-separated per-arch weights (weighted/quota)")
+    ap.add_argument("--stepping", default="per-engine",
+                    choices=("per-engine", "single"),
+                    help="one stepper thread per model, or one shared loop")
+    ap.add_argument("--max-concurrent-steps", type=int, default=0,
+                    help="cap simultaneous engine steps (0 = no cap)")
+    ap.add_argument("--cache-budget-mb", type=float, default=0.0,
+                    help="byte budget for the shared schedule cache "
+                         "(0 = entry-count LRU only)")
     args = ap.parse_args()
 
     spec = args.bucketing
@@ -51,9 +62,16 @@ def main():
     if len(weights) != len(archs):
         ap.error("--weights must list one weight per arch")
 
-    cache = ScheduleCache(capacity=64)
+    cache = ScheduleCache(
+        capacity=64,
+        byte_budget=(int(args.cache_budget_mb * 2**20)
+                     if args.cache_budget_mb else None),
+    )
     dispatcher = AsyncDispatcher(
-        max_pending=4 * args.requests, fairness=args.fairness
+        max_pending=4 * args.requests,
+        fairness=args.fairness,
+        stepping=args.stepping,
+        max_concurrent_steps=args.max_concurrent_steps or None,
     )
 
     t0 = time.perf_counter()
@@ -84,18 +102,26 @@ def main():
             ))
         t_submitted = time.perf_counter() - t0
         done = [f.result(timeout=600) for f in futures]
+        snap = dispatcher.snapshot()       # while steppers are still live
     wall = time.perf_counter() - t0
-
-    snap = dispatcher.snapshot()
     print(f"served {len(done)} requests over {len(models)} model(s) "
           f"in {wall:.2f}s (submit loop itself: {t_submitted*1e3:.1f}ms — "
           f"the caller never hosted the serving loop)")
     print(f"throughput {snap['tokens_per_second']:,.0f} tok/s | "
           f"TTFT p50 {snap['ttft_ms']['p50']:.0f}ms | "
           f"e2e p99 {snap['e2e_ms']['p99']:.0f}ms | "
-          f"builds on stepping thread: {snap['async']['builds_on_thread']}")
+          f"stepping: {snap['async']['stepping']} "
+          f"({snap['async']['steppers']} stepper(s)) | "
+          f"builds on steppers: {snap['async']['builds_on_thread']}")
+    for name, eng in snap.get("engines", {}).items():
+        print(f"  engine[{name}]: {eng['steps']} steps, "
+              f"step p50 {eng['step_ms']['p50']:.1f}ms "
+              f"p99 {eng['step_ms']['p99']:.1f}ms, {eng['tokens']} tokens")
     print("fairness:", json.dumps(snap["fairness"], default=str))
-    print("schedule cache:", json.dumps(cache.stats.as_dict(), indent=None))
+    cache_snap = cache.snapshot()
+    print(f"schedule cache: {json.dumps(cache.stats.as_dict(), indent=None)} "
+          f"(arena {cache_snap['arena_bytes_total']} bytes, "
+          f"budget {cache_snap['byte_budget']})")
     sample = done[0]
     print(f"sample [{sample.model}]: prompt[{len(sample.prompt)}] -> "
           f"{sample.generated}")

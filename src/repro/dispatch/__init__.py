@@ -1,15 +1,21 @@
 """repro.dispatch: schedule cache + multi-tenant dispatch over AoT schedules.
 
 Turns the single-schedule ``Nimble`` wrapper into a serving layer: sealed
-schedules live in a shared LRU :class:`ScheduleCache` keyed by
-:class:`~repro.core.aot.ScheduleKey`; incoming shapes map onto cached
-shapes via :mod:`bucketing`; the :class:`Dispatcher` multiplexes tenant
-requests over per-model engines with pluggable :mod:`fairness` (round-robin
-rotation, weighted fair queueing, token-rate quotas) and backpressure; the
-:class:`AsyncDispatcher` puts that loop on a daemon thread behind a
-future-returning ``submit``; and :mod:`metrics` reports the
-latency/throughput/cache numbers.  See DESIGN.md §dispatch for the mapping
-back to the paper.
+schedules live in a shared :class:`ScheduleCache` (entry-count LRU plus a
+reserved-arena byte budget) keyed by :class:`~repro.core.aot.ScheduleKey`;
+incoming shapes map onto cached shapes via :mod:`bucketing`; the
+:class:`Dispatcher` multiplexes tenant requests over per-model engines
+with pluggable :mod:`fairness` (round-robin rotation, weighted fair
+queueing, wall-clock token-rate quotas), backpressure, and fine-grained
+locking (submits never wait out an engine step); the
+:class:`AsyncDispatcher` runs one stepper thread per engine — decode
+overlaps across tenants while a quantum arbiter keeps the shared policy in
+charge — behind a future-returning ``submit``; and :mod:`metrics` reports
+latency/throughput/cache numbers down to per-engine step series.
+
+Thread-safety: every class exported here is safe to use from multiple
+threads; see DESIGN.md §locking-contract for exactly which lock protects
+what and the ordering that keeps the whole layer deadlock-free.
 """
 
 from .async_dispatcher import AsyncDispatcher

@@ -1,10 +1,10 @@
-"""Async front door: future-returning ``submit`` over a stepping thread.
+"""Async front door: future-returning ``submit`` over per-engine steppers.
 
 Nimble's run-time loop is pure submission — every scheduling decision was
 paid ahead of time (paper §4.1, §4.3) — but the synchronous ``Dispatcher``
 still makes callers *host* that loop: ``run_until_drained`` blocks the
-submitting thread.  :class:`AsyncDispatcher` moves the loop onto a daemon
-thread so the caller's critical path is exactly one bounded-queue append:
+submitting thread.  :class:`AsyncDispatcher` moves the loop onto daemon
+threads so the caller's critical path is exactly one bounded-queue append:
 
     async_disp = AsyncDispatcher(fairness="weighted")
     async_disp.register_model("m", engine, weight=3.0)
@@ -13,17 +13,38 @@ thread so the caller's critical path is exactly one bounded-queue append:
     req = fut.result(timeout=30)              # tokens in req.generated
     async_disp.stop()                         # drains, then joins
 
-Invariant (the paper's): the stepping thread NEVER traces or compiles — it
-only replays sealed executables.  Engines must be warmed at registration
-(finite bucketing policies warm eagerly; an exact policy can lazily build
-on the stepping thread, which the ``builds_on_thread`` counter exposes so
-tests and operators can assert the invariant holds).
+Stepping models (``stepping=``):
 
-Locking protocol (deadlock-free by ordering): the stepping thread and
-submitters take the dispatcher's lock first and this class's condition
-second, never the reverse — ``drain`` and ``stop`` wait only on
-loop-published state (``_idle``, ``_pending``) and never call into the
-dispatcher while holding the condition.
+* ``"per-engine"`` (default) — one stepper thread per registered model, so
+  decode **overlaps across tenants** (the paper's parallelism argument
+  applied to serving: independent engines are independent GPU work and
+  must not be serialized by the scheduler).  The shared ``FairnessPolicy``
+  still arbitrates quanta through a :class:`_QuantumArbiter`: a stepper
+  acquires a grant before each engine step, and ``max_concurrent_steps``
+  caps how many grants are outstanding (``None`` — no cap; ``1`` — strict
+  serial policy order even with many steppers).  How much actually
+  overlaps is the POLICY's call: ``round_robin`` and ``quota`` grant every
+  eligible lane per quantum (full overlap); ``weighted`` stride scheduling
+  picks exactly one lane per quantum by construction — rationing quanta IS
+  its semantics, so weighted shares stay exact and decode stays
+  effectively serial.  Pick round_robin/quota when raw overlap matters
+  more than weighted shares.
+* ``"single"`` — the legacy loop: one thread stepping all lanes in policy
+  order.  Kept as the benchmark baseline and for strictly-serial setups.
+
+Invariant (the paper's): stepper threads NEVER trace or compile — they
+only replay sealed executables.  Engines must be warmed at registration
+(finite bucketing policies warm eagerly; an exact policy can lazily build
+on a stepper, which ``builds_on_thread`` / ``builds_by_stepper`` expose so
+tests and operators can assert the invariant holds per stepper).
+
+Locking protocol (deadlock-free by ordering): steppers take the arbiter's
+condition before the dispatcher's fairness lock, lane locks before the
+fairness lock, and this class's condition is held only across leaf-lock
+peeks into the dispatcher (``lane_active`` / ``idle`` — registry and
+counter locks), never across an engine step or an arbiter call —
+``drain`` and ``stop`` wait only on loop-published state (the busy-lane
+set, ``_pending``).
 """
 
 from __future__ import annotations
@@ -37,14 +58,126 @@ from .dispatcher import Dispatcher, DrainTimeoutError
 from .fairness import FairnessSpec
 from .metrics import DispatchMetrics
 
+_SINGLE = "loop"         # stepper label in "single" mode
+
+
+class _QuantumArbiter:
+    """Grants stepping quanta to per-engine steppers via the shared policy.
+
+    Each stepper calls :meth:`acquire` before stepping its lane and
+    :meth:`release` after.  Grants flow through ``FairnessPolicy.select``
+    over the lanes that currently have work, so the policy's ordering and
+    accounting survive per-engine threading; ``max_concurrent`` bounds the
+    outstanding grants (``None`` — no bound beyond one per lane).
+
+    When the policy's top pick is an active lane whose stepper is still
+    finishing bookkeeping (not yet re-requesting), the arbiter holds other
+    grants briefly rather than handing the quantum to a less-deserving
+    lane — that back-off, bounded by the timed waits below, is what keeps
+    e.g. stride ratios exact at ``max_concurrent=1``.
+
+    Lock order: the arbiter condition is taken before the dispatcher's
+    registry and fairness locks, never the reverse; it is never held
+    around an engine step.
+    """
+
+    _WAIT = 0.01          # timed re-pump: quota refills are time-driven
+
+    def __init__(self, dispatcher: Dispatcher, max_concurrent: Optional[int]):
+        if max_concurrent is not None and max_concurrent < 1:
+            raise ValueError(
+                f"max_concurrent_steps must be >= 1 or None, got {max_concurrent}"
+            )
+        self._disp = dispatcher
+        self._max = max_concurrent
+        self._cv = threading.Condition()
+        self._waiting: set[str] = set()     # steppers blocked in acquire
+        self._granted: set[str] = set()     # grants not yet picked up
+        self._inflight: set[str] = set()    # grants being executed
+        self._closed = False
+
+    def acquire(self, lane: str) -> bool:
+        """Block until the policy grants ``lane`` a quantum; False once
+        the arbiter is closed (shutdown)."""
+        with self._cv:
+            self._waiting.add(lane)
+            self._pump_locked()
+            while lane not in self._granted:
+                if self._closed:
+                    self._waiting.discard(lane)
+                    return False
+                self._cv.wait(self._WAIT)
+                self._pump_locked()
+            self._granted.discard(lane)
+            return not self._closed
+
+    def release(self, lane: str) -> None:
+        """Return ``lane``'s grant (its engine step finished)."""
+        with self._cv:
+            self._inflight.discard(lane)
+            self._pump_locked()
+            self._cv.notify_all()
+
+    def close(self) -> None:
+        """Wake and refuse every current and future acquire."""
+        with self._cv:
+            self._closed = True
+            self._cv.notify_all()
+
+    def _capacity_left(self) -> bool:
+        return self._max is None or len(self._inflight) < self._max
+
+    def _pump_locked(self) -> None:
+        """Hand out as many grants as policy + capacity allow right now."""
+        while self._waiting and self._capacity_left() and not self._closed:
+            # the policy must see the TRUE active set — every lane with
+            # work, whether its stepper is waiting here, executing a
+            # granted quantum, or mid-bookkeeping.  Feeding it subsets
+            # corrupts stateful policies (stride's rejoin-lift would keep
+            # erasing a lane's pass progress); feeding it everything keeps
+            # select()'s ordering exactly what the synchronous loop saw.
+            contenders = [
+                name for name in self._disp.models
+                if name in self._waiting
+                or name in self._inflight
+                or self._disp.lane_active(name)
+            ]
+            if not contenders:
+                return
+            order = self._disp.fairness_select(contenders)
+            granted_any = False
+            for name in order:
+                if (
+                    name in self._waiting
+                    and name not in self._inflight
+                    and self._capacity_left()
+                ):
+                    self._waiting.discard(name)
+                    self._granted.add(name)
+                    self._inflight.add(name)
+                    granted_any = True
+            if granted_any:
+                self._cv.notify_all()
+            else:
+                # the policy's picks are all executing or mid-bookkeeping:
+                # hold the quantum for them (handing it to a less-deserving
+                # waiter would break the policy's ordering); the timed
+                # waits in acquire() re-pump shortly
+                return
+
 
 class AsyncDispatcher:
     """Threaded serving front door wrapping a (thread-safe) ``Dispatcher``.
 
     Composition, not inheritance: the synchronous dispatcher keeps owning
-    lanes/fairness/backpressure; this class owns only the thread, the
-    futures, and the lifecycle.  Either construct it over an existing
+    lanes/fairness/backpressure; this class owns only the stepper threads,
+    the futures, and the lifecycle.  Either construct it over an existing
     ``Dispatcher`` or pass the same keyword arguments through.
+
+    Thread-safety: every public method is safe from any thread.  Futures
+    resolve on the stepper thread that finished the request, before the
+    user's ``on_complete`` callback runs; callbacks execute outside all
+    dispatcher locks.
     """
 
     def __init__(
@@ -55,105 +188,173 @@ class AsyncDispatcher:
         metrics: Optional[DispatchMetrics] = None,
         fairness: FairnessSpec = None,
         idle_wait: float = 0.02,
+        stepping: str = "per-engine",
+        max_concurrent_steps: Optional[int] = None,
     ) -> None:
+        if stepping not in ("per-engine", "single"):
+            raise ValueError(
+                f'stepping must be "per-engine" or "single", got {stepping!r}'
+            )
         if dispatcher is None:
             dispatcher = Dispatcher(
                 max_pending=max_pending, metrics=metrics, fairness=fairness
             )
         self.dispatcher = dispatcher
         self.idle_wait = idle_wait
+        self.stepping = stepping
+        self.max_concurrent_steps = max_concurrent_steps
         self._cv = threading.Condition()
-        self._thread: Optional[threading.Thread] = None
+        self._threads: dict[str, threading.Thread] = {}
+        self._arbiter: Optional[_QuantumArbiter] = None
+        self._running_flag = False
         self._stop_flag = False
-        self._idle = True                 # loop-published; read under _cv
+        self._busy: set[str] = set()      # loop-published; r/w under _cv
         self._error: Optional[BaseException] = None
         self._pending: set[Future] = set()
-        # stepping-thread build attribution: the cache tags builds with the
+        # stepper build attribution: the cache tags builds with the
         # builder's thread ident (unique among live threads), so counting
-        # needs no racy before/after deltas.  Counts from past stepping
-        # threads are frozen at exit (idents can be recycled once dead).
-        self._live_ident: Optional[int] = None
-        self._live_baseline = 0      # ident's pre-existing count (recycling)
-        self._builds_frozen = 0
+        # needs no racy before/after deltas.  Counts from dead steppers are
+        # frozen at exit (idents can be recycled once dead).
+        self._live: dict[str, tuple[int, int]] = {}   # label -> (ident, base)
+        self._frozen: dict[str, int] = {}             # label -> frozen count
 
     # -- passthroughs ------------------------------------------------------
 
     def register_model(self, name: str, engine: Any, *, weight: float = 1.0) -> Any:
-        return self.dispatcher.register_model(name, engine, weight=weight)
+        """Register a tenant; if the dispatcher is live in per-engine mode,
+        its stepper thread spawns immediately."""
+        out = self.dispatcher.register_model(name, engine, weight=weight)
+        with self._cv:
+            if (
+                self.stepping == "per-engine"
+                and self._running_flag
+                and not self._stop_flag
+                and self._error is None
+                and name not in self._threads
+            ):
+                self._spawn_locked(name)
+        return out
 
     @property
     def models(self) -> tuple[str, ...]:
+        """Registered model names, in registration order."""
         return self.dispatcher.models
 
     def engine(self, name: str) -> Any:
+        """The engine serving ``name``."""
         return self.dispatcher.engine(name)
 
     def pending(self) -> int:
+        """Dispatcher-side pending count (queued + in-flight requests)."""
         return self.dispatcher.pending()
 
     @property
     def metrics(self) -> DispatchMetrics:
+        """The wrapped dispatcher's metrics aggregate."""
         return self.dispatcher.metrics
 
     # -- lifecycle ---------------------------------------------------------
 
     @property
     def running(self) -> bool:
-        return self._thread is not None and self._thread.is_alive()
+        """Whether the stepping loop is live (accepting submissions)."""
+        if not self._running_flag:
+            return False
+        if not self._threads:      # per-engine mode with no models yet
+            return True
+        return any(t.is_alive() for t in self._threads.values())
+
+    def _spawn_locked(self, label: str) -> None:
+        target = self._run_single if label == _SINGLE else self._run_lane
+        t = threading.Thread(
+            target=self._run_guarded, args=(label, target),
+            name=f"repro-dispatch-step[{label}]", daemon=True,
+        )
+        self._threads[label] = t
+        t.start()
 
     def start(self) -> "AsyncDispatcher":
-        """Spawn the daemon stepping thread (idempotent while running)."""
+        """Spawn the daemon stepper thread(s) (idempotent while running).
+
+        Per-engine mode spawns one stepper per registered model (models
+        registered later get theirs on registration); single mode spawns
+        the one legacy loop thread.
+        """
         with self._cv:
             # check-and-spawn is one critical section: two concurrent
             # start() calls must not each observe "not running" and spawn
-            # rival stepping threads
+            # rival stepper sets.  The model list is read INSIDE it too: a
+            # register_model racing start() either sees _running_flag set
+            # (and spawns the stepper itself) or is seen by this read —
+            # read it outside and a lane could end up stepper-less forever.
+            names = self.dispatcher.models
             if self._error is not None:
                 raise RuntimeError(
                     "dispatcher previously failed; construct a new one"
                 ) from self._error
-            if self._thread is not None and self._thread.is_alive():
+            if self._running_flag and (
+                not self._threads
+                or any(t.is_alive() for t in self._threads.values())
+            ):
                 return self
             self._stop_flag = False
-            self._thread = threading.Thread(
-                target=self._run, name="repro-dispatch-step", daemon=True
-            )
-            self._thread.start()
+            self._running_flag = True
+            self._threads = {}
+            if self.stepping == "per-engine":
+                self._arbiter = _QuantumArbiter(
+                    self.dispatcher, self.max_concurrent_steps
+                )
+                for name in names:
+                    self._spawn_locked(name)
+            else:
+                self._spawn_locked(_SINGLE)
         return self
 
     def stop(self, *, drain: bool = True, timeout: Optional[float] = None) -> None:
-        """Stop the stepping thread; by default drain all work first.
+        """Stop every stepper; by default drain all work first.
 
-        The thread is stopped even when the drain raises (a wedged engine
-        must not leave the loop running behind a DrainTimeoutError).  Any
-        futures still unresolved after the thread exits — ``drain=False``
+        The threads are stopped even when the drain raises (a wedged engine
+        must not leave steppers running behind a DrainTimeoutError).  Any
+        futures still unresolved after the threads exit — ``drain=False``
         leftovers, or stragglers that raced the stop — are cancelled, never
         silently stranded.  ``timeout`` bounds both the drain and the join.
         """
-        if self._thread is None:
+        if not self._threads and not self._running_flag:
             return
         alive = False
         try:
-            if drain and self._error is None:
+            if drain and self._error is None and self.running:
                 self.drain(timeout=timeout)
         finally:
             with self._cv:
                 self._stop_flag = True
+                self._running_flag = False
                 self._cv.notify_all()
-            self._thread.join(10.0 if timeout is None else max(timeout, 0.1))
-            alive = self._thread.is_alive()
+            if self._arbiter is not None:
+                self._arbiter.close()
+            # ONE deadline shared by every join: `timeout` bounds the whole
+            # stop, not stop-per-stepper (8 wedged tenants must not turn a
+            # 5s timeout into 40s)
+            deadline = _now() + (10.0 if timeout is None else max(timeout, 0.1))
+            for t in self._threads.values():
+                t.join(max(0.0, deadline - _now()))
+                alive = alive or t.is_alive()
             if not alive:
-                self._thread = None
+                self._threads = {}
+                self._arbiter = None
             with self._cv:
                 leftovers, self._pending = self._pending, set()
             for fut in leftovers:
                 fut.cancel()
         if alive:                              # pragma: no cover - diagnostics
-            raise DrainTimeoutError("stepping thread failed to stop")
+            raise DrainTimeoutError("stepper threads failed to stop")
 
     def __enter__(self) -> "AsyncDispatcher":
+        """``with`` support: enters by starting the steppers."""
         return self.start()
 
     def __exit__(self, exc_type, exc, tb) -> None:
+        """Exits by stopping; drains only on a clean exit."""
         self.stop(drain=exc_type is None)
 
     # -- submission --------------------------------------------------------
@@ -188,7 +389,7 @@ class AsyncDispatcher:
         except BaseException:
             self._forget(fut)
             raise
-        self._kick()
+        self._kick(model)
         return fut
 
     def submit_request(self, model: str, req: Any) -> Future:
@@ -208,7 +409,7 @@ class AsyncDispatcher:
             req.on_complete = original_cb
             self._forget(fut)
             raise
-        self._kick()
+        self._kick(model)
         return fut
 
     # -- introspection -----------------------------------------------------
@@ -223,27 +424,41 @@ class AsyncDispatcher:
 
     @property
     def builds_on_thread(self) -> int:
-        """Schedule-cache builds performed BY the stepping thread (should
+        """Schedule-cache builds performed BY any stepper thread (should
         stay 0 when engines are warmed — the paper's pure-submission
         invariant).  Attribution is by builder thread ident, so concurrent
         foreground compiles (late registrations, Nimble.prepare on a shared
-        cache) are never miscounted against the stepping thread."""
-        # snapshot frozen+ident atomically, count outside _cv (counting
+        cache) are never miscounted against a stepper."""
+        return sum(self.builds_by_stepper.values())
+
+    @property
+    def builds_by_stepper(self) -> dict:
+        """Per-stepper build counts (label → builds): the per-engine view
+        of the invariant — every value should be 0.  Labels are model
+        names in per-engine mode, ``"loop"`` in single mode."""
+        # snapshot frozen+live atomically, count outside _cv (counting
         # walks the dispatcher, which must never happen while holding _cv)
         with self._cv:
-            frozen = self._builds_frozen
-            ident = self._live_ident
-            baseline = self._live_baseline
-        return frozen + self._count_builds_of(ident, baseline)
+            frozen = dict(self._frozen)
+            live = dict(self._live)
+        out = dict(frozen)
+        for label, (ident, baseline) in live.items():
+            out[label] = out.get(label, 0) + self._count_builds_of(ident, baseline)
+        return out
 
     def snapshot(self) -> dict:
+        """Dispatcher snapshot plus the async layer's lifecycle state."""
         snap = self.dispatcher.snapshot()
-        builds = self.builds_on_thread
+        by_stepper = self.builds_by_stepper
         with self._cv:
             snap["async"] = {
                 "running": self.running,
+                "stepping": self.stepping,
+                "steppers": len(self._threads),
+                "max_concurrent_steps": self.max_concurrent_steps,
                 "futures_pending": len(self._pending),
-                "builds_on_thread": builds,
+                "builds_on_thread": sum(by_stepper.values()),
+                "builds_by_stepper": by_stepper,
                 "failed": self._error is not None,
             }
         return snap
@@ -253,8 +468,8 @@ class AsyncDispatcher:
     def drain(self, timeout: Optional[float] = None) -> None:
         """Block until every submitted future has resolved.
 
-        Raises :class:`DrainTimeoutError` on timeout and re-raises the
-        stepping thread's exception if it died.
+        Raises :class:`DrainTimeoutError` on timeout and re-raises a
+        stepper thread's exception if one died.
         """
         if not self.running:
             self._ensure_alive()
@@ -262,15 +477,15 @@ class AsyncDispatcher:
                 return
             raise RuntimeError("cannot drain: dispatcher is not running")
         deadline = None if timeout is None else (_now() + timeout)
-        # never touch the dispatcher (its lock) while holding _cv: the
-        # stepping thread takes them in the opposite nesting
+        # never touch the dispatcher (its locks) while holding _cv: the
+        # steppers publish into _cv-guarded state instead
         with self._cv:
             while True:
                 if self._error is not None:
                     raise RuntimeError(
                         "stepping thread failed"
                     ) from self._error
-                if self._idle and not self._pending:
+                if not self._busy and not self._pending:
                     return
                 remaining = self.idle_wait if deadline is None else deadline - _now()
                 if remaining <= 0:
@@ -294,7 +509,7 @@ class AsyncDispatcher:
                 raise RuntimeError(
                     "stepping thread failed; no new submissions accepted"
                 ) from self._error
-            if self._thread is None or not self._thread.is_alive():
+            if not self.running:
                 raise RuntimeError(
                     "dispatcher is not running; call start() before submit"
                 )
@@ -315,11 +530,11 @@ class AsyncDispatcher:
     def _completion(
         self, fut: Future, user_cb: Optional[Callable[[str, Any], None]]
     ) -> Callable[[str, Any], None]:
-        # runs on the stepping thread, inside Dispatcher.step's lock; taking
-        # _cv here respects the dispatcher-lock→condition ordering.  The
-        # future resolves BEFORE the user callback runs: a raising callback
-        # poisons the dispatcher (loudly, via _fail) but must never leave an
-        # already-completed request's future unresolvable.
+        # runs on a stepper thread, outside all dispatcher locks; taking
+        # _cv here is therefore nesting-free.  The future resolves BEFORE
+        # the user callback runs: a raising callback poisons the dispatcher
+        # (loudly, via _fail) but must never leave an already-completed
+        # request's future unresolvable.
         def done(model: str, req: Any) -> None:
             self._forget(fut)
             if fut.set_running_or_notify_cancel():
@@ -329,9 +544,11 @@ class AsyncDispatcher:
 
         return done
 
-    def _kick(self) -> None:
+    def _kick(self, model: str) -> None:
         with self._cv:
-            self._idle = False
+            # mark the submitted lane busy so drain cannot observe "all
+            # idle" between this append and its stepper noticing the work
+            self._busy.add(model if self.stepping == "per-engine" else _SINGLE)
             self._cv.notify_all()
 
     def _caches(self) -> list:
@@ -344,57 +561,105 @@ class AsyncDispatcher:
                 seen.setdefault(id(cache), cache)
         return list(seen.values())
 
-    def _run(self) -> None:
+    def _run_guarded(self, label: str, body: Callable[[str], None]) -> None:
+        """Stepper entry: build attribution bracketing around ``body``."""
         ident = threading.get_ident()
         # the OS recycles idents of dead threads: any counts already tagged
-        # with ours belong to a previous occupant, not this stepping thread
+        # with ours belong to a previous occupant, not this stepper
         baseline = sum(
             c.stats.builds_by_thread.get(ident, 0) for c in self._caches()
         )
         with self._cv:
-            self._live_baseline = baseline
-            self._live_ident = ident
+            self._live[label] = (ident, baseline)
         try:
-            while True:
-                with self._cv:
-                    if self._stop_flag:
-                        return
-                if self.dispatcher.idle:
-                    with self._cv:
-                        # publish idleness and sleep; a submit racing this
-                        # block resets _idle under the same condition, so the
-                        # stale publish is corrected before anyone trusts it
-                        if not self._pending:
-                            self._idle = True
-                            self._cv.notify_all()
-                        if self._stop_flag:
-                            return
-                        if self._idle:
-                            self._cv.wait(self.idle_wait)
-                    continue
-                try:
-                    self.dispatcher.step()
-                except BaseException as exc:  # noqa: BLE001 - fail all futures
-                    self._fail(exc)
-                    return
-                with self._cv:
-                    self._cv.notify_all()
+            body(label)
         finally:
-            # freeze this thread's build count: once the thread is dead its
-            # ident may be recycled by an unrelated foreground thread.  The
-            # count happens before taking _cv (lock ordering), and the swap
-            # is atomic under _cv so builds_on_thread readers never see the
-            # live count both frozen and still live
+            # freeze this stepper's build count: once the thread is dead
+            # its ident may be recycled by an unrelated foreground thread.
+            # The count happens before taking _cv (lock ordering), and the
+            # swap is atomic under _cv so builds_by_stepper readers never
+            # see the live count both frozen and still live
             live = self._count_builds_of(ident, baseline)
             with self._cv:
-                self._builds_frozen += live
-                self._live_ident = None
+                self._frozen[label] = self._frozen.get(label, 0) + live
+                self._live.pop(label, None)
+
+    def _should_exit(self) -> bool:
+        with self._cv:
+            return self._stop_flag or self._error is not None
+
+    def _run_lane(self, name: str) -> None:
+        """Per-engine stepper: pull quanta for one lane through the
+        arbiter; never touches any other lane's engine."""
+        arbiter = self._arbiter
+        while True:
+            if self._should_exit():
+                return
+            if not self.dispatcher.lane_active(name):
+                with self._cv:
+                    if self._stop_flag or self._error is not None:
+                        return
+                    # re-check activity UNDER _cv: a submit appends to the
+                    # lane before its kick takes _cv, so either we see the
+                    # work here, or the kick's notify is still to come and
+                    # lands in the wait below — no lost wakeup either way
+                    if not self.dispatcher.lane_active(name):
+                        self._busy.discard(name)
+                        self._cv.notify_all()  # drain may be waiting on us
+                        self._cv.wait(self.idle_wait)
+                continue
+            with self._cv:
+                self._busy.add(name)
+            if not arbiter.acquire(name):
+                continue                        # closed: re-check exit flags
+            try:
+                # the grant is returned via release= BEFORE completion
+                # callbacks run, so a slow user callback never holds a
+                # scheduling quantum hostage; releasing twice on the error
+                # path is a harmless set-discard
+                self.dispatcher.step_lane(
+                    name, release=lambda: arbiter.release(name)
+                )
+            except BaseException as exc:  # noqa: BLE001 - fail all futures
+                arbiter.release(name)
+                self._fail(exc)
+                return
+            with self._cv:
+                self._cv.notify_all()
+
+    def _run_single(self, label: str) -> None:
+        """Legacy single-thread loop: steps all lanes in policy order."""
+        while True:
+            if self._should_exit():
+                return
+            if self.dispatcher.idle:
+                with self._cv:
+                    if self._stop_flag or self._error is not None:
+                        return
+                    # same lost-wakeup discipline as _run_lane: only go
+                    # idle if the dispatcher is still idle under _cv
+                    if self.dispatcher.idle:
+                        self._busy.discard(label)
+                        self._cv.notify_all()
+                        self._cv.wait(self.idle_wait)
+                continue
+            with self._cv:
+                self._busy.add(label)
+            try:
+                self.dispatcher.step()
+            except BaseException as exc:  # noqa: BLE001 - fail all futures
+                self._fail(exc)
+                return
+            with self._cv:
+                self._cv.notify_all()
 
     def _fail(self, exc: BaseException) -> None:
         with self._cv:
             self._error = exc
             victims, self._pending = self._pending, set()
             self._cv.notify_all()
+        if self._arbiter is not None:
+            self._arbiter.close()      # other steppers must not block forever
         for fut in victims:
             if fut.set_running_or_notify_cancel():
                 fut.set_exception(exc)

@@ -21,9 +21,14 @@ from typing import Iterable, Optional, Sequence, Union
 
 
 class BucketingPolicy:
-    """Maps a requested length to the schedule length that serves it."""
+    """Maps a requested length to the schedule length that serves it.
+
+    Policies are immutable (frozen dataclasses) and therefore safe to
+    share across threads and engines."""
 
     def bucket(self, length: int) -> int:
+        """The padded length whose sealed schedule serves ``length``
+        (always ≥ ``length``; raises ``ValueError`` if unservable)."""
         raise NotImplementedError
 
     def static_buckets(self) -> Optional[tuple[int, ...]]:
@@ -32,6 +37,7 @@ class BucketingPolicy:
         return None
 
     def check(self, length: int) -> int:
+        """Validate a request length (must be ≥ 1); returns it."""
         if length < 1:
             raise ValueError(f"length must be >= 1, got {length}")
         return length
@@ -44,6 +50,7 @@ class ExactBucketing(BucketingPolicy):
     max_length: Optional[int] = None
 
     def bucket(self, length: int) -> int:
+        """Identity (bounded by ``max_length`` when set)."""
         self.check(length)
         if self.max_length is not None and length > self.max_length:
             raise ValueError(
@@ -65,6 +72,7 @@ class ExplicitBuckets(BucketingPolicy):
         object.__setattr__(self, "buckets", bs)
 
     def bucket(self, length: int) -> int:
+        """Smallest configured bucket ≥ ``length``."""
         self.check(length)
         for b in self.buckets:
             if length <= b:
@@ -74,6 +82,7 @@ class ExplicitBuckets(BucketingPolicy):
         )
 
     def static_buckets(self) -> tuple[int, ...]:
+        """The configured bucket tuple (sorted, deduplicated)."""
         return self.buckets
 
 
@@ -91,6 +100,7 @@ class PowerOfTwoBuckets(BucketingPolicy):
             )
 
     def bucket(self, length: int) -> int:
+        """Next power of two ≥ ``length`` (from ``min_bucket`` up)."""
         self.check(length)
         b = self.min_bucket
         while b < length:
@@ -102,6 +112,7 @@ class PowerOfTwoBuckets(BucketingPolicy):
         return b
 
     def static_buckets(self) -> tuple[int, ...]:
+        """All powers of two in [min_bucket, max_bucket]."""
         out = []
         b = self.min_bucket
         while b <= self.max_bucket:

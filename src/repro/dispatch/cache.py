@@ -10,6 +10,12 @@ traffic the same (function, shape) arrives from many callers, so the sealed
   shape-specialized executable;
 * LRU-bounded (sealed executables hold device code and reserved arenas;
   unbounded growth is a memory leak under shape churn);
+* optionally **byte-budgeted**: each entry carries the ``arena_bytes`` its
+  sealed schedule statically reserves, and a configured ``byte_budget``
+  caps the sum — LRU entries are evicted until the total fits, so the
+  reserved-arena footprint of the cache never exceeds the budget (the
+  entry-count ``capacity`` stays as a fallback ceiling for artifacts that
+  report no arena, e.g. raw serving executables);
 * build-coalescing: concurrent callers that miss on the same key wait on one
   per-key build lock, so a pre-run is never duplicated.
 
@@ -33,9 +39,16 @@ from repro.core.aot import AoTScheduler, ScheduleKey, TaskSchedule
 
 @dataclasses.dataclass
 class CacheStats:
+    """Counters for one :class:`ScheduleCache`.
+
+    Only mutated under the owning cache's lock; reading a snapshot through
+    :meth:`as_dict` (or ``ScheduleCache.snapshot``) is safe from any thread.
+    """
+
     hits: int = 0
     misses: int = 0
     evictions: int = 0
+    bytes_evicted: int = 0        # arena bytes released by evictions
     builds: int = 0               # actual pre-runs (== misses that compiled)
     build_seconds: float = 0.0    # total time spent inside builders
     # builds attributed to the thread that ran them (ident -> count): lets a
@@ -45,14 +58,17 @@ class CacheStats:
 
     @property
     def hit_rate(self) -> float:
+        """Fraction of lookups served from cache (0.0 before any lookup)."""
         total = self.hits + self.misses
         return self.hits / total if total else 0.0
 
     def as_dict(self) -> dict:
+        """Plain-dict view for metrics snapshots and JSON dumps."""
         return {
             "hits": self.hits,
             "misses": self.misses,
             "evictions": self.evictions,
+            "bytes_evicted": self.bytes_evicted,
             "builds": self.builds,
             "build_seconds": self.build_seconds,
             "hit_rate": self.hit_rate,
@@ -71,8 +87,9 @@ def _arena_bytes(value: Any) -> int:
     """Reserved arena estimate of a cached artifact.
 
     ``TaskSchedule`` carries it in ``stats.arena_bytes``; raw executables
-    (the serving engine's prefill/decode path) report 0 — groundwork for
-    byte-based eviction (ROADMAP "cache memory accounting")."""
+    (the serving engine's prefill/decode path) report 0, so they are
+    governed by the entry-count ``capacity`` ceiling rather than the
+    byte budget."""
     stats = getattr(value, "stats", None)
     try:
         return int(getattr(stats, "arena_bytes", 0) or 0)
@@ -92,36 +109,57 @@ class ScheduleCache:
     * :meth:`get_or_build` — the generic path: any hashable key, any builder
       producing a sealed artifact (the serving engine caches raw XLA
       executables for its prefill buckets this way).
+
+    Bounded two ways: ``capacity`` caps the entry count (always), and
+    ``byte_budget`` — when set — caps the summed ``arena_bytes`` of the
+    cached artifacts, evicting LRU-first until the total fits.  Fully
+    thread-safe; see the module docstring for the locking contract.
     """
 
     def __init__(
         self,
         capacity: int = 64,
         *,
+        byte_budget: Optional[int] = None,
         scheduler: Optional[AoTScheduler] = None,
     ) -> None:
         if capacity < 1:
             raise ValueError(f"capacity must be >= 1, got {capacity}")
+        if byte_budget is not None and byte_budget < 1:
+            raise ValueError(f"byte_budget must be >= 1, got {byte_budget}")
         self.capacity = capacity
+        self.byte_budget = byte_budget
         self.scheduler = scheduler or AoTScheduler()
         self.stats = CacheStats()
         self._entries: "OrderedDict[Any, _Entry]" = OrderedDict()
+        self._bytes_total = 0                     # sum of entry arena_bytes
         self._mu = threading.Lock()               # guards entries + stats
         self._build_locks: dict[Any, threading.Lock] = {}
 
     # -- inspection --------------------------------------------------------
 
     def __len__(self) -> int:
+        """Number of cached entries."""
         with self._mu:
             return len(self._entries)
 
     def __contains__(self, key: Any) -> bool:
+        """Membership check without touching hit/miss stats or LRU order."""
         with self._mu:
             return key in self._entries
 
     def keys(self) -> list:
+        """Cached keys in LRU→MRU order."""
         with self._mu:
             return list(self._entries)
+
+    @property
+    def arena_bytes_total(self) -> int:
+        """Sum of every cached entry's reserved ``arena_bytes`` — the number
+        :attr:`byte_budget` is enforced against.  Never exceeds the budget
+        when one is configured."""
+        with self._mu:
+            return self._bytes_total
 
     # -- core paths --------------------------------------------------------
 
@@ -137,12 +175,12 @@ class ScheduleCache:
             return entry.value
 
     def put(self, key: Any, value: Any, *, pin: Any = None) -> None:
+        """Insert (or replace) ``key`` as the MRU entry, then evict as
+        needed to honor ``capacity`` and ``byte_budget``."""
         with self._mu:
-            self._entries[key] = _Entry(
-                value=value, pin=pin, arena_bytes=_arena_bytes(value)
+            self._insert_locked(
+                key, _Entry(value=value, pin=pin, arena_bytes=_arena_bytes(value))
             )
-            self._entries.move_to_end(key)
-            self._evict_locked()
 
     def get_or_build(
         self,
@@ -190,12 +228,10 @@ class ScheduleCache:
                 self.stats.builds_by_thread[tid] = (
                     self.stats.builds_by_thread.get(tid, 0) + 1
                 )
-                self._entries[key] = _Entry(
+                self._insert_locked(key, _Entry(
                     value=value, pin=pin, build_seconds=dt,
                     arena_bytes=_arena_bytes(value),
-                )
-                self._entries.move_to_end(key)
-                self._evict_locked()
+                ))
                 self._build_locks.pop(key, None)
             return value
 
@@ -225,8 +261,8 @@ class ScheduleCache:
         ``entries`` lists (LRU→MRU) each cached artifact's ``arena_bytes``
         (the memory the sealed schedule statically reserves — from
         ``TaskSchedule.stats``; 0 for raw executables) and build time;
-        ``arena_bytes_total`` is their sum, the number a byte-based evictor
-        will budget against (ROADMAP "cache memory accounting").
+        ``arena_bytes_total`` is their sum — the quantity byte-budget
+        eviction keeps at or below ``byte_budget``.
         """
         with self._mu:
             entries = [
@@ -239,23 +275,59 @@ class ScheduleCache:
             ]
             return {
                 "capacity": self.capacity,
+                "byte_budget": self.byte_budget,
                 "size": len(entries),
-                "arena_bytes_total": sum(e["arena_bytes"] for e in entries),
+                "arena_bytes_total": self._bytes_total,
                 "entries": entries,
                 "stats": self.stats.as_dict(),
             }
 
     def invalidate(self, key: Any) -> bool:
+        """Drop ``key`` if cached; returns whether anything was removed."""
         with self._mu:
-            return self._entries.pop(key, None) is not None
+            entry = self._entries.pop(key, None)
+            if entry is None:
+                return False
+            self._bytes_total -= entry.arena_bytes
+            return True
 
     def clear(self) -> None:
+        """Drop every entry (stats are kept)."""
         with self._mu:
             self._entries.clear()
+            self._bytes_total = 0
 
     # -- internals ---------------------------------------------------------
 
-    def _evict_locked(self) -> None:
-        while len(self._entries) > self.capacity:
-            self._entries.popitem(last=False)
+    def _insert_locked(self, key: Any, entry: _Entry) -> None:
+        old = self._entries.pop(key, None)
+        if old is not None:
+            self._bytes_total -= old.arena_bytes
+        if (
+            self.byte_budget is not None
+            and entry.arena_bytes > self.byte_budget
+        ):
+            # an artifact larger than the whole budget can never be
+            # resident: reject it deterministically (counted as an
+            # immediate eviction) instead of churning every resident entry
+            # out only to evict the newcomer too.  The caller still gets
+            # the built value — it just isn't cached.
             self.stats.evictions += 1
+            self.stats.bytes_evicted += entry.arena_bytes
+            return
+        self._entries[key] = entry
+        self._bytes_total += entry.arena_bytes
+        self._evict_locked()
+
+    def _evict_locked(self) -> None:
+        """Evict LRU-first until both limits hold: entry count ≤ capacity
+        and (when a ``byte_budget`` is set) total arena bytes ≤ budget."""
+        while self._entries and (
+            len(self._entries) > self.capacity
+            or (self.byte_budget is not None
+                and self._bytes_total > self.byte_budget)
+        ):
+            _, entry = self._entries.popitem(last=False)
+            self._bytes_total -= entry.arena_bytes
+            self.stats.evictions += 1
+            self.stats.bytes_evicted += entry.arena_bytes

@@ -10,7 +10,7 @@ but cooperative and in-process — the repo's engines are synchronous):
 
     submit(model, prompt)           # backpressure: bounded total queue
       └─ per-model lane (FIFO)
-    step()                          # fairness policy picks lanes to serve
+    step() / step_lane(model)       # fairness policy picks lanes to serve
       ├─ admission control: fill free engine slots from the model's lane
       ├─ engine.step(): one sealed decode step + prefills
       └─ completion callbacks + metrics for every finished request
@@ -23,10 +23,25 @@ budgets.  Backpressure is a bounded pending count: ``submit`` raises
 :class:`QueueFullError` once ``max_pending`` requests are queued or
 in-flight, pushing the wait upstream instead of growing memory.
 
-Thread-safety: every public method takes one reentrant lock, so a
-background stepping thread (``AsyncDispatcher``) and foreground submitters
-interleave safely.  The lock is coarse — ``submit`` can wait out one engine
-step — which is the right trade at this scale; see DESIGN.md §open-seams.
+Thread-safety / locking contract (fine-grained; see DESIGN.md §locking):
+
+* ``_reg_mu`` — narrow registry lock over the lane table.  Held only for
+  dict lookups and registration, never across an engine call.
+* per-lane ``step_mu`` — serializes admission + ``engine.step()`` for ONE
+  lane.  Two lanes step concurrently; one lane never steps twice at once
+  (this is what upholds the engine's single-stepper contract).
+* per-lane ``queue_mu`` — guards that lane's FIFO only.  ``submit``
+  touches just this lock (plus the counter lock), so its latency is
+  independent of any engine's step duration — a submit no longer waits
+  out a decode step, even on its own lane.
+* ``_fair_mu`` — serializes all :class:`FairnessPolicy` calls (policies
+  are not internally locked).
+* ``_count_mu`` — guards the pending-count and rid allocator; O(1), which
+  is what makes ``submit``-side backpressure cheap.
+
+Lock order: ``step_mu → queue_mu`` and ``step_mu → _fair_mu`` are the only
+nestings; ``_reg_mu`` and ``_count_mu`` never nest with anything.
+Completion callbacks run OUTSIDE all dispatcher locks.
 """
 
 from __future__ import annotations
@@ -38,7 +53,7 @@ from typing import Any, Callable, Optional
 
 import numpy as np
 
-from .fairness import FairnessPolicy, FairnessSpec, make_fairness
+from .fairness import FairnessSpec, make_fairness
 from .metrics import DispatchMetrics
 
 
@@ -50,12 +65,34 @@ class DrainTimeoutError(RuntimeError):
     """Raised when a drain exhausts its step/time budget with work pending."""
 
 
+class _Lane:
+    """One tenant: its engine, FIFO, and the two locks that protect them.
+
+    ``queue_mu`` (brief) guards the FIFO; ``step_mu`` (held across one
+    engine step) serializes stepping.  Internal to the dispatcher."""
+
+    __slots__ = ("name", "engine", "queue", "queue_mu", "step_mu")
+
+    def __init__(self, name: str, engine: Any) -> None:
+        self.name = name
+        self.engine = engine
+        self.queue: deque = deque()
+        self.queue_mu = threading.Lock()
+        self.step_mu = threading.Lock()
+
+
 class Dispatcher:
     """Multi-tenant front door over per-model serving engines.
 
     Engines are duck-typed: anything with ``submit(request)``,
     ``step() -> list[Request]``, ``free_slots()``, and ``idle`` works
     (``repro.serving.ServingEngine`` is the canonical one).
+
+    Thread-safe with fine-grained locks: submissions, snapshots, and steps
+    of *different* lanes all proceed concurrently; see the module docstring
+    for which lock protects what.  ``step()`` serves lanes in policy order
+    from the calling thread; ``step_lane()`` is the per-engine quantum that
+    ``AsyncDispatcher``'s per-engine stepper threads drive in parallel.
     """
 
     def __init__(
@@ -71,48 +108,84 @@ class Dispatcher:
         self.max_pending = max_pending
         self.metrics = metrics or DispatchMetrics()
         self.fairness = make_fairness(fairness)
-        self._engines: dict[str, Any] = {}
-        self._lanes: dict[str, deque] = {}
+        self._lanes: dict[str, _Lane] = {}
         self._order: list[str] = []
+        self._reg_mu = threading.Lock()      # lane table + registration
+        self._fair_mu = threading.Lock()     # all FairnessPolicy calls
+        self._count_mu = threading.Lock()    # pending count + rid allocator
+        self._pending_count = 0
         self._next_rid = 0
         # finished Requests, completion order; bounded — a long-running
-        # service must not retain every request it ever served
+        # service must not retain every request it ever served.  deque
+        # appends are atomic, so no extra lock.
         self.completed: deque = deque(maxlen=completed_log)
-        self._mu = threading.RLock()     # guards all mutable dispatch state
 
     # -- registration ------------------------------------------------------
 
     def register_model(self, name: str, engine: Any, *, weight: float = 1.0) -> Any:
-        with self._mu:
-            if name in self._engines:
+        """Add a tenant: ``name`` gets its own lane over ``engine``.
+
+        ``weight`` parameterizes the fairness policy (decode-quantum share
+        under ``weighted``, refill-rate multiplier under ``quota``).
+        Registration is thread-safe and allowed while serving is live —
+        an ``AsyncDispatcher`` picks the new lane up on its next pass.
+        """
+        lane = _Lane(name, engine)
+        with self._reg_mu:
+            if name in self._lanes:
                 raise ValueError(f"model {name!r} already registered")
-            self._engines[name] = engine
-            self._lanes[name] = deque()
+            self._lanes[name] = lane
             self._order.append(name)
+        with self._fair_mu:
             self.fairness.register(name, weight=weight)
-            return engine
+        return engine
 
     @property
     def models(self) -> tuple[str, ...]:
-        with self._mu:
+        """Registered model names, in registration order."""
+        with self._reg_mu:
             return tuple(self._order)
 
     def engine(self, name: str) -> Any:
-        with self._mu:
-            return self._engines[name]
+        """The engine serving ``name`` (KeyError if unregistered)."""
+        return self._lane(name).engine
+
+    def _lane(self, name: str) -> _Lane:
+        with self._reg_mu:
+            try:
+                return self._lanes[name]
+            except KeyError:
+                raise KeyError(f"unknown model {name!r}") from None
+
+    def _lanes_snapshot(self) -> list[_Lane]:
+        with self._reg_mu:
+            return [self._lanes[n] for n in self._order]
 
     # -- submission (backpressure) -----------------------------------------
 
     def pending(self) -> int:
-        """Requests queued in lanes plus live in the engines."""
-        with self._mu:
-            lanes = sum(len(q) for q in self._lanes.values())
-            live = sum(
-                len(getattr(e, "queue", ())) +
-                sum(1 for s in getattr(e, "slots", ()) if s is not None)
-                for e in self._engines.values()
+        """Requests submitted through this dispatcher and not yet finished
+        (queued in lanes plus live in engines).  O(1): maintained as a
+        counter so backpressure checks never take a lane lock."""
+        with self._count_mu:
+            return self._pending_count
+
+    def _admit(self, req: Any) -> None:
+        """Charge one request against ``max_pending`` (raising at capacity)
+        and stamp submit-side bookkeeping.  Called with NO lock held."""
+        with self._count_mu:
+            full = self._pending_count >= self.max_pending
+            if not full:
+                self._pending_count += 1
+        if full:
+            # outside _count_mu: it is a leaf lock and must stay one
+            self.metrics.on_reject()
+            raise QueueFullError(
+                f"dispatcher at capacity ({self.max_pending} pending)"
             )
-            return lanes + live
+        req._dispatcher_pending = True
+        req.t_submit = time.perf_counter()
+        self.metrics.on_submit(req.t_submit)
 
     def submit(
         self,
@@ -123,55 +196,50 @@ class Dispatcher:
         tenant: str = "",
         on_complete: Optional[Callable[[str, Any], None]] = None,
     ):
-        """Enqueue one request for ``model``; returns the ``Request``."""
+        """Enqueue one request for ``model``; returns the ``Request``.
+
+        Raises ``KeyError`` for an unknown model, a validation error for a
+        request the engine can never serve (synchronously, on the
+        submitter), and :class:`QueueFullError` at capacity.  Only the
+        lane's queue lock and the O(1) counter lock are taken, so submit
+        latency is independent of engine step time.
+        """
         from repro.serving.engine import Request  # lazy: avoid import cycle
 
-        with self._mu:
-            if model not in self._engines:
-                raise KeyError(f"unknown model {model!r}")
-            if self.pending() >= self.max_pending:
-                self.metrics.on_reject()
-                raise QueueFullError(
-                    f"dispatcher at capacity ({self.max_pending} pending)"
-                )
-            req = Request(
-                rid=self._next_rid,
-                prompt=np.asarray(prompt, np.int32),
-                max_new_tokens=max_new_tokens,
-                tenant=tenant,
-                model=model,
-                on_complete=on_complete,
-            )
-            self._validate_locked(model, req)
+        lane = self._lane(model)
+        req = Request(
+            rid=-1,                     # allocated only after validation
+            prompt=np.asarray(prompt, np.int32),
+            max_new_tokens=max_new_tokens,
+            tenant=tenant,
+            model=model,
+            on_complete=on_complete,
+        )
+        self._validate(lane, req)
+        self._admit(req)
+        with self._count_mu:
+            req.rid = self._next_rid
             self._next_rid += 1
-            req.t_submit = time.perf_counter()
-            self.metrics.on_submit(req.t_submit)
-            self._lanes[model].append(req)
-            return req
+        with lane.queue_mu:
+            lane.queue.append(req)
+        return req
 
     def submit_request(self, model: str, req: Any) -> Any:
         """Enqueue a caller-constructed ``Request`` (keeps its rid/fields)."""
-        with self._mu:
-            if model not in self._engines:
-                raise KeyError(f"unknown model {model!r}")
-            if self.pending() >= self.max_pending:
-                self.metrics.on_reject()
-                raise QueueFullError(
-                    f"dispatcher at capacity ({self.max_pending} pending)"
-                )
-            self._validate_locked(model, req)
-            req.model = model
-            req.t_submit = time.perf_counter()
-            self.metrics.on_submit(req.t_submit)
-            self._lanes[model].append(req)
-            return req
+        lane = self._lane(model)
+        self._validate(lane, req)
+        req.model = model
+        self._admit(req)
+        with lane.queue_mu:
+            lane.queue.append(req)
+        return req
 
-    def _validate_locked(self, model: str, req: Any) -> None:
+    def _validate(self, lane: _Lane, req: Any) -> None:
         """An unservable request (e.g. prompt beyond the engine's bucket
         family) must raise HERE, on the submitter — once it reaches a lane,
         the failure would surface on the stepping thread and poison every
         tenant's in-flight work."""
-        validate = getattr(self._engines[model], "validate_request", None)
+        validate = getattr(lane.engine, "validate_request", None)
         if validate is not None:
             validate(req)
 
@@ -186,57 +254,113 @@ class Dispatcher:
             return None
         return out + getattr(stats, "prefill_tokens", 0)
 
-    def _active_locked(self) -> list[str]:
+    def lane_active(self, name: str) -> bool:
+        """Whether ``name`` has queued or in-flight work right now.
+
+        Lock-free peek (deque length reads are atomic): callers use it to
+        decide *whether to try* a step, and a stale answer only costs one
+        empty quantum or one short sleep."""
+        lane = self._lane(name)
+        return bool(lane.queue) or not lane.engine.idle
+
+    def _active(self) -> list[str]:
         return [
-            name for name in self._order
-            if self._lanes[name] or not self._engines[name].idle
+            lane.name for lane in self._lanes_snapshot()
+            if lane.queue or not lane.engine.idle
         ]
 
+    def fairness_select(self, active: list) -> list:
+        """Ask the policy for a service order over ``active`` under the
+        fairness lock — the hook ``AsyncDispatcher``'s quantum arbiter
+        grants through (charging still happens in :meth:`step_lane`)."""
+        with self._fair_mu:
+            return self.fairness.select(list(active))
+
+    def step_lane(self, name: str, *, release: Optional[Callable[[], None]] = None) -> list:
+        """One scheduling quantum for a single lane; returns its finished
+        requests.  The per-engine stepping primitive: concurrent calls on
+        *different* lanes overlap (each under its own ``step_mu``), and the
+        engine's single-stepper contract is upheld per lane.
+
+        Charges the fairness policy for the quantum and feeds per-engine
+        step metrics.  ``release``, if given, is invoked once the engine
+        step and the fairness charge are done but BEFORE completion
+        callbacks fire — the async layer returns its arbiter grant there,
+        so a slow user callback never holds a scheduling quantum hostage.
+        Completion callbacks run on the calling thread, outside every
+        dispatcher lock.
+        """
+        lane = self._lane(name)
+        with lane.step_mu:
+            engine = lane.engine
+            # admission control: only hand the engine what it can seat now,
+            # so queueing (and thus backpressure) stays visible here
+            with lane.queue_mu:
+                while lane.queue and engine.free_slots() > 0:
+                    engine.submit(lane.queue.popleft())
+            stats = getattr(engine, "stats", None)
+            tok_before = self._engine_tokens(stats)
+            t0 = time.perf_counter()
+            newly = engine.step()
+            dt = time.perf_counter() - t0
+            if tok_before is not None:
+                tokens = self._engine_tokens(stats) - tok_before
+            else:
+                # duck-typed engine without token stats: charge a finished
+                # request's output in one burst at completion
+                tokens = sum(len(r.generated) for r in newly)
+        with self._fair_mu:
+            self.fairness.charge(name, steps=1, tokens=tokens)
+        self.metrics.on_engine_step(name, dt, tokens=tokens)
+        if release is not None:
+            release()
+        self._complete(name, newly)
+        return newly
+
+    def _complete(self, name: str, newly: list) -> None:
+        """Account finished requests and fire their callbacks (no locks
+        held — a slow or re-entrant callback cannot stall other lanes)."""
+        for req in newly:
+            self.metrics.observe_request(req)
+            self.completed.append(req)
+            if getattr(req, "_dispatcher_pending", False):
+                req._dispatcher_pending = False
+                with self._count_mu:
+                    self._pending_count -= 1
+            cb = getattr(req, "on_complete", None)
+            if cb is not None:
+                cb(name, req)
+
     def step(self) -> list:
-        """One dispatch quantum; returns requests that finished during it.
+        """One dispatch quantum over all lanes; returns requests that
+        finished during it.
 
         The fairness policy picks which active lanes (lanes with queued or
         in-flight work) are served and in what order; each served lane is
         charged the decode step and the tokens it produced, so ``weighted``
-        and ``quota`` policies converge on their configured shares.
+        and ``quota`` policies converge on their configured shares.  Safe
+        to call from multiple threads (lane steps serialize per lane), but
+        one driver — or per-engine steppers via ``step_lane`` — is the
+        intended shape.
         """
-        with self._mu:
-            active = self._active_locked()
-            if not active:
-                return []
-            finished = []
-            for name in self.fairness.select(active):
-                engine = self._engines[name]
-                lane = self._lanes[name]
-                # admission control: only hand the engine what it can seat
-                # now, so queueing (and thus backpressure) stays visible here
-                while lane and engine.free_slots() > 0:
-                    engine.submit(lane.popleft())
-                stats = getattr(engine, "stats", None)
-                tok_before = self._engine_tokens(stats)
-                newly = engine.step()
-                if tok_before is not None:
-                    tokens = self._engine_tokens(stats) - tok_before
-                else:
-                    # duck-typed engine without token stats: charge a
-                    # finished request's output in one burst at completion
-                    tokens = sum(len(r.generated) for r in newly)
-                self.fairness.charge(name, steps=1, tokens=tokens)
-                for req in newly:
-                    self.metrics.observe_request(req)
-                    self.completed.append(req)
-                    finished.append(req)
-                    cb = getattr(req, "on_complete", None)
-                    if cb is not None:
-                        cb(name, req)
-            return finished
+        active = self._active()
+        if not active:
+            return []
+        with self._fair_mu:
+            order = self.fairness.select(active)
+        finished = []
+        for name in order:
+            finished.extend(self.step_lane(name))
+        return finished
 
     @property
     def idle(self) -> bool:
-        with self._mu:
-            return all(len(q) == 0 for q in self._lanes.values()) and all(
-                e.idle for e in self._engines.values()
-            )
+        """True when no dispatcher-submitted request is pending and every
+        engine reports itself idle (covers work submitted to an engine
+        directly, outside this dispatcher)."""
+        if self.pending() > 0:
+            return False
+        return all(lane.engine.idle for lane in self._lanes_snapshot())
 
     def run_until_drained(self, max_steps: int = 100_000) -> list:
         """Step until every lane and engine is empty; returns all requests
@@ -259,17 +383,18 @@ class Dispatcher:
         )
 
     def snapshot(self) -> dict:
-        """Metrics snapshot including per-model schedule-cache stats."""
-        with self._mu:
-            caches = {}
-            for name, e in self._engines.items():
-                cache = getattr(e, "schedule_cache", None)
-                if cache is not None:
-                    caches[name] = cache.stats.as_dict()
-            snap = self.metrics.snapshot()
-            if caches:
-                snap["schedule_cache"] = caches
-            snap["models"] = list(self._order)
-            snap["pending"] = self.pending()
+        """Metrics snapshot including per-model schedule-cache stats,
+        per-engine step series, pending depth, and fairness state."""
+        caches = {}
+        for lane in self._lanes_snapshot():
+            cache = getattr(lane.engine, "schedule_cache", None)
+            if cache is not None:
+                caches[lane.name] = cache.stats.as_dict()
+        snap = self.metrics.snapshot()
+        if caches:
+            snap["schedule_cache"] = caches
+        snap["models"] = list(self.models)
+        snap["pending"] = self.pending()
+        with self._fair_mu:
             snap["fairness"] = self.fairness.snapshot()
-            return snap
+        return snap

@@ -18,18 +18,24 @@ Three implementations, a strict generalization ladder:
   the decode steps) while no active lane is ever starved — the pass gap is
   bounded by ``ceil(W/w) + n`` quanta;
 * :class:`QuotaFairness` — token-rate quotas: each lane owns a token bucket
-  refilled by ``rate`` tokens per quantum up to ``burst``; lanes with credit
-  are served richest-first and debited what they produce.  Work-conserving
-  by default (if nobody has credit, the least-indebted lane still runs).
+  refilled by ``rate`` tokens **per wall-clock second** (monotonic clock)
+  up to ``burst``; lanes with credit are served richest-first and debited
+  what they produce.  Work-conserving by default (if nobody has credit, the
+  least-indebted lane still runs).
 
 Policies are NOT internally locked: the owning dispatcher serializes all
-calls (its submit/step lock).  Mutating a policy from two dispatchers at
-once is a usage error.
+calls (``Dispatcher._fair_mu`` — one dedicated mutex, shared with the
+async layer's quantum arbiter).  Mutating a policy from two dispatchers at
+once is a usage error.  Because per-engine steppers may call ``select``
+at an uneven cadence, policies must not treat "one select call" as a unit
+of time — which is exactly why :class:`QuotaFairness` refills from the
+wall clock rather than per quantum.
 """
 
 from __future__ import annotations
 
-from typing import Mapping, Optional, Sequence, Union
+import time
+from typing import Callable, Mapping, Optional, Sequence, Union
 
 _MIN_WEIGHT = 1e-6      # stride floor: weight 0 means "background", not "never"
 
@@ -66,9 +72,11 @@ class RoundRobinFairness(FairnessPolicy):
         self._served: dict[str, int] = {}
 
     def register(self, lane: str, *, weight: float = 1.0) -> None:
+        """Admit ``lane``; round-robin ignores weights."""
         self._served[lane] = 0
 
     def select(self, active: Sequence[str]) -> list[str]:
+        """All active lanes, head rotated by one position per quantum."""
         if not active:
             return []
         k = self._turn % len(active)
@@ -76,9 +84,11 @@ class RoundRobinFairness(FairnessPolicy):
         return list(active[k:]) + list(active[:k])
 
     def charge(self, lane: str, *, steps: int = 1, tokens: int = 0) -> None:
+        """Count served quanta (rotation itself needs no accounting)."""
         self._served[lane] = self._served.get(lane, 0) + steps
 
     def snapshot(self) -> dict:
+        """Per-lane served-quantum counts."""
         return {"policy": "round_robin", "served_steps": dict(self._served)}
 
 
@@ -100,6 +110,7 @@ class WeightedFairness(FairnessPolicy):
         self._last_active: frozenset = frozenset()
 
     def register(self, lane: str, *, weight: float = 1.0) -> None:
+        """Admit ``lane`` at ``weight`` (preset mapping wins if present)."""
         w = float(self._preset.get(lane, weight))
         if w < 0:
             raise ValueError(f"weight must be >= 0, got {w} for {lane!r}")
@@ -120,6 +131,8 @@ class WeightedFairness(FairnessPolicy):
         return 1.0 / max(self._weight[lane], _MIN_WEIGHT)
 
     def select(self, active: Sequence[str]) -> list[str]:
+        """The single active lane with the smallest virtual pass (ties
+        break by registration order)."""
         if not active:
             self._last_active = frozenset()
             return []
@@ -136,10 +149,12 @@ class WeightedFairness(FairnessPolicy):
         return [min(active, key=lambda l: (self._pass[l], rank[l]))]
 
     def charge(self, lane: str, *, steps: int = 1, tokens: int = 0) -> None:
+        """Advance ``lane``'s pass by ``steps``/weight (stride update)."""
         self._pass[lane] += steps * self._stride(lane)
         self._served[lane] = self._served.get(lane, 0) + steps
 
     def snapshot(self) -> dict:
+        """Normalized weights, served quanta, and virtual passes."""
         return {
             "policy": "weighted",
             "weights": self.normalized(),
@@ -149,8 +164,17 @@ class WeightedFairness(FairnessPolicy):
 
 
 class QuotaFairness(FairnessPolicy):
-    """Token-rate quotas: each lane's bucket refills by ``rate`` tokens per
-    quantum up to ``burst``; serving debits tokens actually produced.
+    """Token-rate quotas refilled from the wall clock: each lane's bucket
+    gains ``rate`` tokens per elapsed **second** (monotonic clock, capped
+    at ``burst``); serving debits tokens actually produced.
+
+    Refill is time-based, not per-quantum: two ``select`` calls a
+    microsecond apart grant ~nothing, a call after a long idle gap grants
+    up to one full ``burst`` — so a lane's realized token rate tracks its
+    configured quota regardless of how often the dispatcher (or each
+    per-engine stepper) happens to ask.  ``clock`` is injectable for
+    deterministic tests; it must be monotonic and is read only inside
+    ``select``, under the owning dispatcher's fairness lock.
 
     ``work_conserving=True`` (default) never idles hardware: when no lane
     has credit, the least-indebted active lane runs anyway.  With it off,
@@ -166,6 +190,7 @@ class QuotaFairness(FairnessPolicy):
         *,
         rates: Optional[Mapping[str, float]] = None,
         work_conserving: bool = True,
+        clock: Callable[[], float] = time.monotonic,
     ) -> None:
         if rate <= 0 or burst <= 0:
             raise ValueError(f"rate/burst must be > 0, got {rate}/{burst}")
@@ -173,27 +198,42 @@ class QuotaFairness(FairnessPolicy):
         self.burst = float(burst)
         self._rates = dict(rates or {})
         self.work_conserving = work_conserving
+        self._clock = clock
+        self._last_refill: Optional[float] = None
         self._budget: dict[str, float] = {}
         self._rate_of: dict[str, float] = {}
         self._served: dict[str, int] = {}
         self._tokens: dict[str, int] = {}
 
     def register(self, lane: str, *, weight: float = 1.0) -> None:
-        # weight scales the base refill rate, so `register_model(weight=3)`
-        # means the same thing under quota as under weighted fairness
+        """Admit ``lane`` with a full burst of credit.  ``weight`` scales
+        the base refill rate, so ``register_model(weight=3)`` means the
+        same thing under quota as under weighted fairness."""
         rate = float(self._rates.get(lane, self.rate * max(weight, 0.0)))
         self._rate_of[lane] = rate
-        self._budget[lane] = min(rate, self.burst)
+        self._budget[lane] = self.burst
         self._served[lane] = 0
         self._tokens[lane] = 0
 
+    def _refill(self) -> None:
+        now = self._clock()
+        if self._last_refill is None:
+            self._last_refill = now
+            return
+        dt = now - self._last_refill
+        if dt <= 0:
+            return
+        self._last_refill = now
+        for lane, rate in self._rate_of.items():
+            self._budget[lane] = min(self.burst, self._budget[lane] + rate * dt)
+
     def select(self, active: Sequence[str]) -> list[str]:
+        """Refill every bucket from the elapsed wall time, then serve
+        funded lanes richest-first (or the least-indebted lane when
+        work-conserving and everyone is broke)."""
         if not active:
             return []
-        for lane in active:
-            self._budget[lane] = min(
-                self.burst, self._budget[lane] + self._rate_of[lane]
-            )
+        self._refill()
         funded = [l for l in active if self._budget[l] > 0]
         if funded:
             return sorted(funded, key=lambda l: -self._budget[l])
@@ -202,14 +242,17 @@ class QuotaFairness(FairnessPolicy):
         return []
 
     def charge(self, lane: str, *, steps: int = 1, tokens: int = 0) -> None:
+        """Debit ``lane``'s bucket by the tokens it actually produced."""
         self._budget[lane] -= tokens
         self._served[lane] = self._served.get(lane, 0) + steps
         self._tokens[lane] = self._tokens.get(lane, 0) + tokens
 
     def snapshot(self) -> dict:
+        """Budgets, refill rates, and service totals per lane."""
         return {
             "policy": "quota",
             "budget": dict(self._budget),
+            "rate_per_s": dict(self._rate_of),
             "served_steps": dict(self._served),
             "served_tokens": dict(self._tokens),
         }
@@ -224,7 +267,7 @@ def make_fairness(spec: FairnessSpec) -> FairnessPolicy:
     ``None`` / ``"round_robin"`` → rotation; ``"weighted"`` → stride
     scheduling (weights from ``register``); a ``{lane: weight}`` mapping →
     stride scheduling with preset weights; ``"quota[:RATE[:BURST]]"`` →
-    token-rate quotas.
+    token-rate quotas (RATE tokens per wall-clock second, BURST cap).
     """
     if spec is None:
         return RoundRobinFairness()

@@ -50,13 +50,16 @@ class LatencySeries:
         self.values = deque(self.values, maxlen=self.window)
 
     def record(self, seconds: float) -> None:
+        """Append one observation (in seconds)."""
         self.values.append(float(seconds))
 
     @property
     def count(self) -> int:
+        """Observations currently retained (≤ ``window``)."""
         return len(self.values)
 
     def summary_ms(self) -> dict:
+        """Count/mean/p50/p90/p99/max over the retained window, in ms."""
         vals = np.asarray(self.values, dtype=np.float64) * 1e3
         if not len(vals):
             return {"count": 0, "mean": 0.0, "p50": 0.0, "p90": 0.0,
@@ -71,8 +74,33 @@ class LatencySeries:
         }
 
 
+@dataclasses.dataclass
+class _EngineSeries:
+    """Per-engine stepping record: quantum count, tokens, step latency.
+
+    Internal to :class:`DispatchMetrics`; mutated only under its lock."""
+
+    steps: int = 0
+    tokens: int = 0
+    step_latency: LatencySeries = None
+
+    def __post_init__(self) -> None:
+        if self.step_latency is None:
+            self.step_latency = LatencySeries("engine_step", window=8192)
+
+
 class DispatchMetrics:
-    """Aggregates per-request observations into a serving-level snapshot."""
+    """Aggregates per-request observations into a serving-level snapshot.
+
+    Thread-safe: any number of stepper threads may feed
+    :meth:`observe_request` / :meth:`on_engine_step` while submitters call
+    :meth:`on_submit` / :meth:`on_reject` and monitors call
+    :meth:`snapshot` — one internal lock serializes everything.  Per-engine
+    stepping makes the per-model breakdown matter: the ``engines`` section
+    of the snapshot shows each stepper's quantum count and step-latency
+    distribution, so a slow tenant is visible as *its* p99, not a blur in
+    the aggregate.
+    """
 
     def __init__(self) -> None:
         self.ttft = LatencySeries("ttft")            # submit -> first token
@@ -81,19 +109,36 @@ class DispatchMetrics:
         self.requests_done = 0
         self.tokens_out = 0
         self.rejected = 0                             # backpressure refusals
+        self._engines: dict = {}                      # model -> _EngineSeries
         self._t_first_submit: Optional[float] = None
         self._t_last_done: Optional[float] = None
         self._mu = threading.Lock()
 
     def on_submit(self, t_submit: Optional[float] = None) -> None:
+        """Record one accepted submission (its timestamp anchors wall time)."""
         t = time.perf_counter() if t_submit is None else t_submit
         with self._mu:
             if self._t_first_submit is None or t < self._t_first_submit:
                 self._t_first_submit = t
 
     def on_reject(self) -> None:
+        """Record one backpressure refusal."""
         with self._mu:
             self.rejected += 1
+
+    def on_engine_step(
+        self, model: str, seconds: float, *, tokens: int = 0
+    ) -> None:
+        """Record one engine stepping quantum for ``model``: its wall time
+        and the tokens it produced.  Fed by ``Dispatcher.step_lane`` from
+        whichever thread stepped the lane."""
+        with self._mu:
+            rec = self._engines.get(model)
+            if rec is None:
+                rec = self._engines[model] = _EngineSeries()
+            rec.steps += 1
+            rec.tokens += tokens
+            rec.step_latency.record(seconds)
 
     def observe_request(self, req: Any) -> None:
         """Fold one finished request (serving ``Request`` timestamps) in."""
@@ -128,20 +173,25 @@ class DispatchMetrics:
 
     @property
     def wall_seconds(self) -> float:
+        """First submit to last completion, in seconds (0.0 before both)."""
         with self._mu:
             return self._wall_locked()
 
     @property
     def tokens_per_second(self) -> float:
+        """Aggregate decode+prefill token throughput over the wall window."""
         with self._mu:
             return self._tokens_per_second_locked()
 
     @property
     def requests_per_second(self) -> float:
+        """Completed-request throughput over the wall window."""
         with self._mu:
             return self._requests_per_second_locked()
 
     def snapshot(self, cache_stats: Optional[dict] = None) -> dict:
+        """One coherent dict of every aggregate this object tracks,
+        including the per-engine ``engines`` breakdown."""
         with self._mu:
             snap = {
                 "requests_done": self.requests_done,
@@ -153,6 +203,14 @@ class DispatchMetrics:
                 "ttft_ms": self.ttft.summary_ms(),
                 "per_token_ms": self.per_token.summary_ms(),
                 "e2e_ms": self.e2e.summary_ms(),
+                "engines": {
+                    model: {
+                        "steps": rec.steps,
+                        "tokens": rec.tokens,
+                        "step_ms": rec.step_latency.summary_ms(),
+                    }
+                    for model, rec in self._engines.items()
+                },
             }
         if cache_stats is not None:
             snap["schedule_cache"] = dict(cache_stats)

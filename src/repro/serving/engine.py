@@ -81,6 +81,7 @@ class ServingEngine:
         schedule_cache: Optional[ScheduleCache] = None,
         warmup: bool = True,
         greedy: bool = True,
+        device: Any = None,
     ) -> None:
         if cfg.family in ("hybrid", "ssm"):
             raise NotImplementedError(
@@ -88,6 +89,15 @@ class ServingEngine:
                 "use batch decode directly for SSM/hybrid archs"
             )
         self.cfg = cfg
+        # `device` pins this engine's weights, KV cache, and executables to
+        # one device — the serving analogue of the paper's stream
+        # assignment: per-engine steppers over engines on *different*
+        # devices overlap decode with no shared execution queue.  On CPU,
+        # expose extra host devices with
+        # XLA_FLAGS=--xla_force_host_platform_device_count=N.
+        self.device = device
+        if device is not None:
+            params = jax.device_put(params, device)
         self.params = params
         self.max_slots = max_slots
         self.max_len = max_len
@@ -104,15 +114,20 @@ class ServingEngine:
         self.stats = EngineStats()
 
         # sealed-executable identity beyond arg shapes: anything that changes
-        # the traced computation without changing input shapes
+        # the traced computation without changing input shapes.  The device
+        # is part of the identity: an executable compiled for device 0 must
+        # not be replayed against arrays committed to device 1.
         self._key_options = (
             ("cfg", repr(cfg)),
             ("max_len", max_len),
             ("max_slots", max_slots),
+            ("device", repr(device) if device is not None else ""),
         )
 
         # --- AoT scheduling: seal the step executables through the cache --
         self.kv_cache = init_cache(cfg, max_slots, max_len)
+        if device is not None:
+            self.kv_cache = jax.device_put(self.kv_cache, device)
         # per-engine memo of bucket -> ScheduleKey: key construction flattens
         # the whole params pytree, too costly per admitted request.  Only the
         # *key* is memoized — executables stay owned by the shared cache, so
@@ -129,9 +144,13 @@ class ServingEngine:
         self.queue: list[Request] = []
         self._next_tok = np.zeros((max_slots, 1), np.int32)
         # thread-safety contract: the engine is single-stepper — exactly one
-        # thread may drive step() at a time (the dispatcher's lock provides
-        # that).  This guard turns an accidental second stepper into a loud
-        # error instead of corrupted KV state.
+        # thread may drive step() at a time.  Under the dispatch layer that
+        # thread is whoever holds this engine's lane step-lock (one
+        # dedicated stepper per engine in AsyncDispatcher's per-engine
+        # mode; the loop thread in single mode).  This guard turns an
+        # accidental second stepper — e.g. an engine registered with two
+        # dispatchers, or a caller stepping directly while dispatched —
+        # into a loud error instead of corrupted KV state.
         self._step_mu = threading.Lock()
 
     # -- sealed executables through the schedule cache ---------------------
@@ -315,8 +334,9 @@ class ServingEngine:
         if not self._step_mu.acquire(blocking=False):
             raise RuntimeError(
                 "ServingEngine.step() entered concurrently: the engine is "
-                "single-stepper; drive it from one thread (e.g. through a "
-                "Dispatcher)"
+                "single-stepper; drive it from one thread or lane (e.g. "
+                "through a Dispatcher, which serializes per-lane stepping "
+                "even with per-engine stepper threads)"
             )
         try:
             return self._step_locked()

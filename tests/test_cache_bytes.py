@@ -1,0 +1,196 @@
+"""Byte-budget cache eviction (ISSUE 3): total reserved ``arena_bytes``
+never exceeds the configured budget.
+
+Three layers of coverage:
+
+* deterministic unit behavior — LRU-first byte eviction, hit-refreshed
+  order, oversized-entry rejection that leaves residents untouched, and
+  accounting through ``put``/``invalidate``/``clear``;
+* a real-thread stress test — concurrent builders churn keys of varied
+  sizes while a sampler thread continuously asserts the budget invariant
+  and that ``snapshot()``'s per-entry bytes sum to its reported total;
+* an integration check over real sealed ``TaskSchedule`` artifacts, whose
+  ``stats.arena_bytes`` drive the accounting end to end.
+"""
+
+import threading
+
+import pytest
+
+from repro.dispatch import ScheduleCache
+
+
+class _Sealed:
+    """Fake sealed artifact reporting a reserved arena (like TaskSchedule)."""
+
+    class _Stats:
+        def __init__(self, n):
+            self.arena_bytes = n
+
+    def __init__(self, n):
+        self.stats = self._Stats(n)
+
+
+# -- deterministic unit behavior ----------------------------------------------
+
+def test_byte_budget_evicts_lru_first():
+    cache = ScheduleCache(capacity=64, byte_budget=100)
+    cache.put("a", _Sealed(40))
+    cache.put("b", _Sealed(40))
+    cache.put("c", _Sealed(40))          # 120 > 100: LRU "a" goes
+    assert cache.keys() == ["b", "c"]
+    assert cache.arena_bytes_total == 80
+    assert cache.stats.evictions == 1
+    assert cache.stats.bytes_evicted == 40
+
+
+def test_byte_budget_respects_lru_refresh_on_hit():
+    cache = ScheduleCache(capacity=64, byte_budget=100)
+    cache.put("a", _Sealed(40))
+    cache.put("b", _Sealed(40))
+    assert cache.get("a") is not None    # refresh "a": now "b" is LRU
+    cache.put("c", _Sealed(40))
+    assert cache.keys() == ["a", "c"]
+
+
+def test_entry_count_capacity_still_applies_as_fallback():
+    """Artifacts reporting no arena (raw executables → 0 bytes) are still
+    bounded by the entry-count ceiling."""
+    cache = ScheduleCache(capacity=2, byte_budget=10**9)
+    for key in ("a", "b", "c"):
+        cache.put(key, _Sealed(0))
+    assert len(cache) == 2
+    assert cache.stats.evictions == 1
+
+
+def test_oversized_entry_rejected_without_disturbing_residents():
+    cache = ScheduleCache(capacity=64, byte_budget=100)
+    cache.put("small", _Sealed(10))
+    built = []
+
+    def build():
+        built.append(1)
+        return _Sealed(1000)
+
+    got = cache.get_or_build("huge", build)
+    assert got.stats.arena_bytes == 1000   # caller still gets the value
+    assert "huge" not in cache             # but it can never be resident
+    assert "small" in cache                # residents untouched
+    assert cache.arena_bytes_total == 10
+    assert cache.stats.bytes_evicted == 1000
+    # deterministic on retry: rebuilt (it is a miss every time), never cached
+    cache.get_or_build("huge", build)
+    assert "huge" not in cache and "small" in cache
+    assert len(built) == 2
+
+
+def test_replacement_and_invalidate_keep_byte_accounting():
+    cache = ScheduleCache(capacity=64, byte_budget=1000)
+    cache.put("k", _Sealed(100))
+    cache.put("k", _Sealed(250))           # replace: not 350
+    assert cache.arena_bytes_total == 250
+    cache.put("j", _Sealed(50))
+    assert cache.invalidate("k")
+    assert cache.arena_bytes_total == 50
+    cache.clear()
+    assert cache.arena_bytes_total == 0
+    assert cache.snapshot()["arena_bytes_total"] == 0
+
+
+def test_byte_budget_validation():
+    with pytest.raises(ValueError):
+        ScheduleCache(byte_budget=0)
+    assert ScheduleCache().byte_budget is None   # unbounded by default
+
+
+# -- stress: the invariant under concurrent builds ----------------------------
+
+@pytest.mark.timeout(60)
+def test_byte_budget_held_under_concurrent_builds():
+    """N threads churn keys of varied sizes through get_or_build while a
+    sampler thread continuously checks (a) total ≤ budget and (b) the
+    snapshot's per-entry bytes sum to its reported total."""
+    budget = 1_000
+    cache = ScheduleCache(capacity=1024, byte_budget=budget)
+    n_threads, n_keys, n_rounds = 8, 40, 6
+    sizes = {k: 17 * (k % 13 + 1) for k in range(n_keys)}
+    violations: list = []
+    errors: list = []
+    stop = threading.Event()
+    barrier = threading.Barrier(n_threads + 1)
+
+    def sampler():
+        barrier.wait(timeout=10)
+        while not stop.is_set():
+            snap = cache.snapshot()
+            if snap["arena_bytes_total"] > budget:
+                violations.append(("over budget", snap["arena_bytes_total"]))
+            listed = sum(e["arena_bytes"] for e in snap["entries"])
+            if listed != snap["arena_bytes_total"]:
+                violations.append(
+                    ("total mismatch", listed, snap["arena_bytes_total"])
+                )
+
+    def worker(tid):
+        try:
+            barrier.wait(timeout=10)
+            for r in range(n_rounds):
+                for k in range(n_keys):
+                    key = (tid + 3 * k + 7 * r) % n_keys
+                    got = cache.get_or_build(
+                        key, lambda key=key: _Sealed(sizes[key])
+                    )
+                    assert got.stats.arena_bytes == sizes[key]
+        except BaseException as exc:  # noqa: BLE001 - surface in main thread
+            errors.append(exc)
+
+    threads = [threading.Thread(target=worker, args=(t,)) for t in range(n_threads)]
+    sam = threading.Thread(target=sampler)
+    sam.start()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=30)
+    stop.set()
+    sam.join(timeout=10)
+    assert not errors
+    assert not violations
+    assert all(not t.is_alive() for t in threads) and not sam.is_alive()
+    snap = cache.snapshot()
+    assert snap["arena_bytes_total"] <= budget
+    assert snap["arena_bytes_total"] == sum(
+        e["arena_bytes"] for e in snap["entries"]
+    )
+    # the budget actually bit: this workload cannot fit entirely
+    assert cache.stats.evictions > 0
+    assert cache.stats.bytes_evicted > 0
+
+
+# -- integration: real sealed schedules ---------------------------------------
+
+@pytest.mark.timeout(120)
+def test_byte_budget_with_real_schedules():
+    """Budget sized for exactly one sealed TaskSchedule: caching a second
+    must evict (or reject) so the reserved-arena total stays ≤ budget."""
+    import jax.numpy as jnp
+    import numpy as np
+
+    def f(x):
+        return jnp.tanh(x) @ x
+
+    def g(x):
+        return x @ x + 1.0
+
+    x = np.ones((8, 8), np.float32)
+    probe = ScheduleCache(capacity=8)
+    budget = probe.get_or_schedule(f, x).stats.arena_bytes
+    assert budget > 0
+
+    cache = ScheduleCache(capacity=8, byte_budget=budget)
+    cache.get_or_schedule(f, x)
+    cache.get_or_schedule(g, x)
+    snap = cache.snapshot()
+    assert snap["byte_budget"] == budget
+    assert snap["arena_bytes_total"] <= budget
+    assert snap["size"] == 1               # only one schedule can be resident
+    assert cache.stats.evictions >= 1

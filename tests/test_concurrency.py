@@ -334,9 +334,19 @@ def test_async_dispatcher_rejects_unservable_without_poisoning():
 
 
 @pytest.mark.timeout(60)
-def test_async_dispatcher_weighted_fairness_under_saturation():
+@pytest.mark.parametrize("kw", [
+    {"stepping": "single"},
+    {"stepping": "per-engine"},                          # arbiter, no cap
+    {"stepping": "per-engine", "max_concurrent_steps": 1},  # strict order
+], ids=["single", "per-engine", "per-engine-cap1"])
+def test_async_dispatcher_weighted_fairness_under_saturation(kw):
+    """The shared policy arbitrates quanta in every stepping model: a 3:1
+    weighted tenant gets ~3x the decode quanta whether the loop is the
+    legacy single thread, free-running per-engine steppers (grants still
+    flow through the policy), or per-engine capped to one quantum at a
+    time (exact stride order)."""
     log = []
-    ad = AsyncDispatcher(max_pending=64, fairness="weighted")
+    ad = AsyncDispatcher(max_pending=64, fairness="weighted", **kw)
     ad.register_model("heavy", FakeEngine("heavy", log, cost=10**9), weight=3.0)
     ad.register_model("light", FakeEngine("light", log, cost=10**9), weight=1.0)
     ad.start()
@@ -347,6 +357,143 @@ def test_async_dispatcher_weighted_fairness_under_saturation():
         time.sleep(0.01)
     ad.stop(drain=False)
     window = log[:200]
-    assert len(window) == 200, "stepping thread stalled under saturation"
+    assert len(window) == 200, "stepping threads stalled under saturation"
     ratio = window.count("heavy") / max(window.count("light"), 1)
     assert 2.5 <= ratio <= 3.5               # ~3x decode quanta for 3x weight
+
+
+# -- per-engine stepping (ISSUE 3 tentpole) -----------------------------------
+
+class BarrierEngine(FakeEngine):
+    """First step blocks until the *other* engine's first step arrives —
+    only truly concurrent steppers can release the barrier."""
+
+    def __init__(self, name, log, barrier, **kw):
+        super().__init__(name, log, **kw)
+        self.barrier = barrier
+        self.overlapped = False
+
+    def step(self):
+        if not self.overlapped:
+            self.barrier.wait(timeout=20)     # raises BrokenBarrierError on
+            self.overlapped = True            # timeout -> fails the test
+        return super().step()
+
+
+@pytest.mark.timeout(60)
+def test_per_engine_steppers_overlap_across_models():
+    """Decode overlaps across tenants: engine A's step is *inside* step()
+    at the same time as engine B's — impossible with one stepping
+    thread."""
+    log = []
+    barrier = threading.Barrier(2)
+    ad = AsyncDispatcher(max_pending=16)      # per-engine is the default
+    ad.register_model("a", BarrierEngine("a", log, barrier))
+    ad.register_model("b", BarrierEngine("b", log, barrier))
+    with ad:
+        fa = ad.submit("a", PROMPT)
+        fb = ad.submit("b", PROMPT)
+        assert fa.result(timeout=30).done and fb.result(timeout=30).done
+    assert ad.engine("a").overlapped and ad.engine("b").overlapped
+    snap = ad.snapshot()
+    assert snap["async"]["stepping"] == "per-engine"
+    assert snap["async"]["builds_by_stepper"] == {"a": 0, "b": 0}
+
+
+class SlowStepEngine(FakeEngine):
+    """Every step takes ``delay`` seconds of wall time (simulated decode)."""
+
+    def __init__(self, name, log, delay, **kw):
+        super().__init__(name, log, **kw)
+        self.delay = delay
+        self.entered = threading.Event()
+
+    def step(self):
+        self.entered.set()
+        time.sleep(self.delay)
+        return super().step()
+
+
+@pytest.mark.timeout(60)
+def test_submit_latency_independent_of_engine_step():
+    """Finer dispatch locking (ISSUE 3 tentpole): submit touches only the
+    lane's queue lock, so it returns in microseconds even while that same
+    lane's engine is mid-step — it no longer waits out a decode step."""
+    log = []
+    eng = SlowStepEngine("a", log, delay=0.5, slots=1, cost=10**9)
+    ad = AsyncDispatcher(max_pending=64)
+    ad.register_model("a", eng)
+    ad.start()
+    ad.submit("a", PROMPT)
+    assert eng.entered.wait(timeout=10)       # stepper is inside the step
+    t0 = time.perf_counter()
+    ad.submit("a", PROMPT)                    # same lane, mid-step
+    dt = time.perf_counter() - t0
+    ad.stop(drain=False)
+    assert dt < 0.2, f"submit waited out an engine step ({dt:.3f}s)"
+
+
+@pytest.mark.timeout(60)
+def test_register_model_while_running_spawns_stepper():
+    """Per-engine mode picks up late registrations: the new tenant gets a
+    stepper and serves traffic without a restart."""
+    log = []
+    ad = AsyncDispatcher(max_pending=16)
+    ad.register_model("a", FakeEngine("a", log))
+    ad.start()
+    assert ad.submit("a", PROMPT).result(timeout=30).done
+    ad.register_model("b", FakeEngine("b", log))
+    assert ad.submit("b", PROMPT).result(timeout=30).done
+    assert ad.snapshot()["async"]["steppers"] == 2
+    ad.stop()
+
+
+@pytest.mark.timeout(60)
+def test_completion_callback_does_not_hold_scheduling_quantum():
+    """A slow user on_complete must not hold its lane's arbiter grant:
+    with max_concurrent_steps=1, lane B must still be stepped while lane
+    A's callback is blocked (the grant is released before callbacks)."""
+    log = []
+    cb_running = threading.Event()
+    b_stepped = threading.Event()
+    cb_saw_b: list = []
+
+    class NotingEngine(FakeEngine):
+        def step(self):
+            b_stepped.set()
+            return super().step()
+
+    def slow_cb(model, req):
+        cb_running.set()
+        cb_saw_b.append(b_stepped.wait(timeout=10))
+
+    ad = AsyncDispatcher(max_pending=16, max_concurrent_steps=1)
+    ad.register_model("a", FakeEngine("a", log, cost=1))
+    ad.register_model("b", NotingEngine("b", log, cost=1))
+    ad.start()
+    fa = ad.submit("a", PROMPT, on_complete=slow_cb)
+    assert cb_running.wait(timeout=10)        # A's callback is in flight
+    fb = ad.submit("b", PROMPT)
+    assert fb.result(timeout=30).done         # B served during A's callback
+    assert fa.result(timeout=30).done
+    ad.stop()
+    assert cb_saw_b == [True], "lane B was starved behind a user callback"
+
+
+@pytest.mark.timeout(60)
+def test_per_engine_failure_poisons_all_steppers():
+    """One tenant's engine dying fails every future and stops the whole
+    async layer loudly (no half-alive dispatcher)."""
+    log = []
+    ad = AsyncDispatcher()
+    ad.register_model("ok", FakeEngine("ok", log, cost=10**9))
+    ad.register_model("bad", FailingEngine("bad", log))
+    ad.start()
+    f_ok = ad.submit("ok", PROMPT)
+    f_bad = ad.submit("bad", PROMPT)
+    assert isinstance(f_bad.exception(timeout=30), RuntimeError)
+    assert isinstance(f_ok.exception(timeout=30), RuntimeError)
+    with pytest.raises(RuntimeError):
+        ad.submit("ok", PROMPT)
+    ad.stop(drain=False)
+    assert not ad.running

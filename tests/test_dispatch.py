@@ -400,20 +400,58 @@ def test_weighted_work_conserving_and_no_rejoin_burst():
 
 
 def test_quota_budget_enforcement():
-    q = QuotaFairness(rate=2.0, burst=4.0)
+    t = [0.0]                                     # frozen fake clock
+    q = QuotaFairness(rate=2.0, burst=4.0, clock=lambda: t[0])
     q.register("a")
     q.register("b")
-    assert q.select(["a", "b"]) == ["a", "b"]     # both funded, tie order
+    assert q.select(["a", "b"]) == ["a", "b"]     # both start at full burst
     q.charge("a", tokens=10)                      # a deep in debt
     assert q.select(["a", "b"]) == ["b"]
     q.charge("b", tokens=100)                     # now everyone is broke
     assert q.select(["a", "b"]) == ["a"]          # work-conserving: least debt
-    strict = QuotaFairness(rate=1.0, burst=2.0, work_conserving=False)
+    strict = QuotaFairness(rate=1.0, burst=2.0, work_conserving=False,
+                           clock=lambda: 0.0)
     strict.register("a")
     strict.charge("a", tokens=50)
     assert strict.select(["a"]) == []             # broke lane idles the quantum
     snap = q.snapshot()
     assert snap["policy"] == "quota" and snap["served_tokens"]["b"] == 100
+
+
+def test_quota_refill_is_wall_clock_not_per_select():
+    """Satellite (ISSUE 3): the token bucket refills from elapsed
+    *monotonic time*, not once per select call — per-engine steppers may
+    call select at wildly uneven cadence without inflating anyone's
+    budget."""
+    t = [100.0]
+    q = QuotaFairness(rate=10.0, burst=20.0, clock=lambda: t[0])
+    q.register("a")
+    q.charge("a", tokens=25)                      # burst 20 -> -5
+    for _ in range(50):                           # frozen clock: no refill,
+        assert q.select(["a"]) == ["a"]           # work-conserving pick only
+    assert q.snapshot()["budget"]["a"] == pytest.approx(-5.0)
+    t[0] += 0.3                                   # 0.3 s * 10 tok/s = 3
+    q.select(["a"])
+    assert q.snapshot()["budget"]["a"] == pytest.approx(-2.0)
+    t[0] += 1000.0                                # long idle caps at burst
+    q.select(["a"])
+    assert q.snapshot()["budget"]["a"] == pytest.approx(20.0)
+
+
+def test_quota_weight_scales_wall_clock_rate():
+    t = [0.0]
+    q = QuotaFairness(rate=4.0, burst=100.0, clock=lambda: t[0])
+    q.register("heavy", weight=3.0)
+    q.register("light", weight=1.0)
+    q.select(["heavy", "light"])                  # anchors the refill clock
+    q.charge("heavy", tokens=100)
+    q.charge("light", tokens=100)
+    t[0] += 1.0
+    q.select(["heavy", "light"])
+    budgets = q.snapshot()["budget"]
+    assert budgets["heavy"] == pytest.approx(12.0)   # 3x weight -> 12 tok/s
+    assert budgets["light"] == pytest.approx(4.0)
+    assert q.snapshot()["rate_per_s"] == {"heavy": 12.0, "light": 4.0}
 
 
 def test_quota_dispatcher_charges_engine_tokens():
@@ -449,3 +487,29 @@ def test_metrics_snapshot_shape():
     assert snap["wall_seconds"] == pytest.approx(1.0)
     assert snap["tokens_per_second"] == pytest.approx(3.0)
     assert snap["schedule_cache"] == {"hits": 1}
+
+
+def test_metrics_per_engine_step_series():
+    """Satellite (ISSUE 3): per-engine step/latency breakdown, fed by
+    whichever thread stepped the lane."""
+    from repro.dispatch import DispatchMetrics
+
+    m = DispatchMetrics()
+    m.on_engine_step("a", 0.010, tokens=4)
+    m.on_engine_step("a", 0.020, tokens=4)
+    m.on_engine_step("b", 0.001)
+    snap = m.snapshot()
+    assert snap["engines"]["a"]["steps"] == 2
+    assert snap["engines"]["a"]["tokens"] == 8
+    assert snap["engines"]["a"]["step_ms"]["count"] == 2
+    assert snap["engines"]["a"]["step_ms"]["max"] == pytest.approx(20.0)
+    assert snap["engines"]["b"]["steps"] == 1
+
+
+def test_dispatcher_feeds_per_engine_metrics():
+    d, _log = _fake_dispatcher(reqs_per_model=2)
+    d.run_until_drained()
+    engines = d.snapshot()["engines"]
+    assert set(engines) == {"a", "b"}
+    assert engines["a"]["steps"] >= 2
+    assert engines["a"]["step_ms"]["count"] == engines["a"]["steps"]

@@ -1,0 +1,104 @@
+#!/usr/bin/env python
+"""Docs gate (CI `docs` job): two checks, stdlib only.
+
+1. **Links** — every relative markdown link in README.md / DESIGN.md must
+   resolve to a file or directory in the repo (anchors and absolute URLs
+   are skipped).  Docs that point at moved files rot silently; this makes
+   the rot a red build instead.
+2. **Docstring coverage** — the public ``repro.dispatch`` API (modules,
+   public classes, public functions and methods) must be 100% docstring-
+   covered.  Equivalent to an `interrogate` gate, without the dependency.
+
+    python tools/check_docs.py
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+DOC_FILES = ("README.md", "DESIGN.md")
+API_DIRS = ("src/repro/dispatch",)
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+
+
+def check_links() -> list[str]:
+    """Return one error string per broken relative link."""
+    errors = []
+    for name in DOC_FILES:
+        path = ROOT / name
+        if not path.exists():
+            errors.append(f"{name}: file missing")
+            continue
+        for m in LINK_RE.finditer(path.read_text()):
+            target = m.group(1)
+            if target.startswith(SKIP_PREFIXES):
+                continue
+            rel = target.split("#", 1)[0]
+            if not rel:
+                continue
+            if not (path.parent / rel).exists():
+                errors.append(f"{name}: broken link -> {target}")
+    return errors
+
+
+def _public_defs(tree: ast.Module, modname: str):
+    """Yield (qualname, node) for the module, its public classes, and
+    their public functions/methods (names starting with ``_`` — including
+    dunders — are private by convention and skipped)."""
+    yield modname, tree
+    for node in tree.body:
+        if isinstance(node, ast.ClassDef) and not node.name.startswith("_"):
+            yield f"{modname}.{node.name}", node
+            for sub in node.body:
+                if isinstance(
+                    sub, (ast.FunctionDef, ast.AsyncFunctionDef)
+                ) and not sub.name.startswith("_"):
+                    yield f"{modname}.{node.name}.{sub.name}", sub
+        elif isinstance(
+            node, (ast.FunctionDef, ast.AsyncFunctionDef)
+        ) and not node.name.startswith("_"):
+            yield f"{modname}.{node.name}", node
+
+
+def check_docstrings() -> tuple[list[str], int, int]:
+    """Return (missing-docstring qualnames, documented count, total)."""
+    missing: list[str] = []
+    documented = total = 0
+    for d in API_DIRS:
+        for path in sorted((ROOT / d).glob("*.py")):
+            tree = ast.parse(path.read_text())
+            modname = f"{d.replace('/', '.').replace('src.', '')}.{path.stem}"
+            for qualname, node in _public_defs(tree, modname):
+                total += 1
+                if ast.get_docstring(node):
+                    documented += 1
+                else:
+                    missing.append(qualname)
+    return missing, documented, total
+
+
+def main() -> int:
+    """Run both checks; non-zero exit (with a report) on any failure."""
+    failures = check_links()
+    missing, documented, total = check_docstrings()
+    print(f"docstring coverage: {documented}/{total} "
+          f"({100.0 * documented / total if total else 0.0:.1f}%) "
+          f"over {', '.join(API_DIRS)}")
+    for qualname in missing:
+        failures.append(f"missing docstring: {qualname}")
+    if failures:
+        print(f"\nFAIL ({len(failures)} problem(s)):")
+        for f in failures:
+            print(f"  - {f}")
+        return 1
+    print("links OK, docstrings OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
