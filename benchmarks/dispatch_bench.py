@@ -1,6 +1,6 @@
 """Dispatch-layer benchmark: cache amortization + async multi-tenant serving.
 
-Four measurements backing ISSUE 1/2/3 acceptance criteria:
+Five measurements backing ISSUE 1/2/3/4 acceptance criteria:
 
 1. **warm vs cold** — a cold ``AoTScheduler.schedule`` (trace + stream
    assignment + memory plan + XLA AOT compile) against a warm
@@ -19,6 +19,12 @@ Four measurements backing ISSUE 1/2/3 acceptance criteria:
    steppers (ISSUE 3 acceptance: ≥ 1.5× aggregate decode-step throughput).
    Runs in subprocesses so ``--xla_force_host_platform_device_count=2`` is
    set before jax initializes, and so each mode gets a cold, fair process.
+5. **64-tenant sparse traffic** — 2 hot + 62 mostly-idle tenants through
+   ``stepping="single"`` / ``"per-engine"`` / ``"pool"`` (ISSUE 4
+   acceptance): the pool holds the stepper thread count at ``pool_size``
+   (vs 64 for per-engine) with aggregate steps/s ≥ the per-engine
+   baseline, grant-latency p95 under contention below the old 10 ms
+   arbiter tick, and outputs token-identical across all three modes.
 
     PYTHONPATH=src python -m benchmarks.dispatch_bench
 """
@@ -224,6 +230,111 @@ def _stepping_child(mode: str, duration: float = 4.0) -> float:
     return steps / wall
 
 
+N_TENANTS = 64
+N_HOT = 2
+POOL_SIZE = 4
+
+
+def _tenant_requests(cfg, hot: bool, base_rid: int) -> list[Request]:
+    rng = np.random.default_rng(base_rid)
+    n, max_new = (24, 12) if hot else (1, 3)
+    return [
+        Request(
+            rid=base_rid + i,
+            prompt=rng.integers(
+                0, cfg.vocab, PROMPT_LENS[i % len(PROMPT_LENS)]
+            ).astype(np.int32),
+            max_new_tokens=max_new,
+        )
+        for i in range(n)
+    ]
+
+
+def _stepper_thread_count() -> int:
+    import threading
+
+    return sum(
+        1 for t in threading.enumerate()
+        if t.is_alive() and t.name.startswith("repro-dispatch-step[")
+    )
+
+
+def _many_tenant_run(mode: str, cfg, params, cache) -> dict:
+    """One 64-tenant measurement under ``mode``: 2 hot tenants with deep
+    backlogs, 62 sparse tenants with one short request each; returns
+    tokens (for the cross-mode identity check), thread census, aggregate
+    steps/s, and the arbiter's grant-latency tail."""
+    disp = AsyncDispatcher(
+        max_pending=100_000, stepping=mode, pool_size=POOL_SIZE
+    )
+    engines = []
+    for i in range(N_TENANTS):
+        name = f"hot-{i}" if i < N_HOT else f"sparse-{i}"
+        eng = ServingEngine(
+            cfg, params, max_slots=2, max_len=64, prompt_buckets=BUCKETS,
+            schedule_cache=cache,
+        )
+        disp.register_model(name, eng)
+        engines.append((name, eng))
+    futures = []
+    t0 = time.perf_counter()
+    with disp:
+        for i, (name, eng) in enumerate(engines):
+            for r in _tenant_requests(cfg, hot=i < N_HOT, base_rid=i * 1000):
+                futures.append(disp.submit_request(name, r))
+        threads = _stepper_thread_count()          # steady state: mid-serve
+        done = [f.result(timeout=600) for f in futures]
+        snap = disp.snapshot()
+    wall = time.perf_counter() - t0
+    steps = sum(eng.stats.steps for _, eng in engines)
+    tokens = {
+        (r.model, r.rid): list(r.generated) for r in done
+    }
+    return {
+        "tokens": tokens,
+        "threads": threads,
+        "steps_per_s": steps / wall if wall else 0.0,
+        "wall": wall,
+        "grant_p95_ms": snap["grant_ms"]["p95"],
+        "grants": snap["grants"],
+        "builds_on_thread": snap["async"]["builds_on_thread"],
+    }
+
+
+def many_tenant_sparse() -> list[tuple[str, float, str]]:
+    """ISSUE 4 acceptance: 64 tenants (2 hot / 62 sparse) across all three
+    stepping modes — flat thread count at pool size, aggregate steps/s at
+    or above the per-engine baseline, sub-tick grant-latency p95, and
+    token-identical outputs."""
+    cfg = dataclasses.replace(C.get(ARCHS[0], smoke=True), dtype="float32")
+    params, _ = init_model(jax.random.key(0), cfg)
+    cache = ScheduleCache(capacity=64)
+    # warm the shared executables once so every mode replays the same code
+    ServingEngine(cfg, params, max_slots=2, max_len=64,
+                  prompt_buckets=BUCKETS, schedule_cache=cache)
+    runs = {
+        mode: _many_tenant_run(mode, cfg, params, cache)
+        for mode in ("single", "per-engine", "pool")
+    }
+    identical = all(
+        runs[mode]["tokens"] == runs["single"]["tokens"]
+        for mode in ("per-engine", "pool")
+    )
+    pool, per_eng = runs["pool"], runs["per-engine"]
+    return [(
+        "dispatch/many_tenant_sparse",
+        pool["wall"] / max(len(pool["tokens"]), 1) * 1e6,
+        f"tenants={N_TENANTS};hot={N_HOT};pool_size={POOL_SIZE};"
+        f"threads_pool={pool['threads']};threads_per_engine={per_eng['threads']};"
+        f"steps_per_s_pool={pool['steps_per_s']:.0f};"
+        f"steps_per_s_per_engine={per_eng['steps_per_s']:.0f};"
+        f"steps_per_s_single={runs['single']['steps_per_s']:.0f};"
+        f"grant_p95_ms_pool={pool['grant_p95_ms']:.2f};"
+        f"identical={'yes' if identical else 'NO'};"
+        f"builds_on_thread={sum(r['builds_on_thread'] for r in runs.values())}",
+    )]
+
+
 def parallel_stepping() -> list[tuple[str, float, str]]:
     """Single-stepper vs per-engine stepping, measured in subprocesses so
     each mode initializes jax with 2 host devices (one per engine)."""
@@ -257,7 +368,7 @@ def run() -> list[tuple[str, float, str]]:
     """All dispatch-layer measurements, as (name, us_per_call, derived)."""
     return (
         warm_vs_cold() + multi_tenant() + weighted_fairness()
-        + parallel_stepping()
+        + parallel_stepping() + many_tenant_sparse()
     )
 
 

@@ -7,10 +7,12 @@
 Prefill and decode are sealed once per (model, bucket) through the shared
 ``ScheduleCache``; the ``AsyncDispatcher`` steps each tenant on its own
 daemon thread (``--stepping per-engine``, the default — decode overlaps
-across models) while ``submit`` returns futures immediately — the request
-loop is pure submission (the inference-serving face of the paper's AoT
-scheduling), and no stepper ever compiles (``builds_on_thread`` below
-stays 0).  ``--fairness`` picks the policy: round-robin rotation, weighted
+across models) or multiplexes every tenant over a small fixed worker pool
+(``--stepping pool --pool-size N`` — the many-tenant shape: thread count
+stays at N no matter how many models register) while ``submit`` returns
+futures immediately — the request loop is pure submission (the
+inference-serving face of the paper's AoT scheduling), and no stepper
+ever compiles (``builds_on_thread`` below stays 0).  ``--fairness`` picks the policy: round-robin rotation, weighted
 fair queueing (``--weights``, per arch), or token-rate quotas (tokens per
 wall-clock second).  ``--cache-budget-mb`` caps the reserved-arena bytes
 the shared schedule cache may hold (LRU entries are evicted past it).
@@ -44,8 +46,12 @@ def main():
     ap.add_argument("--weights", default="",
                     help="comma-separated per-arch weights (weighted/quota)")
     ap.add_argument("--stepping", default="per-engine",
-                    choices=("per-engine", "single"),
-                    help="one stepper thread per model, or one shared loop")
+                    choices=("per-engine", "single", "pool"),
+                    help="one stepper thread per model, one shared loop, or "
+                         "a fixed worker pool multiplexing all tenants")
+    ap.add_argument("--pool-size", type=int, default=0,
+                    help="worker count for --stepping pool "
+                         "(0 = min(8, cpu_count))")
     ap.add_argument("--max-concurrent-steps", type=int, default=0,
                     help="cap simultaneous engine steps (0 = no cap)")
     ap.add_argument("--cache-budget-mb", type=float, default=0.0,
@@ -72,6 +78,7 @@ def main():
         fairness=args.fairness,
         stepping=args.stepping,
         max_concurrent_steps=args.max_concurrent_steps or None,
+        pool_size=args.pool_size or None,
     )
 
     t0 = time.perf_counter()
@@ -113,6 +120,14 @@ def main():
           f"stepping: {snap['async']['stepping']} "
           f"({snap['async']['steppers']} stepper(s)) | "
           f"builds on steppers: {snap['async']['builds_on_thread']}")
+    if snap["async"]["arbiter"] is not None:
+        arb = snap["async"]["arbiter"]
+        print(f"arbiter: {arb['grants']} grants, "
+              f"grant p95 {snap['grant_ms']['p95']:.2f}ms "
+              f"({arb['timed_grants']} served by the fallback tick)"
+              + (f" | pool occupancy mean {snap['pool']['busy_mean']:.1f}"
+                 f"/{snap['pool']['size']} (peak {snap['pool']['busy_peak']})"
+                 if "pool" in snap else ""))
     for name, eng in snap.get("engines", {}).items():
         print(f"  engine[{name}]: {eng['steps']} steps, "
               f"step p50 {eng['step_ms']['p50']:.1f}ms "

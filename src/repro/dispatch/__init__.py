@@ -9,9 +9,12 @@ with pluggable :mod:`fairness` (round-robin rotation, weighted fair
 queueing, wall-clock token-rate quotas), backpressure, and fine-grained
 locking (submits never wait out an engine step); the
 :class:`AsyncDispatcher` runs one stepper thread per engine — decode
-overlaps across tenants while a quantum arbiter keeps the shared policy in
-charge — behind a future-returning ``submit``; and :mod:`metrics` reports
-latency/throughput/cache numbers down to per-engine step series.
+overlaps across tenants — or a fixed stepper pool multiplexing hundreds
+of tenants over ``pool_size`` threads, while an event-driven quantum
+arbiter keeps the shared policy in charge (freed quanta are granted on
+the ``charge``/submit event, not a poll tick) — behind a future-returning
+``submit``; and :mod:`metrics` reports latency/throughput/cache numbers
+down to per-engine step, grant-latency, and pool-occupancy series.
 
 Thread-safety: every class exported here is safe to use from multiple
 threads; see DESIGN.md §locking-contract for exactly which lock protects

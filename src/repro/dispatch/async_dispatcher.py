@@ -29,14 +29,30 @@ Stepping models (``stepping=``):
   its semantics, so weighted shares stay exact and decode stays
   effectively serial.  Pick round_robin/quota when raw overlap matters
   more than weighted shares.
+* ``"pool"`` — a small FIXED worker pool (``pool_size``, default
+  ``min(8, os.cpu_count())``) multiplexing every registered lane: the
+  hundred-tenant shape, where per-engine's thread-per-model collapses
+  into hundreds of parked threads.  Any idle worker pulls the policy's
+  next ready lane from the arbiter (the shared ready set is the pool's
+  work queue), so the stepper thread count stays at ``pool_size`` no
+  matter how many tenants register, while outputs stay token-identical
+  and fairness ordering still flows through the arbiter.
 * ``"single"`` — the legacy loop: one thread stepping all lanes in policy
   order.  Kept as the benchmark baseline and for strictly-serial setups.
+
+Quantum hand-off is **event-driven**: the dispatcher's lane-event hook
+(``submit`` appended work, a step quantum completed) and each ``release``
+re-run the arbiter's grant pump immediately, so a freed quantum reaches
+the policy's top ready pick on the event itself; the arbiter's timed wait
+survives only as the quota-refill fallback (time-based credit appears
+with no event).
 
 Invariant (the paper's): stepper threads NEVER trace or compile — they
 only replay sealed executables.  Engines must be warmed at registration
 (finite bucketing policies warm eagerly; an exact policy can lazily build
 on a stepper, which ``builds_on_thread`` / ``builds_by_stepper`` expose so
-tests and operators can assert the invariant holds per stepper).
+tests and operators can assert the invariant holds per stepper — pool
+workers report under their ``pool-N`` labels).
 
 Locking protocol (deadlock-free by ordering): steppers take the arbiter's
 condition before the dispatcher's fairness lock, lane locks before the
@@ -49,6 +65,7 @@ set, ``_pending``).
 
 from __future__ import annotations
 
+import os
 import threading
 import time
 from concurrent.futures import Future
@@ -62,60 +79,148 @@ _SINGLE = "loop"         # stepper label in "single" mode
 
 
 class _QuantumArbiter:
-    """Grants stepping quanta to per-engine steppers via the shared policy.
+    """Grants stepping quanta through the shared policy, event-driven.
 
-    Each stepper calls :meth:`acquire` before stepping its lane and
-    :meth:`release` after.  Grants flow through ``FairnessPolicy.select``
-    over the lanes that currently have work, so the policy's ordering and
-    accounting survive per-engine threading; ``max_concurrent`` bounds the
-    outstanding grants (``None`` — no bound beyond one per lane).
+    Two grant shapes over one condition variable:
 
-    When the policy's top pick is an active lane whose stepper is still
-    finishing bookkeeping (not yet re-requesting), the arbiter holds other
-    grants briefly rather than handing the quantum to a less-deserving
-    lane — that back-off, bounded by the timed waits below, is what keeps
-    e.g. stride ratios exact at ``max_concurrent=1``.
+    * **per-engine** — a dedicated stepper calls :meth:`acquire` for ITS
+      lane and blocks until the policy grants it;
+    * **pool** — any idle worker calls :meth:`acquire_any` and receives the
+      policy's next ready lane (the shared ready set is the pool's work
+      queue: whichever worker is free steals the top pick).
+
+    Both call :meth:`release` after the engine step.  Grants flow through
+    ``FairnessPolicy.peek_ready`` over the lanes that currently have work,
+    so the policy's ordering and accounting survive threading;
+    ``max_concurrent`` bounds outstanding grants (``None`` — no bound
+    beyond one per lane; a lane is never granted to two workers at once).
+
+    **Event-driven hand-off**: :meth:`release` (the quantum freed by a
+    finished step, post-``charge``) and :meth:`notify_ready` (the
+    dispatcher's lane-event hook: a submit appended work, a step changed a
+    lane's state) re-run the grant pump immediately, so a blocked stepper
+    or idle worker is granted the moment the policy can serve it — not at
+    the next tick.  The timed wait (``tick``, default 10 ms) is retained
+    ONLY as the quota-refill fallback: time-based policies gain credit
+    with no triggering event.  ``grants`` counts all grants,
+    ``timed_grants`` the grants the fallback tick served (vs an event),
+    and ``timed_wakeups`` every tick expiry (idle parking included), so
+    tests can prove a hand-off consumed no tick; per-grant latency (lane
+    grantable → granted) feeds
+    ``metrics.on_grant`` and, in pool mode, ``metrics.on_pool_occupancy``.
+
+    When the policy's top pick is an active lane that is not ready (its
+    stepper mid-bookkeeping, or the lane already executing), the arbiter
+    holds other grants rather than handing the quantum to a
+    less-deserving lane — that hold is what keeps e.g. stride ratios
+    exact at ``max_concurrent=1``.
 
     Lock order: the arbiter condition is taken before the dispatcher's
     registry and fairness locks, never the reverse; it is never held
     around an engine step.
     """
 
-    _WAIT = 0.01          # timed re-pump: quota refills are time-driven
+    _FALLBACK_WAIT = 0.01     # quota refills are time-driven; events cover the rest
 
-    def __init__(self, dispatcher: Dispatcher, max_concurrent: Optional[int]):
+    def __init__(
+        self,
+        dispatcher: Dispatcher,
+        max_concurrent: Optional[int],
+        *,
+        metrics: Optional[DispatchMetrics] = None,
+        pool_size: int = 0,
+        tick: Optional[float] = None,
+        clock: Callable[[], float] = time.monotonic,
+    ):
         if max_concurrent is not None and max_concurrent < 1:
             raise ValueError(
                 f"max_concurrent_steps must be >= 1 or None, got {max_concurrent}"
             )
         self._disp = dispatcher
         self._max = max_concurrent
+        self._metrics = metrics
+        self._pool_size = pool_size          # 0: per-engine mode
+        self._tick = self._FALLBACK_WAIT if tick is None else tick
+        self._clock = clock
         self._cv = threading.Condition()
-        self._waiting: set[str] = set()     # steppers blocked in acquire
-        self._granted: set[str] = set()     # grants not yet picked up
-        self._inflight: set[str] = set()    # grants being executed
+        self._waiting: dict[str, float] = {}   # blocked stepper -> since when
+        self._granted: set[str] = set()      # grants not yet picked up
+        self._inflight: set[str] = set()     # grants being executed
+        self._ready_since: dict[str, float] = {}   # lane -> grantable since
+        self._last_event = 0.0               # last grant-enabling event
         self._closed = False
+        self.grants = 0                      # quanta handed out
+        self.timed_wakeups = 0               # fallback-tick expiries (incl. idle)
+        # grants whose enabling wakeup was a tick expiry, not an event —
+        # the fallback path actually serving (quota refills land here).
+        # timed_wakeups alone cannot tell "fallback served a grant" from
+        # "the pool sat idle"; this can.  Per-engine attribution is
+        # best-effort: a racing event-pump grant landing between a
+        # stepper's expiry and its own pump is counted as timed.
+        self.timed_grants = 0
 
     def acquire(self, lane: str) -> bool:
-        """Block until the policy grants ``lane`` a quantum; False once
-        the arbiter is closed (shutdown)."""
+        """Block until the policy grants ``lane`` a quantum (per-engine
+        mode); False once the arbiter is closed (shutdown)."""
         with self._cv:
-            self._waiting.add(lane)
+            self._waiting[lane] = self._clock()
             self._pump_locked()
             while lane not in self._granted:
                 if self._closed:
-                    self._waiting.discard(lane)
+                    self._waiting.pop(lane, None)
                     return False
-                self._cv.wait(self._WAIT)
+                timed = not self._cv.wait(self._tick)
+                if timed:
+                    self.timed_wakeups += 1
                 self._pump_locked()
+                if timed and lane in self._granted:
+                    self.timed_grants += 1
             self._granted.discard(lane)
             return not self._closed
 
+    def acquire_any(self) -> Optional[str]:
+        """Block until the policy grants SOME ready lane (pool mode);
+        returns the lane to step, or ``None`` once the arbiter is closed."""
+        with self._cv:
+            # this worker is free from here on: grant latency for the lane
+            # it eventually receives is clocked from max(lane ready, worker
+            # free) — a lane waiting behind BUSY workers is backlog, not
+            # arbiter hand-off delay
+            idle_since = self._clock()
+            timed = False
+            while not self._closed:
+                lane = self._pick_locked(idle_since)
+                if lane is not None:
+                    if timed:
+                        self.timed_grants += 1
+                    return lane
+                timed = not self._cv.wait(self._tick)
+                if timed:
+                    self.timed_wakeups += 1
+            return None
+
     def release(self, lane: str) -> None:
-        """Return ``lane``'s grant (its engine step finished)."""
+        """Return ``lane``'s grant (its engine step finished, fairness
+        already charged): the freed quantum is re-granted immediately."""
         with self._cv:
             self._inflight.discard(lane)
+            self._last_event = self._clock()
             self._pump_locked()
+            self._cv.notify_all()
+
+    def notify_ready(self, lane: str) -> None:
+        """Dispatcher lane-event hook: ``lane``'s work state changed
+        (submit appended a request, or a step quantum completed).  Stamps
+        the event and wakes blocked acquirers, which re-run the grant pump
+        themselves — the hand-off stays on the event, not the fallback
+        tick, while the submitter pays O(1) under the arbiter condition
+        instead of hosting a full contender scan + policy select on its
+        critical path (``release`` keeps pumping in-line: it runs on a
+        stepper, post-step, where the scan is off any caller's path)."""
+        with self._cv:
+            if self._closed:
+                return
+            self._last_event = self._clock()
             self._cv.notify_all()
 
     def close(self) -> None:
@@ -124,45 +229,118 @@ class _QuantumArbiter:
             self._closed = True
             self._cv.notify_all()
 
+    def stats(self) -> dict:
+        """Grant counters for snapshots: grants issued, grants served by
+        the fallback tick (vs an event), total tick expiries (idle parking
+        included), and the current in-flight quantum count."""
+        with self._cv:
+            return {
+                "grants": self.grants,
+                "timed_grants": self.timed_grants,
+                "timed_wakeups": self.timed_wakeups,
+                "inflight": len(self._inflight),
+            }
+
     def _capacity_left(self) -> bool:
         return self._max is None or len(self._inflight) < self._max
 
+    def _contenders_locked(self) -> list[str]:
+        # the policy must see the TRUE active set — every lane with work,
+        # whether its stepper is waiting here, executing a granted
+        # quantum, or mid-bookkeeping.  Feeding it subsets corrupts
+        # stateful policies (stride's rejoin-lift would keep erasing a
+        # lane's pass progress); feeding it everything keeps the policy's
+        # ordering exactly what the synchronous loop saw.  Bulk
+        # active_lanes() keeps this O(tenants) with two registry passes,
+        # not one lock acquisition per lane.
+        active = set(self._disp.active_lanes())
+        return [
+            name for name in self._disp.models
+            if name in self._waiting
+            or name in self._inflight
+            or name in active
+        ]
+
+    def _stamp_ready_locked(self, ready: list, now: float) -> None:
+        # grant latency runs from the EARLIEST moment a lane was grantable;
+        # stale stamps (lane drained or went in-flight) are dropped so a
+        # re-activation starts a fresh clock
+        ready_set = set(ready)
+        for name in list(self._ready_since):
+            if name not in ready_set:
+                del self._ready_since[name]
+        for name in ready:
+            self._ready_since.setdefault(name, now)
+
+    def _grant_locked(self, name: str, now: float, floor: float) -> None:
+        # grant latency clocks the ARBITER's reaction: from the latest of
+        # the lane becoming ready, its executor becoming free (``floor``:
+        # worker-idle / stepper-wait timestamp), and the last
+        # grant-enabling event processed — to the grant.  Policy rationing
+        # (stride holding for its top pick) and backlog behind busy
+        # workers are thereby excluded: both are scheduling decisions, not
+        # hand-off delay.  The old 10 ms tick showed up exactly here;
+        # event-driven hand-off drives it to microseconds, with the quota
+        # fallback path the only tick-bounded remainder.
+        self._inflight.add(name)
+        self.grants += 1
+        since = max(self._ready_since.pop(name, now),
+                    floor, self._last_event)
+        if self._metrics is not None:
+            self._metrics.on_grant(max(0.0, now - since))
+            if self._pool_size:
+                self._metrics.on_pool_occupancy(
+                    len(self._inflight), self._pool_size
+                )
+
+    def _pick_locked(self, idle_since: float) -> Optional[str]:
+        """One pool grant: the policy's top ready pick, or None to hold."""
+        if self._closed or not self._capacity_left():
+            return None
+        contenders = self._contenders_locked()
+        ready = [n for n in contenders if n not in self._inflight]
+        if not ready:
+            return None
+        now = self._clock()
+        self._stamp_ready_locked(ready, now)
+        for name in self._disp.fairness_peek(contenders, ready):
+            if name not in self._inflight and self._capacity_left():
+                self._grant_locked(name, now, idle_since)
+                return name
+        return None
+
     def _pump_locked(self) -> None:
-        """Hand out as many grants as policy + capacity allow right now."""
+        """Hand out as many per-engine grants as policy + capacity allow."""
         while self._waiting and self._capacity_left() and not self._closed:
-            # the policy must see the TRUE active set — every lane with
-            # work, whether its stepper is waiting here, executing a
-            # granted quantum, or mid-bookkeeping.  Feeding it subsets
-            # corrupts stateful policies (stride's rejoin-lift would keep
-            # erasing a lane's pass progress); feeding it everything keeps
-            # select()'s ordering exactly what the synchronous loop saw.
-            contenders = [
-                name for name in self._disp.models
-                if name in self._waiting
-                or name in self._inflight
-                or self._disp.lane_active(name)
-            ]
+            contenders = self._contenders_locked()
             if not contenders:
                 return
-            order = self._disp.fairness_select(contenders)
+            ready = [
+                n for n in contenders
+                if n in self._waiting and n not in self._inflight
+            ]
+            if not ready:
+                return
+            now = self._clock()
+            self._stamp_ready_locked(ready, now)
             granted_any = False
-            for name in order:
+            for name in self._disp.fairness_peek(contenders, ready):
                 if (
                     name in self._waiting
                     and name not in self._inflight
                     and self._capacity_left()
                 ):
-                    self._waiting.discard(name)
+                    waiting_since = self._waiting.pop(name)
                     self._granted.add(name)
-                    self._inflight.add(name)
+                    self._grant_locked(name, now, waiting_since)
                     granted_any = True
             if granted_any:
                 self._cv.notify_all()
             else:
                 # the policy's picks are all executing or mid-bookkeeping:
                 # hold the quantum for them (handing it to a less-deserving
-                # waiter would break the policy's ordering); the timed
-                # waits in acquire() re-pump shortly
+                # waiter would break the policy's ordering); release/
+                # notify_ready events — or the fallback tick — re-pump
                 return
 
 
@@ -190,11 +368,15 @@ class AsyncDispatcher:
         idle_wait: float = 0.02,
         stepping: str = "per-engine",
         max_concurrent_steps: Optional[int] = None,
+        pool_size: Optional[int] = None,
     ) -> None:
-        if stepping not in ("per-engine", "single"):
+        if stepping not in ("per-engine", "single", "pool"):
             raise ValueError(
-                f'stepping must be "per-engine" or "single", got {stepping!r}'
+                f'stepping must be "per-engine", "single", or "pool", '
+                f"got {stepping!r}"
             )
+        if pool_size is not None and pool_size < 1:
+            raise ValueError(f"pool_size must be >= 1, got {pool_size}")
         if dispatcher is None:
             dispatcher = Dispatcher(
                 max_pending=max_pending, metrics=metrics, fairness=fairness
@@ -203,6 +385,13 @@ class AsyncDispatcher:
         self.idle_wait = idle_wait
         self.stepping = stepping
         self.max_concurrent_steps = max_concurrent_steps
+        # thread budget for stepping="pool": tenants share these workers, so
+        # the stepper thread count stays flat no matter how many models
+        # register (the many-tenant scaling the per-engine mode lacks)
+        self.pool_size = (
+            pool_size if pool_size is not None
+            else min(8, os.cpu_count() or 1)
+        )
         self._cv = threading.Condition()
         self._threads: dict[str, threading.Thread] = {}
         self._arbiter: Optional[_QuantumArbiter] = None
@@ -222,7 +411,9 @@ class AsyncDispatcher:
 
     def register_model(self, name: str, engine: Any, *, weight: float = 1.0) -> Any:
         """Register a tenant; if the dispatcher is live in per-engine mode,
-        its stepper thread spawns immediately."""
+        its stepper thread spawns immediately.  Pool mode needs no spawn:
+        the fixed workers multiplex every registered lane, so a hundredth
+        tenant costs a dict entry, not a thread."""
         out = self.dispatcher.register_model(name, engine, weight=weight)
         with self._cv:
             if (
@@ -232,7 +423,7 @@ class AsyncDispatcher:
                 and self._error is None
                 and name not in self._threads
             ):
-                self._spawn_locked(name)
+                self._spawn_locked(name, self._run_lane)
         return out
 
     @property
@@ -264,8 +455,7 @@ class AsyncDispatcher:
             return True
         return any(t.is_alive() for t in self._threads.values())
 
-    def _spawn_locked(self, label: str) -> None:
-        target = self._run_single if label == _SINGLE else self._run_lane
+    def _spawn_locked(self, label: str, target: Callable[[str], None]) -> None:
         t = threading.Thread(
             target=self._run_guarded, args=(label, target),
             name=f"repro-dispatch-step[{label}]", daemon=True,
@@ -277,8 +467,11 @@ class AsyncDispatcher:
         """Spawn the daemon stepper thread(s) (idempotent while running).
 
         Per-engine mode spawns one stepper per registered model (models
-        registered later get theirs on registration); single mode spawns
-        the one legacy loop thread.
+        registered later get theirs on registration); pool mode spawns
+        exactly ``pool_size`` workers that multiplex every lane; single
+        mode spawns the one legacy loop thread.  Arbitrated modes also
+        install the dispatcher's lane-event hook so readiness events reach
+        the arbiter (the event-driven hand-off).
         """
         with self._cv:
             # check-and-spawn is one critical section: two concurrent
@@ -302,12 +495,22 @@ class AsyncDispatcher:
             self._threads = {}
             if self.stepping == "per-engine":
                 self._arbiter = _QuantumArbiter(
-                    self.dispatcher, self.max_concurrent_steps
+                    self.dispatcher, self.max_concurrent_steps,
+                    metrics=self.metrics,
                 )
+                self.dispatcher.set_lane_event_hook(self._arbiter.notify_ready)
                 for name in names:
-                    self._spawn_locked(name)
+                    self._spawn_locked(name, self._run_lane)
+            elif self.stepping == "pool":
+                self._arbiter = _QuantumArbiter(
+                    self.dispatcher, self.max_concurrent_steps,
+                    metrics=self.metrics, pool_size=self.pool_size,
+                )
+                self.dispatcher.set_lane_event_hook(self._arbiter.notify_ready)
+                for i in range(self.pool_size):
+                    self._spawn_locked(f"pool-{i}", self._run_pool)
             else:
-                self._spawn_locked(_SINGLE)
+                self._spawn_locked(_SINGLE, self._run_single)
         return self
 
     def stop(self, *, drain: bool = True, timeout: Optional[float] = None) -> None:
@@ -339,6 +542,7 @@ class AsyncDispatcher:
             for t in self._threads.values():
                 t.join(max(0.0, deadline - _now()))
                 alive = alive or t.is_alive()
+            self.dispatcher.set_lane_event_hook(None)
             if not alive:
                 self._threads = {}
                 self._arbiter = None
@@ -450,15 +654,21 @@ class AsyncDispatcher:
         """Dispatcher snapshot plus the async layer's lifecycle state."""
         snap = self.dispatcher.snapshot()
         by_stepper = self.builds_by_stepper
+        arbiter = self._arbiter
+        arb_stats = arbiter.stats() if arbiter is not None else None
         with self._cv:
             snap["async"] = {
                 "running": self.running,
                 "stepping": self.stepping,
                 "steppers": len(self._threads),
                 "max_concurrent_steps": self.max_concurrent_steps,
+                "pool_size": (
+                    self.pool_size if self.stepping == "pool" else None
+                ),
                 "futures_pending": len(self._pending),
                 "builds_on_thread": sum(by_stepper.values()),
                 "builds_by_stepper": by_stepper,
+                "arbiter": arb_stats,
                 "failed": self._error is not None,
             }
         return snap
@@ -547,8 +757,19 @@ class AsyncDispatcher:
     def _kick(self, model: str) -> None:
         with self._cv:
             # mark the submitted lane busy so drain cannot observe "all
-            # idle" between this append and its stepper noticing the work
-            self._busy.add(model if self.stepping == "per-engine" else _SINGLE)
+            # idle" between this append and a stepper noticing the work
+            # (per-engine and pool track per lane; single tracks the loop).
+            # The mark is CONDITIONAL on the lane still having work, under
+            # _cv: a pool worker may have been handed the request by the
+            # dispatcher's lane-event hook and fully served it before this
+            # kick runs — an unconditional add would then strand a stale
+            # busy entry no pool worker ever revisits (pool workers, unlike
+            # per-engine steppers, do not poll idle lanes), wedging drain.
+            if self.stepping == "single":
+                if not self.dispatcher.idle:
+                    self._busy.add(_SINGLE)
+            elif self.dispatcher.lane_active(model):
+                self._busy.add(model)
             self._cv.notify_all()
 
     def _caches(self) -> list:
@@ -625,6 +846,43 @@ class AsyncDispatcher:
                 self._fail(exc)
                 return
             with self._cv:
+                self._cv.notify_all()
+
+    def _run_pool(self, label: str) -> None:
+        """Pool worker: pull the policy's next ready lane from the arbiter
+        and step it — any worker serves any lane, so the thread count
+        stays at ``pool_size`` no matter how many tenants register.
+
+        Blocking happens inside ``acquire_any`` (woken by readiness events
+        and the fallback tick), so an idle pool costs no polling loop; the
+        busy-lane set is published for ``drain`` exactly as per-engine
+        steppers do, with the same under-``_cv`` re-check that closes the
+        lost-wakeup window against a racing submit."""
+        arbiter = self._arbiter
+        while True:
+            if self._should_exit():
+                return
+            lane = arbiter.acquire_any()
+            if lane is None:
+                continue                    # closed: re-check exit flags
+            with self._cv:
+                self._busy.add(lane)
+            try:
+                # grant returned before completion callbacks (release=), so
+                # a slow user callback never holds a scheduling quantum
+                self.dispatcher.step_lane(
+                    lane, release=lambda: arbiter.release(lane)
+                )
+            except BaseException as exc:  # noqa: BLE001 - fail all futures
+                arbiter.release(lane)
+                self._fail(exc)
+                return
+            with self._cv:
+                # only clear busy if the lane is REALLY idle under _cv: a
+                # submit appends before its kick takes _cv, so either we
+                # see the work here or the kick re-adds busy after us
+                if not self.dispatcher.lane_active(lane):
+                    self._busy.discard(lane)
                 self._cv.notify_all()
 
     def _run_single(self, label: str) -> None:

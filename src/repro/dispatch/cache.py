@@ -13,9 +13,12 @@ traffic the same (function, shape) arrives from many callers, so the sealed
 * optionally **byte-budgeted**: each entry carries the ``arena_bytes`` its
   sealed schedule statically reserves, and a configured ``byte_budget``
   caps the sum — LRU entries are evicted until the total fits, so the
-  reserved-arena footprint of the cache never exceeds the budget (the
-  entry-count ``capacity`` stays as a fallback ceiling for artifacts that
-  report no arena, e.g. raw serving executables);
+  reserved-arena footprint of the cache never exceeds the budget.  Raw
+  executables (no ``TaskSchedule`` stats) are estimated from a
+  caller-provided ``arena_bytes=`` (the serving engine derives one from
+  its output buffer shapes) or the executable's own ``memory_analysis()``;
+  the entry-count ``capacity`` stays as a fallback ceiling for artifacts
+  that still report 0;
 * build-coalescing: concurrent callers that miss on the same key wait on one
   per-key build lock, so a pre-run is never duplicated.
 
@@ -83,18 +86,49 @@ class _Entry:
     arena_bytes: int = 0          # reserved-memory estimate (0 if unknown)
 
 
-def _arena_bytes(value: Any) -> int:
+def _executable_bytes(value: Any) -> int:
+    """Reserved-memory estimate for a raw XLA executable.
+
+    Uses the compiled artifact's own ``memory_analysis()`` (output +
+    temp + generated-code buffers) when the backend reports one; 0 when
+    the artifact exposes no analysis — such entries fall back to the
+    entry-count ``capacity`` ceiling."""
+    analysis = getattr(value, "memory_analysis", None)
+    if analysis is None:
+        return 0
+    try:
+        mem = analysis()
+        total = 0
+        for field in (
+            "output_size_in_bytes",
+            "temp_size_in_bytes",
+            "generated_code_size_in_bytes",
+        ):
+            total += int(getattr(mem, field, 0) or 0)
+        return max(0, total)
+    except Exception:  # noqa: BLE001 - backends without stats report 0
+        return 0
+
+
+def _arena_bytes(value: Any, explicit: Optional[int] = None) -> int:
     """Reserved arena estimate of a cached artifact.
 
-    ``TaskSchedule`` carries it in ``stats.arena_bytes``; raw executables
-    (the serving engine's prefill/decode path) report 0, so they are
-    governed by the entry-count ``capacity`` ceiling rather than the
-    byte budget."""
+    Resolution order: an ``explicit`` caller-provided estimate (the
+    serving engine derives one from its output/donated buffer shapes);
+    then ``stats.arena_bytes`` (``TaskSchedule`` carries it); then the
+    executable's own ``memory_analysis()``.  Artifacts reporting 0 remain
+    governed by the entry-count ``capacity`` ceiling rather than the byte
+    budget."""
+    if explicit is not None:
+        return max(0, int(explicit))
     stats = getattr(value, "stats", None)
     try:
-        return int(getattr(stats, "arena_bytes", 0) or 0)
+        reported = int(getattr(stats, "arena_bytes", 0) or 0)
     except (TypeError, ValueError):
-        return 0
+        reported = 0
+    if reported:
+        return reported
+    return _executable_bytes(value)
 
 
 class ScheduleCache:
@@ -174,12 +208,22 @@ class ScheduleCache:
             self.stats.hits += 1
             return entry.value
 
-    def put(self, key: Any, value: Any, *, pin: Any = None) -> None:
+    def put(
+        self, key: Any, value: Any, *, pin: Any = None,
+        arena_bytes: Optional[int] = None,
+    ) -> None:
         """Insert (or replace) ``key`` as the MRU entry, then evict as
-        needed to honor ``capacity`` and ``byte_budget``."""
+        needed to honor ``capacity`` and ``byte_budget``.  ``arena_bytes``
+        overrides the derived reserved-memory estimate (callers that know
+        their artifact's footprint — e.g. the serving engine's
+        output-shape estimate for raw executables — pass it here)."""
+        # derive bytes BEFORE taking the map lock: the fallback probes the
+        # artifact's memory_analysis(), a backend call that must not stall
+        # concurrent cache hits
+        nbytes = _arena_bytes(value, arena_bytes)
         with self._mu:
             self._insert_locked(
-                key, _Entry(value=value, pin=pin, arena_bytes=_arena_bytes(value))
+                key, _Entry(value=value, pin=pin, arena_bytes=nbytes)
             )
 
     def get_or_build(
@@ -188,12 +232,15 @@ class ScheduleCache:
         build: Callable[[], Any],
         *,
         pin: Any = None,
+        arena_bytes: Optional[int] = None,
     ) -> Any:
         """Return the cached value for ``key``, building it at most once.
 
         Concurrent callers missing on the same key coalesce on a per-key
         lock: one performs the build, the rest wait and receive the cached
         result — a pre-run is never duplicated (ISSUE §tentpole).
+        ``arena_bytes`` overrides the derived reserved-memory estimate for
+        the inserted entry (see :meth:`put`).
         """
         with self._mu:
             entry = self._entries.get(key)
@@ -222,6 +269,9 @@ class ScheduleCache:
             value = build()
             dt = time.perf_counter() - t0
             tid = threading.get_ident()
+            # byte derivation (possible memory_analysis() backend call)
+            # stays outside the map lock, like the build itself
+            nbytes = _arena_bytes(value, arena_bytes)
             with self._mu:
                 self.stats.builds += 1
                 self.stats.build_seconds += dt
@@ -230,7 +280,7 @@ class ScheduleCache:
                 )
                 self._insert_locked(key, _Entry(
                     value=value, pin=pin, build_seconds=dt,
-                    arena_bytes=_arena_bytes(value),
+                    arena_bytes=nbytes,
                 ))
                 self._build_locks.pop(key, None)
             return value
@@ -260,7 +310,9 @@ class ScheduleCache:
 
         ``entries`` lists (LRU→MRU) each cached artifact's ``arena_bytes``
         (the memory the sealed schedule statically reserves — from
-        ``TaskSchedule.stats``; 0 for raw executables) and build time;
+        ``TaskSchedule.stats``, a caller-provided estimate, or the
+        executable's ``memory_analysis()``; 0 only when none is known) and
+        build time;
         ``arena_bytes_total`` is their sum — the quantity byte-budget
         eviction keeps at or below ``byte_budget``.
         """

@@ -115,6 +115,12 @@ class Dispatcher:
         self._count_mu = threading.Lock()    # pending count + rid allocator
         self._pending_count = 0
         self._next_rid = 0
+        # lane-readiness notification (event-driven arbiter hand-off): set
+        # by the async layer, invoked OUTSIDE all dispatcher locks whenever
+        # a lane's work state changes (submit added work, a step finished).
+        # Plain attribute: assignment is atomic, and a stale read only costs
+        # one missed notification, which the arbiter's fallback wait covers.
+        self._lane_event_hook: Optional[Callable[[str], None]] = None
         # finished Requests, completion order; bounded — a long-running
         # service must not retain every request it ever served.  deque
         # appends are atomic, so no extra lock.
@@ -222,6 +228,7 @@ class Dispatcher:
             self._next_rid += 1
         with lane.queue_mu:
             lane.queue.append(req)
+        self._lane_event(model)
         return req
 
     def submit_request(self, model: str, req: Any) -> Any:
@@ -232,7 +239,29 @@ class Dispatcher:
         self._admit(req)
         with lane.queue_mu:
             lane.queue.append(req)
+        self._lane_event(model)
         return req
+
+    def set_lane_event_hook(
+        self, hook: Optional[Callable[[str], None]]
+    ) -> None:
+        """Install (or clear, with ``None``) the lane-readiness hook.
+
+        The hook is called with a lane name, outside every dispatcher lock,
+        right after that lane's work state changes: a ``submit`` appended a
+        request, or a :meth:`step_lane` quantum finished (the lane may have
+        drained, or may still hold work).  The async layer points this at
+        its quantum arbiter so a freed or newly-fundable quantum is granted
+        on the event itself instead of on the arbiter's timed fallback
+        tick.  Hooks must be fast and must not raise — they run on
+        submitter and stepper threads.
+        """
+        self._lane_event_hook = hook
+
+    def _lane_event(self, name: str) -> None:
+        hook = self._lane_event_hook
+        if hook is not None:
+            hook(name)
 
     def _validate(self, lane: _Lane, req: Any) -> None:
         """An unservable request (e.g. prompt beyond the engine's bucket
@@ -269,12 +298,22 @@ class Dispatcher:
             if lane.queue or not lane.engine.idle
         ]
 
-    def fairness_select(self, active: list) -> list:
-        """Ask the policy for a service order over ``active`` under the
-        fairness lock — the hook ``AsyncDispatcher``'s quantum arbiter
-        grants through (charging still happens in :meth:`step_lane`)."""
+    def active_lanes(self) -> list[str]:
+        """Names of lanes with queued or in-flight work right now, in
+        registration order — one registry pass plus the same lock-free
+        per-lane peek as :meth:`lane_active`.  The bulk form the quantum
+        arbiter scans per grant pump: with hundreds of tenants, one
+        ``_reg_mu`` acquisition instead of one per lane."""
+        return self._active()
+
+    def fairness_peek(self, active: list, ready: list) -> list:
+        """Policy picks over the TRUE active set restricted to ``ready``
+        lanes, under the fairness lock — the grant primitive
+        (``FairnessPolicy.peek_ready``) ``AsyncDispatcher``'s quantum
+        arbiter calls when a readiness event fires or a pool worker asks
+        for its next lane (charging still happens in :meth:`step_lane`)."""
         with self._fair_mu:
-            return self.fairness.select(list(active))
+            return self.fairness.peek_ready(list(active), list(ready))
 
     def step_lane(self, name: str, *, release: Optional[Callable[[], None]] = None) -> list:
         """One scheduling quantum for a single lane; returns its finished
@@ -315,6 +354,11 @@ class Dispatcher:
         if release is not None:
             release()
         self._complete(name, newly)
+        # state changed (requests may have finished; the lane may have
+        # drained): let the arbiter re-evaluate held quanta on the event
+        # rather than on its fallback tick.  Fired after callbacks so a
+        # woken stepper observes fully-accounted state.
+        self._lane_event(name)
         return newly
 
     def _complete(self, name: str, newly: list) -> None:

@@ -59,6 +59,24 @@ class FairnessPolicy:
     def charge(self, lane: str, *, steps: int = 1, tokens: int = 0) -> None:
         """Account actual consumption after ``lane`` was served."""
 
+    def peek_ready(self, active: Sequence[str], ready: Sequence[str]) -> list[str]:
+        """Grantable lanes for an event-driven arbiter, in policy order.
+
+        ``active`` is the TRUE active set (every lane with work — executing,
+        waiting, or mid-bookkeeping); ``ready`` is the subset a grant could
+        reach *right now* (a stepper or pool worker is free to serve it).
+        The policy sees ``active`` so its internal state stays exactly what
+        the synchronous loop would build, but the result is restricted to
+        ``ready`` — and when the policy's top pick is active-but-not-ready,
+        returning ``[]`` tells the arbiter to HOLD the quantum for it
+        rather than hand it to a less-deserving lane (this is what keeps
+        stride ratios exact).  The default filters :meth:`select`'s picks,
+        which preserves each policy's semantics: round-robin/quota serve
+        every eligible ready lane, stride serves its top pick or holds.
+        """
+        ready_set = set(ready)
+        return [lane for lane in self.select(active) if lane in ready_set]
+
     def snapshot(self) -> dict:
         """Policy state for metrics/debugging (plain dict)."""
         return {"policy": type(self).__name__}

@@ -59,16 +59,17 @@ class LatencySeries:
         return len(self.values)
 
     def summary_ms(self) -> dict:
-        """Count/mean/p50/p90/p99/max over the retained window, in ms."""
+        """Count/mean/p50/p90/p95/p99/max over the retained window, in ms."""
         vals = np.asarray(self.values, dtype=np.float64) * 1e3
         if not len(vals):
             return {"count": 0, "mean": 0.0, "p50": 0.0, "p90": 0.0,
-                    "p99": 0.0, "max": 0.0}
+                    "p95": 0.0, "p99": 0.0, "max": 0.0}
         return {
             "count": int(len(vals)),
             "mean": float(vals.mean()),
             "p50": percentile(vals, 50),
             "p90": percentile(vals, 90),
+            "p95": percentile(vals, 95),
             "p99": percentile(vals, 99),
             "max": float(vals.max()),
         }
@@ -110,6 +111,15 @@ class DispatchMetrics:
         self.tokens_out = 0
         self.rejected = 0                             # backpressure refusals
         self._engines: dict = {}                      # model -> _EngineSeries
+        # quantum-grant latency: lane became grantable -> arbiter granted it
+        # (the event-driven hand-off's figure of merit: under contention the
+        # p95 must sit below the old 10 ms fallback tick)
+        self.grant_latency = LatencySeries("grant", window=65536)
+        self._grants = 0
+        # stepper-pool occupancy: busy-worker samples, recorded per grant
+        self._pool_size = 0
+        self._pool_busy = deque(maxlen=8192)
+        self._pool_busy_peak = 0
         self._t_first_submit: Optional[float] = None
         self._t_last_done: Optional[float] = None
         self._mu = threading.Lock()
@@ -139,6 +149,30 @@ class DispatchMetrics:
             rec.steps += 1
             rec.tokens += tokens
             rec.step_latency.record(seconds)
+
+    def on_grant(self, seconds: float) -> None:
+        """Record one quantum grant: ``seconds`` is the arbiter's reaction
+        time — from the latest of the lane becoming ready, its executor
+        (blocked stepper / idle pool worker) becoming free, and the last
+        grant-enabling event the arbiter processed, to the grant.  Backlog
+        behind busy executors and a policy's own rationing (stride holding
+        for its top pick) are scheduling decisions, not hand-off delay,
+        and are excluded.  Fed by the async layer's arbiter on every
+        grant, in every arbitrated stepping mode."""
+        with self._mu:
+            self._grants += 1
+            self.grant_latency.record(seconds)
+
+    def on_pool_occupancy(self, busy: int, size: int) -> None:
+        """Record one stepper-pool occupancy sample: ``busy`` of ``size``
+        workers currently executing a granted quantum.  Sampled at each
+        grant, so the series tracks occupancy under load rather than idle
+        time."""
+        with self._mu:
+            self._pool_size = size
+            self._pool_busy.append(int(busy))
+            if busy > self._pool_busy_peak:
+                self._pool_busy_peak = int(busy)
 
     def observe_request(self, req: Any) -> None:
         """Fold one finished request (serving ``Request`` timestamps) in."""
@@ -203,6 +237,8 @@ class DispatchMetrics:
                 "ttft_ms": self.ttft.summary_ms(),
                 "per_token_ms": self.per_token.summary_ms(),
                 "e2e_ms": self.e2e.summary_ms(),
+                "grants": self._grants,
+                "grant_ms": self.grant_latency.summary_ms(),
                 "engines": {
                     model: {
                         "steps": rec.steps,
@@ -212,6 +248,14 @@ class DispatchMetrics:
                     for model, rec in self._engines.items()
                 },
             }
+            if self._pool_size:
+                busy = np.asarray(self._pool_busy, dtype=np.float64)
+                snap["pool"] = {
+                    "size": self._pool_size,
+                    "busy_mean": float(busy.mean()) if len(busy) else 0.0,
+                    "busy_peak": self._pool_busy_peak,
+                    "samples": int(len(busy)),
+                }
         if cache_stats is not None:
             snap["schedule_cache"] = dict(cache_stats)
         return snap

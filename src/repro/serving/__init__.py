@@ -1,3 +1,12 @@
+"""repro.serving: continuous-batching inference over AoT-sealed schedules.
+
+:class:`ServingEngine` runs iteration-level continuous batching over
+prefill/decode executables sealed once through a shared
+``repro.dispatch.ScheduleCache``; :class:`Request` is the unit of traffic
+(also what the dispatch layer routes) and :class:`EngineStats` the
+per-engine counter block.
+"""
+
 from .engine import EngineStats, Request, ServingEngine
 
 __all__ = ["EngineStats", "Request", "ServingEngine"]

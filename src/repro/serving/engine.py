@@ -35,6 +35,10 @@ from repro.models.transformer import encode_memory
 
 @dataclasses.dataclass
 class Request:
+    """One generation request: prompt in, tokens out, engine-stamped
+    timestamps (``t_submit``/``t_first``/``t_done``) for latency metrics.
+    The unit of traffic for both the engine and the dispatch layer."""
+
     rid: int
     prompt: np.ndarray                 # (P,) int32
     max_new_tokens: int = 16
@@ -53,6 +57,9 @@ class Request:
 
 @dataclasses.dataclass
 class EngineStats:
+    """Per-engine counters: compiles, steps, token and wall-time totals
+    (prefill vs decode split)."""
+
     prefill_compiles: int = 0
     decode_compiles: int = 0
     steps: int = 0
@@ -63,6 +70,7 @@ class EngineStats:
 
     @property
     def decode_tok_per_s(self) -> float:
+        """Decode-only token throughput (tokens out / decode seconds)."""
         return self.tokens_out / self.decode_s if self.decode_s else 0.0
 
 
@@ -154,6 +162,31 @@ class ServingEngine:
         self._step_mu = threading.Lock()
 
     # -- sealed executables through the schedule cache ---------------------
+    _EXEC_ARENA_FLOOR = 4096     # conservative floor: never report ~free
+
+    def _exec_arena_bytes(self, *extra_shapes: tuple) -> int:
+        """Reserved-memory estimate for one step executable, derived from
+        its output buffer shapes: every step returns the full KV cache
+        (the dominant term — without donation XLA materializes a fresh
+        copy) plus the next-token array.  ``extra_shapes`` adds
+        ``(shape, dtype)`` pairs for per-executable outputs/temps (e.g. a
+        prefill's padded token buffer).  Byte-budget eviction needs a
+        non-zero number here: raw executables carry no TaskSchedule stats,
+        and reporting 0 would make them invisible to the budget.  The
+        KV-cache term is memoized (shapes are fixed for the engine's
+        lifetime): this runs on every request admission, and the estimate
+        only matters on a cache miss."""
+        kv = getattr(self, "_kv_arena_bytes", None)
+        if kv is None:
+            kv = self._kv_arena_bytes = sum(
+                int(np.prod(leaf.shape)) * jnp.dtype(leaf.dtype).itemsize
+                for leaf in jax.tree_util.tree_leaves(self.kv_cache)
+            )
+        total = kv
+        for shape, dtype in extra_shapes:
+            total += int(np.prod(shape)) * jnp.dtype(dtype).itemsize
+        return max(self._EXEC_ARENA_FLOOR, total)
+
     def _warm_buckets(self) -> tuple[int, ...]:
         static = self.bucketing.static_buckets()
         if static is None:
@@ -185,7 +218,12 @@ class ServingEngine:
         # no pin: the key's fn_id is an explicit string (no id() component
         # to protect), and pinning params would keep a dropped engine's
         # whole weight pytree alive in a shared cache until eviction
-        return self.schedule_cache.get_or_build(key, build)
+        return self.schedule_cache.get_or_build(
+            key, build,
+            arena_bytes=self._exec_arena_bytes(
+                ((self.max_slots, 1), jnp.int32)
+            ),
+        )
 
     def _prefill_key(self, bucket: int) -> ScheduleKey:
         key = self._prefill_keys.get(bucket)
@@ -219,7 +257,10 @@ class ServingEngine:
             self.stats.prefill_compiles += 1
             return exe
 
-        return self.schedule_cache.get_or_build(key, build)
+        return self.schedule_cache.get_or_build(
+            key, build,
+            arena_bytes=self._exec_arena_bytes(((1, bucket), jnp.int32)),
+        )
 
     # -- sealed step bodies ------------------------------------------------
     def _decode_impl(self, params, cache, tokens):
@@ -268,6 +309,8 @@ class ServingEngine:
         self._bucket(len(req.prompt))          # ValueError if unservable
 
     def submit(self, req: Request) -> None:
+        """Enqueue ``req`` for admission on a later :meth:`step` (stamps
+        ``t_submit`` unless the dispatcher already did)."""
         if not req.t_submit:         # dispatcher may have stamped lane entry
             req.t_submit = time.perf_counter()
         self.queue.append(req)
@@ -278,6 +321,7 @@ class ServingEngine:
 
     @property
     def idle(self) -> bool:
+        """True when no request is queued and every batch slot is free."""
         return not self.queue and all(s is None for s in self.slots)
 
     def _bucket(self, plen: int) -> int:

@@ -51,6 +51,32 @@ class FakeEngine:
         return finished
 
 
+class SeqEngine(FakeEngine):
+    """Deterministic decode stream: request ``rid`` emits token
+    ``rid * 1000 + i`` as its i-th output, one per step, honoring
+    ``max_new_tokens`` — so "token-identical across stepping modes" is a
+    meaningful assertion even without real models."""
+
+    def step(self):
+        self.log.append(self.name)
+        for i, s in enumerate(self.slots):
+            if s is None and self.queue:
+                self.slots[i] = self.queue.pop(0)
+        finished = []
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            req.generated.append(req.rid * 1000 + len(req.generated))
+            if not req.t_first:
+                req.t_first = time.perf_counter()
+            if len(req.generated) >= req.max_new_tokens:
+                req.done = True
+                req.t_done = time.perf_counter()
+                self.slots[i] = None
+                finished.append(req)
+        return finished
+
+
 class FailingEngine(FakeEngine):
     """Accepts requests, then blows up on the first step that has work —
     exercises the async dispatcher's error propagation path."""

@@ -82,15 +82,16 @@ def sync_reference(models, shared_cache):
 
 
 @pytest.mark.timeout(300)
-@pytest.mark.parametrize("stepping", ["per-engine", "single"])
+@pytest.mark.parametrize("stepping", ["per-engine", "single", "pool"])
 def test_async_futures_token_identical_to_sync(
     models, shared_cache, sync_reference, stepping
 ):
-    """Acceptance (ISSUE 3): per-engine stepping (and the legacy single
-    loop) must be token-identical to the synchronous reference for a
-    2-model × 3-shape saturated workload — overlapping decode across
-    tenants must not perturb any tenant's own greedy decode stream."""
-    ad = AsyncDispatcher(max_pending=256, stepping=stepping)
+    """Acceptance (ISSUE 3 + 4): per-engine stepping, the legacy single
+    loop, and the fixed stepper pool must all be token-identical to the
+    synchronous reference for a 2-model × 3-shape saturated workload —
+    neither overlapping decode across tenants nor multiplexing lanes over
+    shared workers may perturb any tenant's own greedy decode stream."""
+    ad = AsyncDispatcher(max_pending=256, stepping=stepping, pool_size=3)
     for arch, cfg, params in models:
         ad.register_model(arch, _engine(cfg, params, shared_cache))
     futures = {}
@@ -113,8 +114,9 @@ def test_async_futures_token_identical_to_sync(
     assert snap["async"]["stepping"] == stepping
     assert snap["async"]["futures_pending"] == 0
     assert snap["requests_done"] == len(models) * N_REQS
-    if stepping == "per-engine":
-        # every tenant's lane was stepped by its own stepper
+    if stepping in ("per-engine", "pool"):
+        # every tenant's lane was stepped (by its own stepper, or by
+        # whichever pool workers the arbiter granted it to)
         engines = snap["engines"]
         assert all(engines[arch]["steps"] > 0 for arch, _, _ in models)
 

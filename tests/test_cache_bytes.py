@@ -166,6 +166,87 @@ def test_byte_budget_held_under_concurrent_builds():
     assert cache.stats.bytes_evicted > 0
 
 
+# -- raw-executable accounting (prefill arena_bytes == 0 regression) ----------
+
+def test_explicit_arena_bytes_overrides_derivation():
+    """Callers that know their artifact's footprint pass it explicitly;
+    the override also wins over a reported stats.arena_bytes."""
+    cache = ScheduleCache(capacity=8, byte_budget=1000)
+    cache.put("raw", object(), arena_bytes=300)
+    cache.put("sealed", _Sealed(10), arena_bytes=200)   # override wins
+    assert cache.arena_bytes_total == 500
+    snap = {e["key"]: e["arena_bytes"] for e in cache.snapshot()["entries"]}
+    assert snap == {"'raw'": 300, "'sealed'": 200}
+    got = cache.get_or_build("built", lambda: object(), arena_bytes=400)
+    assert got is not None
+    assert cache.arena_bytes_total == 900
+
+
+def test_memory_analysis_estimate_for_raw_executables():
+    """An artifact exposing XLA-style memory_analysis() is estimated from
+    its output/temp/code buffer sizes instead of reporting 0."""
+    class _Analysis:
+        output_size_in_bytes = 256
+        temp_size_in_bytes = 64
+        generated_code_size_in_bytes = 16
+
+    class _Exe:
+        def memory_analysis(self):
+            return _Analysis()
+
+    class _BrokenExe:
+        def memory_analysis(self):
+            raise RuntimeError("backend reports nothing")
+
+    cache = ScheduleCache(capacity=8)
+    cache.put("exe", _Exe())
+    cache.put("broken", _BrokenExe())                   # degrades to 0
+    snap = {e["key"]: e["arena_bytes"] for e in cache.snapshot()["entries"]}
+    assert snap == {"'exe'": 336, "'broken'": 0}
+
+
+@pytest.mark.timeout(120)
+def test_serving_prefill_executables_report_nonzero_arena():
+    """Regression (ISSUE 4 satellite): the serving engine's raw prefill /
+    decode executables used to report arena_bytes == 0, making them
+    invisible to byte-budget eviction.  Every cache entry an engine seals
+    must now carry a positive estimate (≥ the KV-cache output it returns,
+    and never below the conservative floor)."""
+    import dataclasses
+
+    import jax
+    import repro.configs as C
+    from repro.models import init_model
+    from repro.serving import ServingEngine
+
+    cfg = dataclasses.replace(C.get("stablelm-1.6b", smoke=True),
+                              dtype="float32")
+    params, _ = init_model(jax.random.key(0), cfg)
+    cache = ScheduleCache(capacity=16)
+    eng = ServingEngine(cfg, params, max_slots=2, max_len=64,
+                        prompt_buckets=(8, 16), schedule_cache=cache)
+    snap = cache.snapshot()
+    assert snap["size"] >= 3                 # decode + two prefill buckets
+    assert all(e["arena_bytes"] >= eng._EXEC_ARENA_FLOOR
+               for e in snap["entries"])
+    kv_bytes = sum(
+        int(leaf.size) * leaf.dtype.itemsize
+        for leaf in jax.tree_util.tree_leaves(eng.kv_cache)
+    )
+    assert all(e["arena_bytes"] >= kv_bytes for e in snap["entries"])
+    assert snap["arena_bytes_total"] == sum(
+        e["arena_bytes"] for e in snap["entries"]
+    )
+    # and byte-budget eviction now actually sees them: a budget sized for
+    # one executable cannot hold all three
+    small = ScheduleCache(capacity=16,
+                          byte_budget=snap["entries"][0]["arena_bytes"])
+    ServingEngine(cfg, params, max_slots=2, max_len=64,
+                  prompt_buckets=(8, 16), schedule_cache=small)
+    assert small.stats.evictions > 0
+    assert small.arena_bytes_total <= small.byte_budget
+
+
 # -- integration: real sealed schedules ---------------------------------------
 
 @pytest.mark.timeout(120)

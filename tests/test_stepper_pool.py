@@ -1,0 +1,406 @@
+"""Stepper pool + event-driven quantum hand-off (ISSUE 4).
+
+Three suites:
+
+* **many-tenant soak** — 64 tenants (2 hot, 62 sparse) through
+  ``stepping="pool"``: stepper thread count stays at ``pool_size`` (vs 64
+  for per-engine), every future resolves, outputs are token-identical to
+  the synchronous reference, and no pool worker ever builds;
+* **event-driven hand-off** — an instrumented arbiter (huge fallback tick)
+  proves a blocked lane is granted on ``charge``/``release`` without
+  consuming a timed-wait tick, and that time-driven quota refills still
+  wake via the fallback wait (fake quota clock);
+* **fairness under the pool** — randomized weights and arrival patterns
+  (hypothesis shim) converge on proportional decode shares, and
+  ``max_concurrent_steps=1`` recovers the exact stride order.
+
+Every test is timeout-guarded: a wedged worker or a lost wakeup must fail
+the suite, not hang it.
+"""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+from _fakes import FailingEngine, FakeEngine, SeqEngine
+from _hypothesis_compat import given, settings, st
+
+from repro.dispatch import (
+    AsyncDispatcher,
+    Dispatcher,
+    QuotaFairness,
+    WeightedFairness,
+)
+from repro.dispatch.async_dispatcher import _QuantumArbiter
+from repro.serving import Request
+
+PROMPT = np.array([1, 2, 3], np.int32)
+STEPPER_PREFIX = "repro-dispatch-step["
+
+
+def _stepper_threads():
+    return [
+        t for t in threading.enumerate()
+        if t.is_alive() and t.name.startswith(STEPPER_PREFIX)
+    ]
+
+
+def _request(rid, max_new):
+    return Request(rid=rid, prompt=PROMPT.copy(), max_new_tokens=max_new)
+
+
+# -- many-tenant soak ----------------------------------------------------------
+
+N_TENANTS = 64
+POOL_SIZE = 4
+HOT = ("hot-0", "hot-1")
+
+
+def _tenant_workload():
+    """(model, rid, max_new_tokens) triples: 2 hot tenants with deep
+    backlogs, 62 sparse tenants with one short request each."""
+    work = []
+    rid = 0
+    for name in HOT:
+        for _ in range(12):
+            work.append((name, rid, 8))
+            rid += 1
+    for i in range(N_TENANTS - len(HOT)):
+        work.append((f"sparse-{i}", rid, 2))
+        rid += 1
+    return work
+
+
+@pytest.mark.timeout(180)
+def test_pool_soak_64_tenants_bounded_threads_token_identical():
+    """The tentpole acceptance at test scale: 64 tenants share POOL_SIZE
+    stepper threads (per-engine would park 64), all futures resolve,
+    outputs match the synchronous reference token for token, and the
+    no-compile invariant holds for every pool worker."""
+    names = list(HOT) + [f"sparse-{i}" for i in range(N_TENANTS - len(HOT))]
+    workload = _tenant_workload()
+
+    # synchronous reference: same engines, same requests, one thread
+    sync = Dispatcher(max_pending=1024)
+    for name in names:
+        sync.register_model(name, SeqEngine(name, [], slots=2))
+    for model, rid, max_new in workload:
+        sync.submit_request(model, _request(rid, max_new))
+    reference = {
+        (r.model, r.rid): list(r.generated) for r in sync.run_until_drained()
+    }
+    assert len(reference) == len(workload)
+
+    # identity-based census: a prior test's stepper dying mid-test must
+    # not skew the count, so compare against the exact pre-existing set
+    before = set(_stepper_threads())
+    ad = AsyncDispatcher(max_pending=1024, stepping="pool",
+                         pool_size=POOL_SIZE)
+    for name in names:
+        ad.register_model(name, SeqEngine(name, [], slots=2))
+    futures = {}
+    with ad:
+        # live thread census while serving: the whole point of the pool
+        assert len(set(_stepper_threads()) - before) == POOL_SIZE
+        for model, rid, max_new in workload:
+            futures[(model, rid)] = ad.submit_request(
+                model, _request(rid, max_new)
+            )
+        assert len(set(_stepper_threads()) - before) == POOL_SIZE
+        got = {
+            key: list(fut.result(timeout=90).generated)
+            for key, fut in futures.items()
+        }
+        snap = ad.snapshot()           # while the pool is still live
+    assert got == reference
+    assert snap["async"]["stepping"] == "pool"
+    assert snap["async"]["pool_size"] == POOL_SIZE
+    assert snap["async"]["steppers"] == POOL_SIZE
+    assert snap["async"]["futures_pending"] == 0
+    assert snap["requests_done"] == len(workload)
+    # no pool worker ever built (paper §4.3: steppers only replay)
+    by_stepper = snap["async"]["builds_by_stepper"]
+    assert set(by_stepper) == {f"pool-{i}" for i in range(POOL_SIZE)}
+    assert all(v == 0 for v in by_stepper.values())
+    # grant accounting flowed through the arbiter + metrics
+    assert snap["async"]["arbiter"]["grants"] > 0
+    assert snap["grant_ms"]["count"] == snap["async"]["arbiter"]["grants"]
+    assert snap["pool"]["size"] == POOL_SIZE
+    assert 1 <= snap["pool"]["busy_peak"] <= POOL_SIZE
+
+
+@pytest.mark.timeout(60)
+def test_pool_registers_tenants_while_running_without_new_threads():
+    """A hundredth tenant costs a dict entry, not a thread: late
+    registrations are served by the existing workers."""
+    ad = AsyncDispatcher(max_pending=64, stepping="pool", pool_size=2)
+    ad.register_model("a", SeqEngine("a", []))
+    ad.start()
+    assert ad.submit("a", PROMPT, max_new_tokens=2).result(timeout=30).done
+    before = set(_stepper_threads())
+    for i in range(10):
+        ad.register_model(f"late-{i}", SeqEngine(f"late-{i}", []))
+    futs = [
+        ad.submit(f"late-{i}", PROMPT, max_new_tokens=2) for i in range(10)
+    ]
+    assert all(f.result(timeout=30).done for f in futs)
+    assert not set(_stepper_threads()) - before    # no thread was spawned
+    assert ad.snapshot()["async"]["steppers"] == 2
+    ad.stop()
+
+
+@pytest.mark.timeout(60)
+def test_pool_engine_error_poisons_dispatcher():
+    """One tenant's engine dying fails every future and stops the pool
+    loudly, exactly like per-engine mode."""
+    ad = AsyncDispatcher(stepping="pool", pool_size=2)
+    ad.register_model("ok", FakeEngine("ok", [], cost=10**9))
+    ad.register_model("bad", FailingEngine("bad", []))
+    ad.start()
+    f_ok = ad.submit("ok", PROMPT)
+    f_bad = ad.submit("bad", PROMPT)
+    assert isinstance(f_bad.exception(timeout=30), RuntimeError)
+    assert isinstance(f_ok.exception(timeout=30), RuntimeError)
+    with pytest.raises(RuntimeError):
+        ad.submit("ok", PROMPT)
+    ad.stop(drain=False)
+    assert not ad.running
+
+
+@pytest.mark.timeout(60)
+def test_pool_size_validation_and_default():
+    with pytest.raises(ValueError):
+        AsyncDispatcher(stepping="pool", pool_size=0)
+    with pytest.raises(ValueError):
+        AsyncDispatcher(stepping="bogus")
+    ad = AsyncDispatcher(stepping="pool")
+    assert 1 <= ad.pool_size <= 8          # min(8, cpu_count)
+
+
+@pytest.mark.timeout(60)
+def test_pool_drain_survives_request_served_before_kick():
+    """Regression: the dispatcher's lane-event hook can hand a request to
+    a pool worker that serves it to completion BEFORE the submitter's
+    busy-mark (`_kick`) runs.  An unconditional mark would then strand a
+    stale `_busy` entry that no pool worker ever revisits (pool workers
+    don't poll idle lanes), wedging ``drain``/``stop`` forever.  Force
+    that interleaving by delaying the kick until the request has fully
+    drained, then require drain/stop to return promptly."""
+    ad = AsyncDispatcher(max_pending=16, stepping="pool", pool_size=2)
+    ad.register_model("a", SeqEngine("a", []))
+    ad.start()
+    orig_kick = ad._kick
+
+    def late_kick(model):
+        deadline = time.monotonic() + 10
+        while ad.pending() > 0 and time.monotonic() < deadline:
+            time.sleep(0.002)          # worker serves the request first
+        orig_kick(model)
+
+    ad._kick = late_kick
+    try:
+        fut = ad.submit("a", PROMPT, max_new_tokens=1)
+        assert fut.result(timeout=30).done
+    finally:
+        ad._kick = orig_kick
+    ad.drain(timeout=5)                # stale busy entry would raise here
+    ad.stop(timeout=10)
+    assert not ad.running
+
+
+# -- event-driven quantum hand-off --------------------------------------------
+
+@pytest.mark.timeout(60)
+def test_handoff_granted_on_charge_without_timed_tick():
+    """With the fallback tick cranked far beyond the test budget, a lane
+    blocked on capacity must be granted the moment the running lane's
+    quantum is charged and released — the event IS the wakeup.  Any
+    reliance on the old 10 ms poll would hang this test into its
+    timeout."""
+    disp = Dispatcher(max_pending=64)
+    disp.register_model("a", SeqEngine("a", []))
+    disp.register_model("b", SeqEngine("b", []))
+    arb = _QuantumArbiter(disp, 1, tick=30.0)     # fallback effectively off
+    disp.set_lane_event_hook(arb.notify_ready)
+    disp.submit_request("a", _request(0, 4))
+    disp.submit_request("b", _request(1, 4))
+
+    assert arb.acquire("a")                       # policy grants the first
+    granted_b = threading.Event()
+
+    def waiter():
+        if arb.acquire("b"):
+            granted_b.set()
+
+    t = threading.Thread(target=waiter, daemon=True)
+    t.start()
+    time.sleep(0.1)
+    assert not granted_b.is_set()                 # capacity 1: b must wait
+    t0 = time.perf_counter()
+    # the real hand-off path: step charges the fairness policy, then the
+    # release= callback returns the quantum — granting b on that event
+    disp.step_lane("a", release=lambda: arb.release("a"))
+    assert granted_b.wait(timeout=5.0), "freed quantum never handed off"
+    handoff = time.perf_counter() - t0
+    arb.release("b")
+    arb.close()
+    t.join(timeout=5)
+    disp.set_lane_event_hook(None)
+    assert handoff < 1.0                          # event, not a 30 s tick
+    assert arb.timed_wakeups == 0, "hand-off consumed a fallback tick"
+    assert arb.timed_grants == 0
+    assert arb.grants == 2
+
+
+@pytest.mark.timeout(60)
+def test_submit_readiness_event_wakes_pool_worker_without_tick():
+    """A pool worker parked on an empty dispatcher is woken by the
+    submit-side lane event itself (dispatcher hook -> arbiter), not by
+    the fallback tick."""
+    ad = AsyncDispatcher(max_pending=16, stepping="pool", pool_size=1)
+    ad.register_model("a", SeqEngine("a", []))
+    ad.start()
+    time.sleep(0.1)                               # worker parks idle
+    arb = ad._arbiter
+    t0 = time.perf_counter()
+    assert ad.submit("a", PROMPT, max_new_tokens=1).result(timeout=30).done
+    latency = time.perf_counter() - t0
+    fallback_grants = arb.timed_grants                # read BEFORE the
+    ad.stop()                                         # worker idles again
+    # served fast, and no grant was served by the fallback tick (idle
+    # parking may expire ticks, but they issue no grants — timed_grants
+    # isolates the fallback path actually serving)
+    assert latency < 0.3
+    assert fallback_grants == 0
+
+
+@pytest.mark.timeout(60)
+def test_quota_refill_still_wakes_via_fallback_tick():
+    """Time-driven credit appears with NO dispatcher event: a broke lane
+    under a non-work-conserving quota must still be granted once the
+    (fake) clock advances — via the arbiter's retained timed wait."""
+    clock_t = [0.0]
+    policy = QuotaFairness(rate=8.0, burst=8.0, work_conserving=False,
+                           clock=lambda: clock_t[0])
+    disp = Dispatcher(max_pending=64, fairness=policy)
+    disp.register_model("a", SeqEngine("a", []))
+    disp.submit_request("a", _request(0, 4))
+    # spend the registration burst so the lane is broke
+    policy.select(["a"])                           # anchor the refill clock
+    policy.charge("a", tokens=8)
+    arb = _QuantumArbiter(disp, None, tick=0.02)
+    disp.set_lane_event_hook(arb.notify_ready)
+
+    granted = threading.Event()
+
+    def waiter():
+        if arb.acquire("a"):
+            granted.set()
+
+    t = threading.Thread(target=waiter, daemon=True)
+    t.start()
+    time.sleep(0.15)
+    assert not granted.is_set(), "broke lane was granted without credit"
+    clock_t[0] += 10.0                             # refill credit: no event
+    assert granted.wait(timeout=5.0), "quota refill never woke the waiter"
+    arb.release("a")
+    arb.close()
+    t.join(timeout=5)
+    disp.set_lane_event_hook(None)
+    assert arb.timed_wakeups >= 1                  # the fallback did the wakeup
+    assert arb.timed_grants >= 1                   # ...and served the grant
+
+
+# -- fairness through the pool ------------------------------------------------
+
+def _preloaded_pool(weights, requests_per_lane, max_new,
+                    max_concurrent=None, pool_size=4):
+    """A pool dispatcher whose lanes are saturated BEFORE the workers
+    start, so service order is policy-driven from the first quantum."""
+    log = []
+    disp = Dispatcher(max_pending=100_000, fairness="weighted")
+    for lane, w in weights.items():
+        disp.register_model(lane, SeqEngine(lane, log), weight=w)
+    rid = 0
+    for lane in weights:
+        for _ in range(requests_per_lane.get(lane, 1)):
+            disp.submit_request(lane, _request(rid, max_new))
+            rid += 1
+    ad = AsyncDispatcher(disp, stepping="pool", pool_size=pool_size,
+                         max_concurrent_steps=max_concurrent)
+    return ad, log
+
+
+@st.composite
+def pool_cases(draw):
+    n = draw(st.integers(min_value=2, max_value=4))
+    weights = {
+        f"lane{i}": float(draw(st.integers(min_value=1, max_value=8)))
+        for i in range(n)
+    }
+    depths = {
+        lane: draw(st.integers(min_value=1, max_value=3))
+        for lane in weights
+    }
+    return weights, depths
+
+
+@given(pool_cases())
+@settings(max_examples=8, deadline=None)
+@pytest.mark.timeout(300)
+def test_pool_converges_on_proportional_shares(case):
+    """Random weights and arrival depths through ``stepping="pool"``:
+    saturated lanes' decode-step shares converge on the stride
+    scheduler's proportional split, within its lag bound."""
+    weights, depths = case
+    window = 240
+    # every lane must stay saturated through the window regardless of how
+    # the policy splits it: total tokens per lane >= window
+    max_new = max(window // min(depths.values()) + 8, 16)
+    ad, log = _preloaded_pool(weights, depths, max_new)
+    ad.start()
+    deadline = time.monotonic() + 120
+    while len(log) < window and time.monotonic() < deadline:
+        time.sleep(0.005)
+    ad.stop(drain=False)
+    counts = {lane: log[:window].count(lane) for lane in weights}
+    assert sum(counts.values()) == window, "pool workers stalled"
+    total_w = sum(weights.values())
+    for lane, w in weights.items():
+        expected = window * w / total_w
+        # stride lag bound (one stride + lane count), plus one quantum of
+        # thread-timing slack for the stop() cut-off
+        slack = total_w / w + len(weights) + 1
+        assert abs(counts[lane] - expected) <= slack, (
+            f"{lane}: served {counts[lane]}, expected ~{expected:.0f} "
+            f"(weights {weights}, depths {depths})"
+        )
+
+
+@pytest.mark.timeout(150)
+def test_pool_capped_recovers_exact_stride_order():
+    """``max_concurrent_steps=1`` through the pool reproduces the stride
+    scheduler's exact service sequence — the strongest ordering claim:
+    multiplexed workers change WHO steps, never WHAT order lanes are
+    served in."""
+    weights = {"heavy": 3.0, "light": 1.0}
+    window = 60
+    ad, log = _preloaded_pool(weights, {lane: 1 for lane in weights},
+                              max_new=window + 8, max_concurrent=1)
+    ad.start()
+    deadline = time.monotonic() + 90
+    while len(log) < window and time.monotonic() < deadline:
+        time.sleep(0.005)
+    ad.stop(drain=False)
+    assert len(log) >= window, "pool workers stalled"
+
+    reference = WeightedFairness(weights=weights)
+    for lane in weights:                       # same registration order
+        reference.register(lane)
+    expected = []
+    for _ in range(window):
+        pick = reference.select(list(weights))[0]
+        reference.charge(pick, steps=1, tokens=1)
+        expected.append(pick)
+    assert log[:window] == expected

@@ -5,9 +5,10 @@
    resolve to a file or directory in the repo (anchors and absolute URLs
    are skipped).  Docs that point at moved files rot silently; this makes
    the rot a red build instead.
-2. **Docstring coverage** — the public ``repro.dispatch`` API (modules,
-   public classes, public functions and methods) must be 100% docstring-
-   covered.  Equivalent to an `interrogate` gate, without the dependency.
+2. **Docstring coverage** — the public ``repro.dispatch`` and
+   ``repro.serving`` APIs (modules, public classes, public functions and
+   methods) must be 100% docstring-covered.  Equivalent to an
+   `interrogate` gate, without the dependency.
 
     python tools/check_docs.py
 """
@@ -21,7 +22,7 @@ from pathlib import Path
 
 ROOT = Path(__file__).resolve().parent.parent
 DOC_FILES = ("README.md", "DESIGN.md")
-API_DIRS = ("src/repro/dispatch",)
+API_DIRS = ("src/repro/dispatch", "src/repro/serving")
 LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
 
