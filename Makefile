@@ -1,7 +1,7 @@
 # Tier-1 verification (ROADMAP.md): must pass from a fresh checkout.
 PY ?= python
 
-.PHONY: test bench-dispatch serve-example docs-check
+.PHONY: test bench-dispatch bench-smoke serve-example docs-check
 
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
@@ -11,6 +11,14 @@ docs-check:
 
 bench-dispatch:
 	PYTHONPATH=src $(PY) -m benchmarks.dispatch_bench
+
+# CI-sized grant-path measurement: the kilo-tenant row reduced to 64
+# tenants over deterministic tick engines (no model compiles).  Exits
+# non-zero on token divergence, wakeups-per-grant > 2, or a non-flat
+# per-grant CPU ratio; CI additionally bounds the step with a hard
+# timeout.
+bench-smoke:
+	PYTHONPATH=src $(PY) -m benchmarks.dispatch_bench --smoke
 
 serve-example:
 	PYTHONPATH=src $(PY) examples/serve_llm.py --requests 8 --max-new 6

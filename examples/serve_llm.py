@@ -12,8 +12,11 @@ across models) or multiplexes every tenant over a small fixed worker pool
 stays at N no matter how many models register) while ``submit`` returns
 futures immediately — the request loop is pure submission (the
 inference-serving face of the paper's AoT scheduling), and no stepper
-ever compiles (``builds_on_thread`` below stays 0).  ``--fairness`` picks the policy: round-robin rotation, weighted
-fair queueing (``--weights``, per arch), or token-rate quotas (tokens per
+ever compiles (``builds_on_thread`` below stays 0).  ``--fairness`` picks
+the policy: round-robin rotation, weighted fair queueing (``--weights``,
+per arch; exact shares, serial decode), ``drr`` weighted deficit
+round-robin (proportional shares that overlap across workers),
+``lottery`` (probabilistic shares), or token-rate quotas (tokens per
 wall-clock second).  ``--cache-budget-mb`` caps the reserved-arena bytes
 the shared schedule cache may hold (LRU entries are evicted past it).
 """
@@ -42,7 +45,8 @@ def main():
     ap.add_argument("--bucketing", default="pow2:8:32",
                     help='"exact", "pow2[:MIN:MAX]", or e.g. "8,16,32"')
     ap.add_argument("--fairness", default="round_robin",
-                    help='"round_robin", "weighted", or "quota[:RATE[:BURST]]"')
+                    help='"round_robin", "weighted", "drr[:QUANTUM]", '
+                         '"lottery[:SEED]", or "quota[:RATE[:BURST]]"')
     ap.add_argument("--weights", default="",
                     help="comma-separated per-arch weights (weighted/quota)")
     ap.add_argument("--stepping", default="per-engine",
@@ -123,7 +127,9 @@ def main():
     if snap["async"]["arbiter"] is not None:
         arb = snap["async"]["arbiter"]
         print(f"arbiter: {arb['grants']} grants, "
-              f"grant p95 {snap['grant_ms']['p95']:.2f}ms "
+              f"grant p95 {snap['grant_ms']['p95']:.2f}ms, "
+              f"grant cpu p50 {snap['grant_cost_ms']['p50']*1e3:.0f}us, "
+              f"{arb['wakeups_per_grant']:.2f} wakeups/grant "
               f"({arb['timed_grants']} served by the fallback tick)"
               + (f" | pool occupancy mean {snap['pool']['busy_mean']:.1f}"
                  f"/{snap['pool']['size']} (peak {snap['pool']['busy_peak']})"

@@ -6,7 +6,8 @@ reserved-arena byte budget) keyed by :class:`~repro.core.aot.ScheduleKey`;
 incoming shapes map onto cached shapes via :mod:`bucketing`; the
 :class:`Dispatcher` multiplexes tenant requests over per-model engines
 with pluggable :mod:`fairness` (round-robin rotation, weighted fair
-queueing, wall-clock token-rate quotas), backpressure, and fine-grained
+queueing, concurrent weighted deficit round-robin, lottery scheduling,
+wall-clock token-rate quotas), backpressure, and fine-grained
 locking (submits never wait out an engine step); the
 :class:`AsyncDispatcher` runs one stepper thread per engine — decode
 overlaps across tenants — or a fixed stepper pool multiplexing hundreds
@@ -32,7 +33,10 @@ from .bucketing import (
 from .cache import CacheStats, ScheduleCache
 from .dispatcher import Dispatcher, DrainTimeoutError, QueueFullError
 from .fairness import (
+    FAIRNESS_POLICIES,
+    DeficitRoundRobinFairness,
     FairnessPolicy,
+    LotteryFairness,
     QuotaFairness,
     RoundRobinFairness,
     WeightedFairness,
@@ -46,6 +50,7 @@ __all__ = [
     "CacheStats", "ScheduleCache",
     "Dispatcher", "AsyncDispatcher", "QueueFullError", "DrainTimeoutError",
     "FairnessPolicy", "RoundRobinFairness", "WeightedFairness",
-    "QuotaFairness", "make_fairness",
+    "DeficitRoundRobinFairness", "LotteryFairness",
+    "QuotaFairness", "FAIRNESS_POLICIES", "make_fairness",
     "DispatchMetrics", "LatencySeries", "percentile",
 ]

@@ -40,12 +40,16 @@ Stepping models (``stepping=``):
 * ``"single"`` — the legacy loop: one thread stepping all lanes in policy
   order.  Kept as the benchmark baseline and for strictly-serial setups.
 
-Quantum hand-off is **event-driven**: the dispatcher's lane-event hook
-(``submit`` appended work, a step quantum completed) and each ``release``
-re-run the arbiter's grant pump immediately, so a freed quantum reaches
-the policy's top ready pick on the event itself; the arbiter's timed wait
-survives only as the quota-refill fallback (time-based credit appears
-with no event).
+Quantum hand-off is **event-driven and O(active)**: the dispatcher's
+lane-event hook feeds ``(lane, active)`` deltas from its indexed ready
+set into the arbiter's mirror (no registry walk ever happens on the
+grant path), and each delta or ``release`` re-runs the grant pump
+immediately, handing the freed quantum to exactly one parked executor
+(per-worker parking slots — a grant is a single targeted ``notify``, not
+a ``notify_all`` herd).  One designated *ticker* per arbiter waits with
+a timeout purely as the quota-refill fallback (time-based credit appears
+with no event); every other parked worker sleeps untimed, so
+wakeups-per-grant stays ≤ 2 no matter the pool size.
 
 Invariant (the paper's): stepper threads NEVER trace or compile — they
 only replay sealed executables.  Engines must be warmed at registration
@@ -54,13 +58,14 @@ on a stepper, which ``builds_on_thread`` / ``builds_by_stepper`` expose so
 tests and operators can assert the invariant holds per stepper — pool
 workers report under their ``pool-N`` labels).
 
-Locking protocol (deadlock-free by ordering): steppers take the arbiter's
-condition before the dispatcher's fairness lock, lane locks before the
-fairness lock, and this class's condition is held only across leaf-lock
-peeks into the dispatcher (``lane_active`` / ``idle`` — registry and
-counter locks), never across an engine step or an arbiter call —
-``drain`` and ``stop`` wait only on loop-published state (the busy-lane
-set, ``_pending``).
+Locking protocol (deadlock-free by ordering): the dispatcher's ready-set
+lock is taken before the arbiter's mutex (deltas are delivered under
+it), steppers take the arbiter's mutex before the dispatcher's fairness
+and registry locks, lane locks before the fairness lock, and this
+class's condition is held only across leaf-lock peeks into the
+dispatcher (``lane_active`` / ``idle`` — registry and counter locks),
+never across an engine step or an arbiter call — ``drain`` and ``stop``
+wait only on loop-published state (the busy-lane set, ``_pending``).
 """
 
 from __future__ import annotations
@@ -68,6 +73,7 @@ from __future__ import annotations
 import os
 import threading
 import time
+from collections import deque
 from concurrent.futures import Future
 from typing import Any, Callable, Optional
 
@@ -78,46 +84,81 @@ from .metrics import DispatchMetrics
 _SINGLE = "loop"         # stepper label in "single" mode
 
 
-class _QuantumArbiter:
-    """Grants stepping quanta through the shared policy, event-driven.
+class _ParkSlot:
+    """One parked executor: a pool worker or a per-engine stepper.
 
-    Two grant shapes over one condition variable:
+    Each slot owns a private condition over the arbiter's one mutex, so a
+    grant wakes exactly the executor it is for — hand-off style — instead
+    of ``notify_all``-ing the whole fleet.  ``lane`` is the hand-off
+    mailbox (the pump deposits the granted lane before notifying);
+    ``evicted`` marks a per-engine waiter whose lane vanished (drained by
+    another thread or unregistered); ``timed_wait`` is True only while the
+    owning thread is parked with a timeout (the designated ticker)."""
+
+    __slots__ = ("cv", "lane", "since", "evicted", "timed_wait")
+
+    def __init__(self, mu: threading.Lock, since: float) -> None:
+        self.cv = threading.Condition(mu)
+        self.lane: Optional[str] = None
+        self.since = since            # executor free since (grant floor)
+        self.evicted = False
+        self.timed_wait = False
+
+
+class _QuantumArbiter:
+    """Grants stepping quanta through the shared policy, event-driven,
+    with O(active) per-event cost — never O(registered tenants).
+
+    Two grant shapes:
 
     * **per-engine** — a dedicated stepper calls :meth:`acquire` for ITS
-      lane and blocks until the policy grants it;
-    * **pool** — any idle worker calls :meth:`acquire_any` and receives the
-      policy's next ready lane (the shared ready set is the pool's work
-      queue: whichever worker is free steals the top pick).
+      lane and blocks on its own parking slot until the policy grants it;
+    * **pool** — any idle worker calls :meth:`acquire_any`; a granted lane
+      is *handed* to exactly one parked worker (single ``notify``), and a
+      worker arriving while grants are banked pops the policy-ordered
+      grant queue without re-running selection.
 
     Both call :meth:`release` after the engine step.  Grants flow through
-    ``FairnessPolicy.peek_ready`` over the lanes that currently have work,
-    so the policy's ordering and accounting survive threading;
-    ``max_concurrent`` bounds outstanding grants (``None`` — no bound
-    beyond one per lane; a lane is never granted to two workers at once).
+    ``FairnessPolicy.peek_ready`` over the **mirrored ready index**: the
+    dispatcher's lane-event hook feeds ``(lane, active)`` deltas into
+    ``_active``, so a pump touches only lanes that currently have work —
+    the contender scan no longer walks the registry, and ``_ready_since``
+    stamps are evicted on the inactive delta instead of by a per-pump
+    full-dict sweep.  ``max_concurrent`` bounds outstanding grants (a lane
+    is never granted to two workers at once, bound or no bound).
 
-    **Event-driven hand-off**: :meth:`release` (the quantum freed by a
-    finished step, post-``charge``) and :meth:`notify_ready` (the
-    dispatcher's lane-event hook: a submit appended work, a step changed a
-    lane's state) re-run the grant pump immediately, so a blocked stepper
-    or idle worker is granted the moment the policy can serve it — not at
-    the next tick.  The timed wait (``tick``, default 10 ms) is retained
-    ONLY as the quota-refill fallback: time-based policies gain credit
-    with no triggering event.  ``grants`` counts all grants,
-    ``timed_grants`` the grants the fallback tick served (vs an event),
-    and ``timed_wakeups`` every tick expiry (idle parking included), so
-    tests can prove a hand-off consumed no tick; per-grant latency (lane
-    grantable → granted) feeds
-    ``metrics.on_grant`` and, in pool mode, ``metrics.on_pool_occupancy``.
+    **Per-worker parking (the wakeup contract)**: every event wakes at
+    most the executors it grants to, plus at most one promotion notify —
+    when the parked set's head changes, the new head is woken once so it
+    re-parks as the *designated ticker*.  Only the ticker waits with a
+    timeout (``tick``, default 10 ms), which survives purely as the
+    quota-refill fallback: time-based credit appears with no triggering
+    event, and one ticker discovering it is enough — the rest of the pool
+    sleeps untimed.  Wakeups-per-grant is therefore ≤ 2 by construction
+    (one hand-off + at most one promotion), vs ≈ pool_size under the old
+    ``notify_all`` scheme.  ``grants`` counts all grants, ``timed_grants``
+    grants the fallback tick served (best-effort attribution: a racing
+    event grant landing between a tick expiry and that thread's own pump
+    is counted as timed), ``timed_wakeups`` every tick expiry (idle
+    parking included), and ``notify_wakeups`` every targeted notify
+    (hand-offs, promotions, evictions).  Per-grant latency feeds
+    ``metrics.on_grant``; per-grant CPU cost (selection + bookkeeping
+    time over grants issued) feeds ``metrics.on_grant_cost``; ready-set
+    size samples feed ``metrics.on_ready_size``.
 
     When the policy's top pick is an active lane that is not ready (its
     stepper mid-bookkeeping, or the lane already executing), the arbiter
     holds other grants rather than handing the quantum to a
     less-deserving lane — that hold is what keeps e.g. stride ratios
-    exact at ``max_concurrent=1``.
+    exact at ``max_concurrent=1``.  Multi-grant policies (``drr``,
+    ``round_robin``, ``quota``) return several picks per pump; the pool
+    hands one to each parked worker and banks the rest in the grant
+    queue.
 
-    Lock order: the arbiter condition is taken before the dispatcher's
+    Lock order: the arbiter mutex is taken before the dispatcher's
     registry and fairness locks, never the reverse; it is never held
-    around an engine step.
+    around an engine step.  The dispatcher's ready-set lock is above the
+    arbiter mutex (deltas arrive under it).
     """
 
     _FALLBACK_WAIT = 0.01     # quota refills are time-driven; events cover the rest
@@ -142,135 +183,217 @@ class _QuantumArbiter:
         self._pool_size = pool_size          # 0: per-engine mode
         self._tick = self._FALLBACK_WAIT if tick is None else tick
         self._clock = clock
-        self._cv = threading.Condition()
-        self._waiting: dict[str, float] = {}   # blocked stepper -> since when
-        self._granted: set[str] = set()      # grants not yet picked up
+        self._mu = threading.Lock()          # one mutex; per-slot conditions
+        self._active: set[str] = set()       # delta-fed ready-index mirror
+        self._waiting: dict[str, _ParkSlot] = {}   # per-engine: lane -> slot
+        self._parked: dict[int, _ParkSlot] = {}    # pool: id(slot) -> slot, FIFO
+        self._granted_q: deque = deque()     # banked policy-ordered grants
         self._inflight: set[str] = set()     # grants being executed
         self._ready_since: dict[str, float] = {}   # lane -> grantable since
+        self._rank: dict[str, int] = {}      # registration-order cache
+        self._rank_epoch = -1                # dispatcher epoch it was cut at
         self._last_event = 0.0               # last grant-enabling event
         self._closed = False
         self.grants = 0                      # quanta handed out
         self.timed_wakeups = 0               # fallback-tick expiries (incl. idle)
-        # grants whose enabling wakeup was a tick expiry, not an event —
-        # the fallback path actually serving (quota refills land here).
-        # timed_wakeups alone cannot tell "fallback served a grant" from
-        # "the pool sat idle"; this can.  Per-engine attribution is
-        # best-effort: a racing event-pump grant landing between a
-        # stepper's expiry and its own pump is counted as timed.
-        self.timed_grants = 0
+        self.timed_grants = 0                # grants the fallback tick served
+        self.notify_wakeups = 0              # targeted notifies (hand-off/promote)
+        self.pump_cpu_s = 0.0                # CPU seconds spent selecting/granting
+
+    # -- executor-facing ---------------------------------------------------
 
     def acquire(self, lane: str) -> bool:
         """Block until the policy grants ``lane`` a quantum (per-engine
-        mode); False once the arbiter is closed (shutdown)."""
-        with self._cv:
-            self._waiting[lane] = self._clock()
+        mode); False once the arbiter is closed, the lane is no longer
+        registered, or the lane was evicted (drained by another thread or
+        unregistered) — the stepper should re-check its lane's state and
+        try again."""
+        with self._mu:
+            # refuse a lane that is already unregistered: a stepper racing
+            # unregister_model past the eviction delta must not park a
+            # phantom waiter the policies would trip over forever
+            if self._closed or not self._disp.has_model(lane):
+                return False
+            slot = _ParkSlot(self._mu, self._clock())
+            self._waiting[lane] = slot
             self._pump_locked()
-            while lane not in self._granted:
-                if self._closed:
-                    self._waiting.pop(lane, None)
+            timed = False
+            while slot.lane is None:
+                if self._closed or slot.evicted:
+                    if self._waiting.get(lane) is slot:
+                        del self._waiting[lane]
+                        self._promote_ticker_locked()
                     return False
-                timed = not self._cv.wait(self._tick)
-                if timed:
+                slot.timed_wait = self._ticker_locked() is slot
+                expired = not slot.cv.wait(
+                    self._tick if slot.timed_wait else None
+                )
+                slot.timed_wait = False
+                timed = expired        # attribute the grant to ITS wakeup
+                if expired:
                     self.timed_wakeups += 1
-                self._pump_locked()
-                if timed and lane in self._granted:
-                    self.timed_grants += 1
-            self._granted.discard(lane)
+                    self._pump_locked()
+            if timed:
+                self.timed_grants += 1
             return not self._closed
 
     def acquire_any(self) -> Optional[str]:
         """Block until the policy grants SOME ready lane (pool mode);
-        returns the lane to step, or ``None`` once the arbiter is closed."""
-        with self._cv:
-            # this worker is free from here on: grant latency for the lane
-            # it eventually receives is clocked from max(lane ready, worker
-            # free) — a lane waiting behind BUSY workers is backlog, not
-            # arbiter hand-off delay
-            idle_since = self._clock()
+        returns the lane to step, or ``None`` once the arbiter is closed.
+        A banked grant is popped without re-running selection; otherwise
+        the worker parks on its own slot and is woken only when a grant is
+        handed specifically to it (or, for the one designated ticker, when
+        the quota-refill fallback tick expires)."""
+        with self._mu:
+            slot = _ParkSlot(self._mu, self._clock())
             timed = False
-            while not self._closed:
-                lane = self._pick_locked(idle_since)
-                if lane is not None:
-                    if timed:
-                        self.timed_grants += 1
-                    return lane
-                timed = not self._cv.wait(self._tick)
-                if timed:
-                    self.timed_wakeups += 1
-            return None
+            try:
+                while not self._closed:
+                    if slot.lane is not None:      # handed off while parked
+                        lane, slot.lane = slot.lane, None
+                        if timed:
+                            self.timed_grants += 1
+                        return lane
+                    lane = self._pick_locked(slot.since)
+                    if lane is not None:
+                        if timed:
+                            self.timed_grants += 1
+                        return lane
+                    # park (keeping original FIFO position across spurious
+                    # and promotion wakes — a promoted worker re-times its
+                    # wait without unparking, so one promotion never
+                    # cascades into waking the next worker, and the next)
+                    if id(slot) not in self._parked:
+                        self._parked[id(slot)] = slot
+                    slot.timed_wait = self._ticker_locked() is slot
+                    expired = not slot.cv.wait(
+                        self._tick if slot.timed_wait else None
+                    )
+                    slot.timed_wait = False
+                    timed = expired    # attribute the grant to ITS wakeup
+                    if expired:
+                        self.timed_wakeups += 1
+                return None
+            finally:
+                # leaving for any reason (grant, close): free the parking
+                # spot and hand the ticker role to the next in line
+                if self._parked.get(id(slot)) is slot:
+                    del self._parked[id(slot)]
+                    self._promote_ticker_locked()
 
     def release(self, lane: str) -> None:
         """Return ``lane``'s grant (its engine step finished, fairness
-        already charged): the freed quantum is re-granted immediately."""
-        with self._cv:
+        already charged): the freed quantum is re-granted immediately,
+        directly to a parked executor when one is due."""
+        with self._mu:
             self._inflight.discard(lane)
-            self._last_event = self._clock()
+            now = self._clock()
+            self._last_event = now
+            if lane in self._active:
+                self._ready_since.setdefault(lane, now)
             self._pump_locked()
-            self._cv.notify_all()
 
-    def notify_ready(self, lane: str) -> None:
-        """Dispatcher lane-event hook: ``lane``'s work state changed
-        (submit appended a request, or a step quantum completed).  Stamps
-        the event and wakes blocked acquirers, which re-run the grant pump
-        themselves — the hand-off stays on the event, not the fallback
-        tick, while the submitter pays O(1) under the arbiter condition
-        instead of hosting a full contender scan + policy select on its
-        critical path (``release`` keeps pumping in-line: it runs on a
-        stepper, post-step, where the scan is off any caller's path)."""
-        with self._cv:
+    def notify_ready(self, lane: str, active: bool = True) -> None:
+        """Dispatcher lane-event delta: fold ``lane``'s new activity into
+        the mirror and re-run the grant pump.
+
+        ``active=True`` (a submit appended work, or a step left work
+        behind) admits the lane to the mirror and stamps its
+        grantable-since clock; ``active=False`` (the lane drained or was
+        unregistered) evicts the lane from the mirror, its ready stamp
+        (the event-driven eviction that replaces the old per-pump sweep),
+        any banked grant, and — per-engine — its parked stepper.  Runs
+        under the dispatcher's ready-set lock, so deltas apply in truth
+        order; cost is O(active), never O(tenants)."""
+        with self._mu:
             if self._closed:
                 return
-            self._last_event = self._clock()
-            self._cv.notify_all()
+            now = self._clock()
+            self._last_event = now
+            if active:
+                self._active.add(lane)
+                if lane not in self._inflight:
+                    self._ready_since.setdefault(lane, now)
+            else:
+                self._active.discard(lane)
+                self._ready_since.pop(lane, None)
+                if lane in self._granted_q:
+                    self._granted_q = deque(
+                        n for n in self._granted_q if n != lane
+                    )
+                slot = self._waiting.pop(lane, None)
+                if slot is not None:
+                    slot.evicted = True
+                    slot.cv.notify()
+                    self.notify_wakeups += 1
+            self._pump_locked()
 
     def close(self) -> None:
         """Wake and refuse every current and future acquire."""
-        with self._cv:
+        with self._mu:
             self._closed = True
-            self._cv.notify_all()
+            self._granted_q.clear()
+            for slot in list(self._waiting.values()):
+                slot.evicted = True
+                slot.cv.notify()
+            self._waiting.clear()
+            for slot in list(self._parked.values()):
+                slot.cv.notify()
+            self._parked.clear()
 
     def stats(self) -> dict:
-        """Grant counters for snapshots: grants issued, grants served by
-        the fallback tick (vs an event), total tick expiries (idle parking
-        included), and the current in-flight quantum count."""
-        with self._cv:
+        """Grant-path counters for snapshots: grants issued, grants served
+        by the fallback tick (vs an event), tick expiries (idle parking
+        included), targeted notifies, wakeups-per-grant, in-flight and
+        parked executor counts, mirrored ready-set size, banked grants,
+        and cumulative selection CPU seconds."""
+        with self._mu:
+            wakeups = self.notify_wakeups + self.timed_wakeups
             return {
                 "grants": self.grants,
                 "timed_grants": self.timed_grants,
                 "timed_wakeups": self.timed_wakeups,
+                "notify_wakeups": self.notify_wakeups,
+                "wakeups_per_grant": (
+                    wakeups / self.grants if self.grants else 0.0
+                ),
                 "inflight": len(self._inflight),
+                "parked": len(self._parked) + len(self._waiting),
+                "ready": len(self._active),
+                "queued_grants": len(self._granted_q),
+                "pump_cpu_s": self.pump_cpu_s,
             }
+
+    # -- grant machinery (all under _mu) -----------------------------------
 
     def _capacity_left(self) -> bool:
         return self._max is None or len(self._inflight) < self._max
+
+    def _order_locked(self, names) -> list[str]:
+        # registration order from a cached rank map, validated by the
+        # dispatcher's O(1) registration epoch — a reused tenant name gets
+        # a NEW rank on re-register, and the full-snapshot refresh also
+        # drops retired names, so the cache can neither serve stale
+        # ordering nor grow with dead tenants.  Sorting the small
+        # contender set is O(a log a) in the ACTIVE count, not the
+        # registered count.
+        epoch = self._disp.registration_epoch()
+        rank = self._rank
+        if epoch != self._rank_epoch:
+            rank = self._rank = self._disp.lane_ranks()
+            self._rank_epoch = epoch
+        return sorted(names, key=lambda n: rank.get(n, 1 << 30))
 
     def _contenders_locked(self) -> list[str]:
         # the policy must see the TRUE active set — every lane with work,
         # whether its stepper is waiting here, executing a granted
         # quantum, or mid-bookkeeping.  Feeding it subsets corrupts
         # stateful policies (stride's rejoin-lift would keep erasing a
-        # lane's pass progress); feeding it everything keeps the policy's
-        # ordering exactly what the synchronous loop saw.  Bulk
-        # active_lanes() keeps this O(tenants) with two registry passes,
-        # not one lock acquisition per lane.
-        active = set(self._disp.active_lanes())
-        return [
-            name for name in self._disp.models
-            if name in self._waiting
-            or name in self._inflight
-            or name in active
-        ]
-
-    def _stamp_ready_locked(self, ready: list, now: float) -> None:
-        # grant latency runs from the EARLIEST moment a lane was grantable;
-        # stale stamps (lane drained or went in-flight) are dropped so a
-        # re-activation starts a fresh clock
-        ready_set = set(ready)
-        for name in list(self._ready_since):
-            if name not in ready_set:
-                del self._ready_since[name]
-        for name in ready:
-            self._ready_since.setdefault(name, now)
+        # lane's pass progress).  The mirror makes this O(active): no
+        # registry walk, no per-lane engine peeks.
+        return self._order_locked(
+            self._active | self._inflight | set(self._waiting)
+        )
 
     def _grant_locked(self, name: str, now: float, floor: float) -> None:
         # grant latency clocks the ARBITER's reaction: from the latest of
@@ -279,9 +402,7 @@ class _QuantumArbiter:
         # grant-enabling event processed — to the grant.  Policy rationing
         # (stride holding for its top pick) and backlog behind busy
         # workers are thereby excluded: both are scheduling decisions, not
-        # hand-off delay.  The old 10 ms tick showed up exactly here;
-        # event-driven hand-off drives it to microseconds, with the quota
-        # fallback path the only tick-bounded remainder.
+        # hand-off delay.
         self._inflight.add(name)
         self.grants += 1
         since = max(self._ready_since.pop(name, now),
@@ -293,55 +414,155 @@ class _QuantumArbiter:
                     len(self._inflight), self._pool_size
                 )
 
-    def _pick_locked(self, idle_since: float) -> Optional[str]:
-        """One pool grant: the policy's top ready pick, or None to hold."""
-        if self._closed or not self._capacity_left():
-            return None
-        contenders = self._contenders_locked()
-        ready = [n for n in contenders if n not in self._inflight]
-        if not ready:
-            return None
-        now = self._clock()
-        self._stamp_ready_locked(ready, now)
-        for name in self._disp.fairness_peek(contenders, ready):
-            if name not in self._inflight and self._capacity_left():
-                self._grant_locked(name, now, idle_since)
+    def _pop_banked_locked(self) -> Optional[str]:
+        while self._granted_q:
+            name = self._granted_q.popleft()
+            if name in self._active and name not in self._inflight:
                 return name
         return None
 
-    def _pump_locked(self) -> None:
-        """Hand out as many per-engine grants as policy + capacity allow."""
-        while self._waiting and self._capacity_left() and not self._closed:
-            contenders = self._contenders_locked()
-            if not contenders:
-                return
-            ready = [
-                n for n in contenders
-                if n in self._waiting and n not in self._inflight
-            ]
+    def _pick_locked(self, floor: float) -> Optional[str]:
+        """One pool grant for the calling worker: pop a banked grant, or
+        run one policy selection (banking the surplus picks)."""
+        if self._closed or not self._capacity_left():
+            return None
+        t0 = time.perf_counter()
+        name = self._pop_banked_locked()
+        if name is None:
+            ready = self._ready_pool_locked()
             if not ready:
-                return
-            now = self._clock()
-            self._stamp_ready_locked(ready, now)
-            granted_any = False
-            for name in self._disp.fairness_peek(contenders, ready):
-                if (
-                    name in self._waiting
-                    and name not in self._inflight
-                    and self._capacity_left()
-                ):
-                    waiting_since = self._waiting.pop(name)
-                    self._granted.add(name)
-                    self._grant_locked(name, now, waiting_since)
-                    granted_any = True
-            if granted_any:
-                self._cv.notify_all()
+                self.pump_cpu_s += time.perf_counter() - t0
+                return None
+            picks = [
+                n for n in self._disp.fairness_peek(
+                    self._contenders_locked(), ready
+                )
+                if n not in self._inflight
+            ]
+            if not picks:
+                self.pump_cpu_s += time.perf_counter() - t0
+                return None
+            name = picks[0]
+            self._granted_q = deque(picks[1:])
+        self._grant_locked(name, self._clock(), floor)
+        dt = time.perf_counter() - t0
+        self.pump_cpu_s += dt
+        if self._metrics is not None:
+            self._metrics.on_grant_cost(dt)
+            self._metrics.on_ready_size(len(self._active))
+        return name
+
+    def _ready_pool_locked(self) -> list[str]:
+        ready = [n for n in self._active if n not in self._inflight]
+        if not ready:
+            return []
+        now = self._clock()
+        for n in ready:
+            self._ready_since.setdefault(n, now)
+        return self._order_locked(ready)
+
+    def _pump_locked(self) -> None:
+        """Hand out as many grants as policy + capacity allow, each to
+        exactly one executor (single targeted notify per grant)."""
+        if self._closed:
+            return
+        t0 = time.perf_counter()
+        if self._pool_size:
+            granted = self._pump_pool_locked()
+        else:
+            granted = self._pump_engines_locked()
+        dt = time.perf_counter() - t0
+        self.pump_cpu_s += dt
+        if granted and self._metrics is not None:
+            self._metrics.on_grant_cost(dt / granted)
+            self._metrics.on_ready_size(len(self._active))
+        self._promote_ticker_locked()
+
+    def _pump_pool_locked(self) -> int:
+        # one selection feeds every parked worker; surplus picks are
+        # banked (policy order preserved) so arriving workers pop in O(1)
+        self._granted_q.clear()
+        if not self._capacity_left():
+            return 0
+        ready = self._ready_pool_locked()
+        if not ready:
+            return 0
+        now = self._clock()
+        granted = 0
+        for name in self._disp.fairness_peek(self._contenders_locked(), ready):
+            if name in self._inflight:
+                continue
+            if not self._capacity_left():
+                break
+            if self._parked:
+                # LIFO hand-off: the most-recently-parked worker gets the
+                # lane, so the FIFO head — the designated ticker — keeps
+                # its timed wait and no promotion notify is needed unless
+                # the ticker itself is the last worker standing
+                slot = next(reversed(self._parked.values()))
+                del self._parked[id(slot)]
+                self._grant_locked(name, now, slot.since)
+                slot.lane = name
+                slot.cv.notify()
+                self.notify_wakeups += 1
+                granted += 1
             else:
+                self._granted_q.append(name)
+        return granted
+
+    def _pump_engines_locked(self) -> int:
+        granted = 0
+        while self._waiting and self._capacity_left():
+            ready = self._order_locked(
+                [n for n in self._waiting if n not in self._inflight]
+            )
+            if not ready:
+                break
+            now = self._clock()
+            progress = 0
+            for name in self._disp.fairness_peek(
+                self._contenders_locked(), ready
+            ):
+                slot = self._waiting.get(name)
+                if (
+                    slot is None
+                    or name in self._inflight
+                    or not self._capacity_left()
+                ):
+                    continue
+                del self._waiting[name]
+                self._grant_locked(name, now, slot.since)
+                slot.lane = name
+                slot.cv.notify()
+                self.notify_wakeups += 1
+                progress += 1
+            granted += progress
+            if not progress:
                 # the policy's picks are all executing or mid-bookkeeping:
                 # hold the quantum for them (handing it to a less-deserving
                 # waiter would break the policy's ordering); release/
                 # notify_ready events — or the fallback tick — re-pump
-                return
+                break
+        return granted
+
+    def _ticker_locked(self) -> Optional[_ParkSlot]:
+        # the ONE executor that waits with a timeout (quota fallback);
+        # everyone else sleeps untimed.  Head of the parked/waiting FIFO.
+        if self._parked:
+            return next(iter(self._parked.values()))
+        if self._waiting:
+            return next(iter(self._waiting.values()))
+        return None
+
+    def _promote_ticker_locked(self) -> None:
+        # when the head changes, the new head may be in an untimed wait:
+        # wake it once so it re-parks as the ticker.  This is the only
+        # wakeup a grant causes beyond its own hand-off notify — hence
+        # wakeups-per-grant ≤ 2.
+        head = self._ticker_locked()
+        if head is not None and not head.timed_wait and head.lane is None:
+            head.cv.notify()
+            self.notify_wakeups += 1
 
 
 class AsyncDispatcher:
@@ -392,7 +613,10 @@ class AsyncDispatcher:
             pool_size if pool_size is not None
             else min(8, os.cpu_count() or 1)
         )
-        self._cv = threading.Condition()
+        # plain (non-reentrant) lock: nothing under _cv re-enters it, and
+        # the submitter/worker hot paths cross it several times per
+        # quantum — an RLock's ownership bookkeeping is measurable there
+        self._cv = threading.Condition(threading.Lock())
         self._threads: dict[str, threading.Thread] = {}
         self._arbiter: Optional[_QuantumArbiter] = None
         self._running_flag = False
@@ -425,6 +649,32 @@ class AsyncDispatcher:
             ):
                 self._spawn_locked(name, self._run_lane)
         return out
+
+    def unregister_model(self, name: str) -> Any:
+        """Drain and retire tenant ``name`` while serving stays live.
+
+        Delegates to :meth:`Dispatcher.unregister_model` (which drains the
+        lane, then removes it from the registry, ready index, fairness
+        state, and metrics), then retires the async-side residue: the
+        lane's ``_busy`` entry, and — in per-engine mode — its stepper
+        thread, which exits on its own and is joined here.  Pool workers
+        need nothing: an unregistered lane simply stops appearing in the
+        arbiter's mirror.  Returns the retired engine.
+        """
+        engine = self.dispatcher.unregister_model(name)
+        stepper = None
+        with self._cv:
+            self._busy.discard(name)
+            if self.stepping == "per-engine":
+                stepper = self._threads.pop(name, None)
+            self._cv.notify_all()      # wake the stepper / drain waiters
+        if stepper is not None:
+            stepper.join(timeout=10.0)
+            if stepper.is_alive():     # pragma: no cover - diagnostics
+                raise DrainTimeoutError(
+                    f"stepper for {name!r} failed to exit after unregister"
+                )
+        return engine
 
     @property
     def models(self) -> tuple[str, ...]:
@@ -770,7 +1020,12 @@ class AsyncDispatcher:
                     self._busy.add(_SINGLE)
             elif self.dispatcher.lane_active(model):
                 self._busy.add(model)
-            self._cv.notify_all()
+            if self.stepping != "pool":
+                # single/per-engine: wake the idle-parked stepper.  Pool
+                # workers are woken by the dispatcher's ready-delta hook
+                # through the arbiter — notifying _cv here would only add
+                # submitter-side contention for nobody.
+                self._cv.notify_all()
 
     def _caches(self) -> list:
         # only queried off the hot loop (builds_on_thread / snapshot), so a
@@ -811,10 +1066,19 @@ class AsyncDispatcher:
 
     def _run_lane(self, name: str) -> None:
         """Per-engine stepper: pull quanta for one lane through the
-        arbiter; never touches any other lane's engine."""
+        arbiter; never touches any other lane's engine.  Exits on shutdown
+        or once its lane is unregistered."""
         arbiter = self._arbiter
         while True:
             if self._should_exit():
+                return
+            if not self.dispatcher.has_model(name):
+                # lane unregistered: retire, clearing any busy mark this
+                # loop added after unregister's own discard (a stale entry
+                # would wedge drain forever)
+                with self._cv:
+                    self._busy.discard(name)
+                    self._cv.notify_all()
                 return
             if not self.dispatcher.lane_active(name):
                 with self._cv:
@@ -880,10 +1144,14 @@ class AsyncDispatcher:
             with self._cv:
                 # only clear busy if the lane is REALLY idle under _cv: a
                 # submit appends before its kick takes _cv, so either we
-                # see the work here or the kick re-adds busy after us
+                # see the work here or the kick re-adds busy after us.
+                # Notify only on that drain transition: it is the signal
+                # drain/stop wait for, and every other quantum boundary
+                # has nothing to tell them (drain also re-polls on
+                # idle_wait, so a skipped notify costs at most one poll)
                 if not self.dispatcher.lane_active(lane):
                     self._busy.discard(lane)
-                self._cv.notify_all()
+                    self._cv.notify_all()
 
     def _run_single(self, label: str) -> None:
         """Legacy single-thread loop: steps all lanes in policy order."""

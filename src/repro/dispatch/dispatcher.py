@@ -38,10 +38,18 @@ Thread-safety / locking contract (fine-grained; see DESIGN.md §locking):
   are not internally locked).
 * ``_count_mu`` — guards the pending-count and rid allocator; O(1), which
   is what makes ``submit``-side backpressure cheap.
+* ``_ready_mu`` — guards the **indexed ready set** (``_active_set``): the
+  incrementally maintained set of lanes with queued or in-flight work.
+  Lanes enter on ``submit`` and leave when a ``step_lane`` quantum drains
+  them; the lane-event hook fires *under this lock* with ``(name, active)``
+  deltas, so the async arbiter's mirror always applies transitions in
+  truth order — no full-registry walk ever happens on the grant path.
 
 Lock order: ``step_mu → queue_mu`` and ``step_mu → _fair_mu`` are the only
-nestings; ``_reg_mu`` and ``_count_mu`` never nest with anything.
-Completion callbacks run OUTSIDE all dispatcher locks.
+dispatcher-internal nestings; ``_reg_mu`` and ``_count_mu`` never nest
+with anything.  ``_ready_mu`` is taken before the arbiter's lock (the
+hook runs under it) and never after any dispatcher lock that the hook's
+consumers take.  Completion callbacks run OUTSIDE all dispatcher locks.
 """
 
 from __future__ import annotations
@@ -69,9 +77,11 @@ class _Lane:
     """One tenant: its engine, FIFO, and the two locks that protect them.
 
     ``queue_mu`` (brief) guards the FIFO; ``step_mu`` (held across one
-    engine step) serializes stepping.  Internal to the dispatcher."""
+    engine step) serializes stepping.  ``retired`` (set under ``queue_mu``
+    by :meth:`Dispatcher.unregister_model`) refuses new submissions while
+    the lane drains out.  Internal to the dispatcher."""
 
-    __slots__ = ("name", "engine", "queue", "queue_mu", "step_mu")
+    __slots__ = ("name", "engine", "queue", "queue_mu", "step_mu", "retired")
 
     def __init__(self, name: str, engine: Any) -> None:
         self.name = name
@@ -79,6 +89,7 @@ class _Lane:
         self.queue: deque = deque()
         self.queue_mu = threading.Lock()
         self.step_mu = threading.Lock()
+        self.retired = False
 
 
 class Dispatcher:
@@ -110,17 +121,28 @@ class Dispatcher:
         self.fairness = make_fairness(fairness)
         self._lanes: dict[str, _Lane] = {}
         self._order: list[str] = []
+        self._rank: dict[str, int] = {}      # name -> registration index
+        self._next_rank = 0
+        self._reg_epoch = 0                  # bumped on (un)registration
         self._reg_mu = threading.Lock()      # lane table + registration
         self._fair_mu = threading.Lock()     # all FairnessPolicy calls
         self._count_mu = threading.Lock()    # pending count + rid allocator
         self._pending_count = 0
         self._next_rid = 0
-        # lane-readiness notification (event-driven arbiter hand-off): set
-        # by the async layer, invoked OUTSIDE all dispatcher locks whenever
-        # a lane's work state changes (submit added work, a step finished).
-        # Plain attribute: assignment is atomic, and a stale read only costs
-        # one missed notification, which the arbiter's fallback wait covers.
-        self._lane_event_hook: Optional[Callable[[str], None]] = None
+        # indexed ready set: lanes with queued or in-flight work, maintained
+        # incrementally on submit / step-complete / unregister transitions.
+        # This is what keeps the async grant path O(active), not O(tenants):
+        # the arbiter mirrors it from (name, active) deltas instead of
+        # walking every registered lane per pump.
+        self._ready_mu = threading.Lock()
+        self._active_set: set[str] = set()
+        # lane-readiness delta feed (event-driven arbiter hand-off): set by
+        # the async layer, invoked UNDER _ready_mu with (name, active) so
+        # deltas reach the consumer in truth order — a submit's "active"
+        # and a drain's "inactive" can never arrive inverted.  The hook
+        # must be fast, must not raise, and must not call back into any
+        # dispatcher method that takes _ready_mu.
+        self._lane_event_hook: Optional[Callable[[str, bool], None]] = None
         # finished Requests, completion order; bounded — a long-running
         # service must not retain every request it ever served.  deque
         # appends are atomic, so no extra lock.
@@ -142,9 +164,73 @@ class Dispatcher:
                 raise ValueError(f"model {name!r} already registered")
             self._lanes[name] = lane
             self._order.append(name)
+            self._rank[name] = self._next_rank
+            self._next_rank += 1
+            self._reg_epoch += 1
         with self._fair_mu:
             self.fairness.register(name, weight=weight)
+        self.metrics.track_engine(name)   # lift any unregister tombstone
         return engine
+
+    def unregister_model(self, name: str, *, max_steps: int = 100_000) -> Any:
+        """Retire tenant ``name``: drain its remaining work, then remove it
+        from the registry, the ready index, the fairness policy, and the
+        per-engine metrics — a dead tenant must stop costing every later
+        policy walk and snapshot.  Returns the retired engine.
+
+        The lane refuses new submissions the moment this is called (a
+        racing ``submit`` raises ``KeyError``); queued and in-flight
+        requests are served to completion on the **calling** thread
+        (concurrent steppers serialize on the lane's step lock, so this is
+        safe while an ``AsyncDispatcher`` is live — whoever steps last
+        drains it).  Raises :class:`DrainTimeoutError` if ``max_steps``
+        quanta cannot drain the lane, leaving it retired but registered so
+        the failure is inspectable.  If the engine exposes a ``retire()``
+        hook (``ServingEngine`` does), it is invoked last.
+        """
+        lane = self._lane(name)
+        with lane.queue_mu:
+            lane.retired = True
+        for _ in range(max_steps):
+            if not (lane.queue or not lane.engine.idle):
+                break
+            self.step_lane(name)
+        else:
+            raise DrainTimeoutError(
+                f"unregister exhausted {max_steps} steps draining {name!r}"
+            )
+        # retire from the ready index (delta: the arbiter drops the lane
+        # from its mirror, ready stamps, and queued grants) BEFORE the
+        # registry removal, so no new grant can form for a vanishing lane
+        with self._ready_mu:
+            self._active_set.discard(name)
+            hook = self._lane_event_hook
+            if hook is not None:
+                hook(name, False)
+        with self._fair_mu:
+            self.fairness.unregister(name)
+        with self._reg_mu:
+            self._lanes.pop(name, None)
+            if name in self._order:
+                self._order.remove(name)
+            self._rank.pop(name, None)
+            self._reg_epoch += 1
+        # second eviction delta, AFTER the registry removal: a per-engine
+        # stepper that read "lane active" before the first delta may have
+        # parked a waiter in the window between the two — this delta
+        # evicts it, and any later park attempt is refused by the
+        # registry check at acquire time, so no phantom waiter can
+        # outlive the tenant
+        with self._ready_mu:
+            self._active_set.discard(name)
+            hook = self._lane_event_hook
+            if hook is not None:
+                hook(name, False)
+        self.metrics.drop_engine(name)
+        retire = getattr(lane.engine, "retire", None)
+        if retire is not None:
+            retire()
+        return lane.engine
 
     @property
     def models(self) -> tuple[str, ...]:
@@ -156,12 +242,23 @@ class Dispatcher:
         """The engine serving ``name`` (KeyError if unregistered)."""
         return self._lane(name).engine
 
+    def has_model(self, name: str) -> bool:
+        """Whether ``name`` is currently registered — O(1), one dict probe
+        under the registry lock (steppers poll this to learn their lane
+        was unregistered)."""
+        with self._reg_mu:
+            return name in self._lanes
+
     def _lane(self, name: str) -> _Lane:
         with self._reg_mu:
             try:
                 return self._lanes[name]
             except KeyError:
                 raise KeyError(f"unknown model {name!r}") from None
+
+    def _lane_or_none(self, name: str) -> Optional[_Lane]:
+        with self._reg_mu:
+            return self._lanes.get(name)
 
     def _lanes_snapshot(self) -> list[_Lane]:
         with self._reg_mu:
@@ -226,9 +323,7 @@ class Dispatcher:
         with self._count_mu:
             req.rid = self._next_rid
             self._next_rid += 1
-        with lane.queue_mu:
-            lane.queue.append(req)
-        self._lane_event(model)
+        self._enqueue(lane, req)
         return req
 
     def submit_request(self, model: str, req: Any) -> Any:
@@ -237,31 +332,79 @@ class Dispatcher:
         self._validate(lane, req)
         req.model = model
         self._admit(req)
-        with lane.queue_mu:
-            lane.queue.append(req)
-        self._lane_event(model)
+        self._enqueue(lane, req)
         return req
 
+    def _enqueue(self, lane: _Lane, req: Any) -> None:
+        """Append to the lane FIFO (re-checking retirement under the queue
+        lock — an unregister racing this submit must not strand a request
+        in a lane nobody will ever drain) and mark the lane ready."""
+        with lane.queue_mu:
+            if lane.retired:
+                retired = True
+            else:
+                retired = False
+                lane.queue.append(req)
+        if retired:
+            # roll back the admission charge before surfacing the error
+            req._dispatcher_pending = False
+            with self._count_mu:
+                self._pending_count -= 1
+            raise KeyError(f"model {lane.name!r} is being unregistered")
+        self._touch_ready(lane)
+
     def set_lane_event_hook(
-        self, hook: Optional[Callable[[str], None]]
+        self, hook: Optional[Callable[[str, bool], None]]
     ) -> None:
-        """Install (or clear, with ``None``) the lane-readiness hook.
+        """Install (or clear, with ``None``) the lane-readiness delta hook.
 
-        The hook is called with a lane name, outside every dispatcher lock,
-        right after that lane's work state changes: a ``submit`` appended a
-        request, or a :meth:`step_lane` quantum finished (the lane may have
-        drained, or may still hold work).  The async layer points this at
-        its quantum arbiter so a freed or newly-fundable quantum is granted
-        on the event itself instead of on the arbiter's timed fallback
-        tick.  Hooks must be fast and must not raise — they run on
-        submitter and stepper threads.
+        The hook is called as ``hook(name, active)`` under the ready-set
+        lock whenever a lane's membership in the indexed ready set is
+        (re)confirmed or revoked: a ``submit`` appended a request
+        (``active=True``), a :meth:`step_lane` quantum finished (``True``
+        if work remains, ``False`` if the lane drained), or
+        :meth:`unregister_model` retired the lane (``False``).  On
+        install, the current ready set is replayed as ``active=True``
+        deltas so a consumer attached mid-flight starts from a correct
+        mirror.  The async layer points this at its quantum arbiter, which
+        maintains an O(active) mirror and grants freed quanta on the event
+        itself instead of a timed tick.  Hooks must be fast, must not
+        raise, and must not call back into dispatcher methods that take
+        the ready-set lock.
         """
-        self._lane_event_hook = hook
+        with self._ready_mu:
+            self._lane_event_hook = hook
+            if hook is not None:
+                for name in self._active_set:
+                    hook(name, True)
 
-    def _lane_event(self, name: str) -> None:
-        hook = self._lane_event_hook
-        if hook is not None:
-            hook(name)
+    def _touch_ready(self, lane: _Lane) -> None:
+        """Recompute ``lane``'s activity, fold the transition into the
+        indexed ready set, and feed the delta hook — all under
+        ``_ready_mu`` so consumers see transitions in truth order.  Called
+        after every mutation of a lane's work state; the recompute happens
+        under the lock, so the last caller in any race observes current
+        truth and the index converges.
+
+        The hook fires on **transitions only**: a submit landing on an
+        already-active lane (or a step leaving work behind) changes no
+        lane's grantability — the arbiter already mirrors the lane as
+        active, and its next grant flows from ``release``.  Skipping the
+        no-op delta keeps a busy submitter entirely off the arbiter's
+        mutex, which profiling showed was the grant path's largest
+        remaining contention cost."""
+        with self._ready_mu:
+            active = bool(lane.queue) or not lane.engine.idle
+            was = lane.name in self._active_set
+            if active and not was:
+                self._active_set.add(lane.name)
+            elif not active and was:
+                self._active_set.discard(lane.name)
+            else:
+                return
+            hook = self._lane_event_hook
+            if hook is not None:
+                hook(lane.name, active)
 
     def _validate(self, lane: _Lane, req: Any) -> None:
         """An unservable request (e.g. prompt beyond the engine's bucket
@@ -288,32 +431,69 @@ class Dispatcher:
 
         Lock-free peek (deque length reads are atomic): callers use it to
         decide *whether to try* a step, and a stale answer only costs one
-        empty quantum or one short sleep."""
-        lane = self._lane(name)
+        empty quantum or one short sleep.  Unknown (or just-unregistered)
+        lanes report ``False`` — a stepper racing an unregister must see
+        "nothing to do", not an exception."""
+        lane = self._lane_or_none(name)
+        if lane is None:
+            return False
         return bool(lane.queue) or not lane.engine.idle
 
     def _active(self) -> list[str]:
+        # sync-path truth walk (one pass over every lane): kept for
+        # step()/run_until_drained so work submitted to an engine directly,
+        # outside this dispatcher, is still served.  The async grant path
+        # never calls this — it mirrors the O(active) indexed set instead.
         return [
             lane.name for lane in self._lanes_snapshot()
             if lane.queue or not lane.engine.idle
         ]
 
     def active_lanes(self) -> list[str]:
-        """Names of lanes with queued or in-flight work right now, in
-        registration order — one registry pass plus the same lock-free
-        per-lane peek as :meth:`lane_active`.  The bulk form the quantum
-        arbiter scans per grant pump: with hundreds of tenants, one
-        ``_reg_mu`` acquisition instead of one per lane."""
-        return self._active()
+        """The indexed ready set: lanes with dispatcher-submitted queued or
+        in-flight work, in registration order.  O(active) — read straight
+        from the incrementally maintained index, no per-lane peeks, which
+        is what the async arbiter's mirror is seeded from.  (Work submitted
+        to an engine directly, outside this dispatcher, is visible to the
+        sync :meth:`step` loop but not to this index.)"""
+        with self._ready_mu:
+            names = list(self._active_set)
+        rank = self.lane_ranks()
+        return sorted(names, key=lambda n: rank.get(n, len(rank)))
+
+    def lane_ranks(self) -> dict:
+        """Registration rank per lane name (``{name: index}``) — the
+        ordering key consumers use to sort small active subsets in
+        registration order without walking the registry per lane.  Ranks
+        are stable for a lane's lifetime; unregistering leaves gaps.
+        Cache this against :meth:`registration_epoch`: a rank snapshot is
+        valid exactly as long as the epoch it was taken under."""
+        with self._reg_mu:
+            return dict(self._rank)
+
+    def registration_epoch(self) -> int:
+        """Monotonic counter bumped by every register/unregister — the
+        O(1) validity check for :meth:`lane_ranks` snapshots (a reused
+        tenant name gets a NEW rank; a stale cache would keep feeding
+        policies the old ordering)."""
+        with self._reg_mu:
+            return self._reg_epoch
 
     def fairness_peek(self, active: list, ready: list) -> list:
         """Policy picks over the TRUE active set restricted to ``ready``
         lanes, under the fairness lock — the grant primitive
         (``FairnessPolicy.peek_ready``) ``AsyncDispatcher``'s quantum
         arbiter calls when a readiness event fires or a pool worker asks
-        for its next lane (charging still happens in :meth:`step_lane`)."""
+        for its next lane (charging still happens in :meth:`step_lane`).
+        A transient registration mismatch (a lane mid-register or
+        mid-unregister appearing in ``active`` before/after the policy
+        knows it) yields no picks rather than an exception — the next
+        event re-pumps from consistent state."""
         with self._fair_mu:
-            return self.fairness.peek_ready(list(active), list(ready))
+            try:
+                return self.fairness.peek_ready(list(active), list(ready))
+            except KeyError:
+                return []
 
     def step_lane(self, name: str, *, release: Optional[Callable[[], None]] = None) -> list:
         """One scheduling quantum for a single lane; returns its finished
@@ -326,10 +506,20 @@ class Dispatcher:
         step and the fairness charge are done but BEFORE completion
         callbacks fire — the async layer returns its arbiter grant there,
         so a slow user callback never holds a scheduling quantum hostage.
+        The lane's ready-index transition fires before ``release``, so the
+        re-pump the release triggers already sees post-step truth.
         Completion callbacks run on the calling thread, outside every
-        dispatcher lock.
+        dispatcher lock.  A lane unregistered between grant and step is a
+        no-op quantum (``release`` still runs) — never an error on the
+        stepping thread.
         """
-        lane = self._lane(name)
+        lane = self._lane_or_none(name)
+        if lane is None:
+            # unregistered while a grant was in flight: return the quantum
+            # and report nothing finished
+            if release is not None:
+                release()
+            return []
         with lane.step_mu:
             engine = lane.engine
             # admission control: only hand the engine what it can seat now,
@@ -351,14 +541,13 @@ class Dispatcher:
         with self._fair_mu:
             self.fairness.charge(name, steps=1, tokens=tokens)
         self.metrics.on_engine_step(name, dt, tokens=tokens)
+        # fold the post-step truth into the ready index (and deliver the
+        # delta to the arbiter) BEFORE returning the grant: the release
+        # re-pump must not re-grant a lane this quantum just drained
+        self._touch_ready(lane)
         if release is not None:
             release()
         self._complete(name, newly)
-        # state changed (requests may have finished; the lane may have
-        # drained): let the arbiter re-evaluate held quanta on the event
-        # rather than on its fallback tick.  Fired after callbacks so a
-        # woken stepper observes fully-accounted state.
-        self._lane_event(name)
         return newly
 
     def _complete(self, name: str, newly: list) -> None:
@@ -391,7 +580,12 @@ class Dispatcher:
         if not active:
             return []
         with self._fair_mu:
-            order = self.fairness.select(active)
+            try:
+                order = self.fairness.select(active)
+            except KeyError:
+                # a lane mid-(un)register: skip the quantum, next one sees
+                # consistent registry + policy state
+                order = []
         finished = []
         for name in order:
             finished.extend(self.step_lane(name))
@@ -439,6 +633,8 @@ class Dispatcher:
             snap["schedule_cache"] = caches
         snap["models"] = list(self.models)
         snap["pending"] = self.pending()
+        with self._ready_mu:
+            snap["ready_lanes"] = len(self._active_set)
         with self._fair_mu:
             snap["fairness"] = self.fairness.snapshot()
         return snap

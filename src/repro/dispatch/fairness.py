@@ -7,7 +7,7 @@ is the only place scheduling preference lives — engines and the dispatcher
 itself stay policy-free, which is what lets the same implementations back
 both the synchronous ``Dispatcher`` and the threaded ``AsyncDispatcher``.
 
-Three implementations, a strict generalization ladder:
+Five implementations:
 
 * :class:`RoundRobinFairness` — serve every active lane each quantum,
   rotating which goes first (the original ``Dispatcher`` behavior);
@@ -16,7 +16,20 @@ Three implementations, a strict generalization ladder:
   weight ``w`` advances its pass by ``1/w`` per quantum served, so under
   saturation lane shares converge to the weight ratio (a 3:1 lane gets ~3×
   the decode steps) while no active lane is ever starved — the pass gap is
-  bounded by ``ceil(W/w) + n`` quanta;
+  bounded by ``ceil(W/w) + n`` quanta.  Exact, but serial by construction:
+  one lane per quantum;
+* :class:`DeficitRoundRobinFairness` — weighted **deficit round-robin**:
+  each active lane accrues ``weight`` step-credits per refill round and
+  every funded lane is grantable *at once*, so proportional shares finally
+  compose with ``max_concurrent_steps > 1`` and multi-worker overlap (a
+  3:1 pair realizes ~3:1 decode quanta while both lanes step
+  concurrently) — the concurrent counterpart to stride's exact-but-serial
+  schedule;
+* :class:`LotteryFairness` — lottery scheduling: each quantum draws one
+  winner with probability proportional to weight.  Shares converge to the
+  weight ratio only in expectation, but selection is O(active) with no
+  per-lane bookkeeping and no hold semantics — the cheap secondary when
+  probabilistic shares are enough;
 * :class:`QuotaFairness` — token-rate quotas: each lane owns a token bucket
   refilled by ``rate`` tokens **per wall-clock second** (monotonic clock)
   up to ``burst``; lanes with credit are served richest-first and debited
@@ -34,6 +47,8 @@ wall clock rather than per quantum.
 
 from __future__ import annotations
 
+import math
+import random
 import time
 from typing import Callable, Mapping, Optional, Sequence, Union
 
@@ -46,6 +61,13 @@ class FairnessPolicy:
     def register(self, lane: str, *, weight: float = 1.0) -> None:
         """Admit ``lane`` to the schedule (called once per model)."""
         raise NotImplementedError
+
+    def unregister(self, lane: str) -> None:
+        """Forget ``lane`` entirely: drop its weight, credit, and service
+        counters so a retired tenant stops costing every later ``select``
+        walk (``Dispatcher.unregister_model`` calls this after draining
+        the lane).  Unknown lanes are ignored — unregister is idempotent.
+        """
 
     def select(self, active: Sequence[str]) -> list[str]:
         """Lanes to serve this quantum, in order.
@@ -93,6 +115,10 @@ class RoundRobinFairness(FairnessPolicy):
         """Admit ``lane``; round-robin ignores weights."""
         self._served[lane] = 0
 
+    def unregister(self, lane: str) -> None:
+        """Drop ``lane``'s served-quantum counter."""
+        self._served.pop(lane, None)
+
     def select(self, active: Sequence[str]) -> list[str]:
         """All active lanes, head rotated by one position per quantum."""
         if not active:
@@ -102,8 +128,11 @@ class RoundRobinFairness(FairnessPolicy):
         return list(active[k:]) + list(active[:k])
 
     def charge(self, lane: str, *, steps: int = 1, tokens: int = 0) -> None:
-        """Count served quanta (rotation itself needs no accounting)."""
-        self._served[lane] = self._served.get(lane, 0) + steps
+        """Count served quanta (rotation itself needs no accounting).
+        Unknown lanes are ignored — a straggler step racing an unregister
+        must not resurrect the lane's counters."""
+        if lane in self._served:
+            self._served[lane] += steps
 
     def snapshot(self) -> dict:
         """Per-lane served-quantum counts."""
@@ -137,6 +166,15 @@ class WeightedFairness(FairnessPolicy):
         self._pass[lane] = 0.0
         self._served[lane] = 0
 
+    def unregister(self, lane: str) -> None:
+        """Drop ``lane``'s weight, virtual pass, and counters."""
+        if lane in self._weight:
+            self._order.remove(lane)
+        self._weight.pop(lane, None)
+        self._pass.pop(lane, None)
+        self._served.pop(lane, None)
+        self._last_active = self._last_active - {lane}
+
     def normalized(self) -> dict[str, float]:
         """Weights normalized to sum 1 (uniform when all weights are 0)."""
         total = sum(self._weight.values())
@@ -167,7 +205,11 @@ class WeightedFairness(FairnessPolicy):
         return [min(active, key=lambda l: (self._pass[l], rank[l]))]
 
     def charge(self, lane: str, *, steps: int = 1, tokens: int = 0) -> None:
-        """Advance ``lane``'s pass by ``steps``/weight (stride update)."""
+        """Advance ``lane``'s pass by ``steps``/weight (stride update).
+        Unknown lanes (a straggler step racing an unregister) are
+        ignored."""
+        if lane not in self._pass:
+            return
         self._pass[lane] += steps * self._stride(lane)
         self._served[lane] = self._served.get(lane, 0) + steps
 
@@ -233,6 +275,13 @@ class QuotaFairness(FairnessPolicy):
         self._served[lane] = 0
         self._tokens[lane] = 0
 
+    def unregister(self, lane: str) -> None:
+        """Drop ``lane``'s bucket, refill rate, and service totals."""
+        self._budget.pop(lane, None)
+        self._rate_of.pop(lane, None)
+        self._served.pop(lane, None)
+        self._tokens.pop(lane, None)
+
     def _refill(self) -> None:
         now = self._clock()
         if self._last_refill is None:
@@ -260,7 +309,11 @@ class QuotaFairness(FairnessPolicy):
         return []
 
     def charge(self, lane: str, *, steps: int = 1, tokens: int = 0) -> None:
-        """Debit ``lane``'s bucket by the tokens it actually produced."""
+        """Debit ``lane``'s bucket by the tokens it actually produced.
+        Unknown lanes (a straggler step racing an unregister) are
+        ignored."""
+        if lane not in self._budget:
+            return
         self._budget[lane] -= tokens
         self._served[lane] = self._served.get(lane, 0) + steps
         self._tokens[lane] = self._tokens.get(lane, 0) + tokens
@@ -276,7 +329,229 @@ class QuotaFairness(FairnessPolicy):
         }
 
 
+class DeficitRoundRobinFairness(FairnessPolicy):
+    """Weighted deficit round-robin: every funded lane is grantable at once.
+
+    Each lane carries a *deficit counter* of step-credits.  When no ready
+    lane can afford a quantum (cost 1), every **active** lane is refilled
+    by ``weight × quantum`` credits in one batch (several rounds at once if
+    small weights need them), and every lane whose counter covers a step is
+    returned — in registration-ring order — as grantable **simultaneously**.
+    Serving debits one credit per quantum (:meth:`charge`).
+
+    This is the concurrency-compatible counterpart to stride scheduling:
+    stride's one-lane-per-quantum rationing keeps ratios exact but
+    serializes decode; DRR's per-round credit batching keeps the same
+    proportional shares over any window of full rounds (a 3:1 pair
+    realizes 3:1 quanta) while an arbiter may grant all funded lanes to
+    different workers in the same pump.  The round is also the starvation
+    bound: a lane that spent its quantum waits at most the rest of the
+    round (the largest weight's worth of steps) before the next refill
+    funds it again.  Deficits are zeroed when a lane leaves the active set
+    (a returning idler must not burst through banked credit) and capped at
+    one round plus one quantum of carry, the classic DRR bound.
+    """
+
+    _CARRY = 1.0        # max credit carried past a round (DRR packet bound)
+
+    def __init__(
+        self,
+        weights: Optional[Mapping[str, float]] = None,
+        quantum: float = 1.0,
+    ) -> None:
+        if quantum <= 0:
+            raise ValueError(f"quantum must be > 0, got {quantum}")
+        self._preset = dict(weights or {})
+        self._quantum = float(quantum)
+        self._order: list[str] = []
+        self._weight: dict[str, float] = {}
+        self._deficit: dict[str, float] = {}
+        self._served: dict[str, int] = {}
+        self._rounds = 0
+        self._last_active: frozenset = frozenset()
+
+    def register(self, lane: str, *, weight: float = 1.0) -> None:
+        """Admit ``lane`` at ``weight`` (preset mapping wins if present)."""
+        w = float(self._preset.get(lane, weight))
+        if w < 0:
+            raise ValueError(f"weight must be >= 0, got {w} for {lane!r}")
+        self._order.append(lane)
+        self._weight[lane] = w
+        self._deficit[lane] = 0.0
+        self._served[lane] = 0
+
+    def unregister(self, lane: str) -> None:
+        """Drop ``lane``'s weight, deficit, and counters."""
+        if lane in self._weight:
+            self._order.remove(lane)
+        self._weight.pop(lane, None)
+        self._deficit.pop(lane, None)
+        self._served.pop(lane, None)
+        self._last_active = self._last_active - {lane}
+
+    def _refill_share(self, lane: str) -> float:
+        return max(self._weight[lane], _MIN_WEIGHT) * self._quantum
+
+    def _refill(self, active: Sequence[str], ready: Sequence[str]) -> None:
+        # batch as many rounds as the richest ready lane needs to afford
+        # one quantum, so a tiny-weight lane costs O(1) arithmetic instead
+        # of O(1/weight) refill iterations
+        rounds = min(
+            math.ceil(max(0.0, 1.0 - self._deficit[l]) / self._refill_share(l))
+            for l in ready
+        )
+        rounds = max(1, rounds)
+        self._rounds += rounds
+        for lane in active:
+            share = self._refill_share(lane)
+            cap = share + self._CARRY
+            self._deficit[lane] = min(
+                cap, self._deficit[lane] + rounds * share
+            )
+
+    def _sync_active(self, active: Sequence[str]) -> None:
+        # a lane re-joining after idleness starts from zero credit: banked
+        # deficit from a stale round must not turn into a burst
+        for lane in active:
+            if lane not in self._last_active:
+                self._deficit[lane] = 0.0
+        self._last_active = frozenset(active)
+
+    def select(self, active: Sequence[str]) -> list[str]:
+        """Every funded active lane, ring order (refilling if none is)."""
+        return self.peek_ready(active, active)
+
+    def peek_ready(self, active: Sequence[str], ready: Sequence[str]) -> list[str]:
+        """Funded ready lanes, in ring order, all grantable concurrently.
+
+        The round is the proportionality unit: a new refill lands only
+        when **no active lane** holds a step of credit — a lane that spent
+        its quantum waits out the rest of the round (bounded by the
+        largest weight's worth of steps), which is exactly what keeps the
+        realized shares at the weight ratio even though funded lanes are
+        granted concurrently.  Returning ``[]`` with a round in progress
+        tells the arbiter to hold until the funded (executing) lanes
+        release and either spend or finish the round.
+        """
+        # unknown lanes (a contender racing its own (un)registration) are
+        # filtered, never resurrected into the deficit table
+        active = [l for l in active if l in self._weight]
+        ready = [l for l in ready if l in self._weight]
+        if not active:
+            self._last_active = frozenset()
+            return []
+        self._sync_active(active)
+        if not ready:
+            return []
+        funded = [l for l in ready if self._deficit[l] >= 1.0]
+        if not funded:
+            if any(self._deficit[l] >= 1.0 for l in active):
+                return []          # round in progress: hold for its owners
+            self._refill(active, ready)
+            funded = [l for l in ready if self._deficit[l] >= 1.0]
+        rank = {lane: i for i, lane in enumerate(self._order)}
+        return sorted(funded, key=lambda l: rank[l])
+
+    def charge(self, lane: str, *, steps: int = 1, tokens: int = 0) -> None:
+        """Debit ``lane``'s deficit one credit per served quantum.
+        Unknown lanes (a straggler step racing an unregister) are
+        ignored."""
+        if lane not in self._deficit:
+            return
+        self._deficit[lane] -= float(steps)
+        self._served[lane] = self._served.get(lane, 0) + steps
+
+    def snapshot(self) -> dict:
+        """Weights, live deficits, refill rounds, and served quanta."""
+        return {
+            "policy": "drr",
+            "weights": dict(self._weight),
+            "deficit": dict(self._deficit),
+            "rounds": self._rounds,
+            "served_steps": dict(self._served),
+        }
+
+
+class LotteryFairness(FairnessPolicy):
+    """Lottery scheduling: one weighted random winner per quantum.
+
+    Each quantum holds a lottery over the eligible lanes with tickets
+    proportional to weight; shares converge to the weight ratio in
+    expectation with no per-lane credit state at all — the cheap
+    probabilistic secondary to :class:`DeficitRoundRobinFairness`.
+    ``seed`` makes the draw sequence reproducible (tests, benchmarks).
+    :meth:`peek_ready` draws over the *ready* subset directly — lottery
+    has no hold semantics, so an executing lane's tickets are simply out
+    of this draw.
+    """
+
+    def __init__(
+        self,
+        weights: Optional[Mapping[str, float]] = None,
+        seed: int = 0,
+    ) -> None:
+        self._preset = dict(weights or {})
+        self._rng = random.Random(seed)
+        self._weight: dict[str, float] = {}
+        self._served: dict[str, int] = {}
+
+    def register(self, lane: str, *, weight: float = 1.0) -> None:
+        """Admit ``lane`` with ``weight`` tickets (preset mapping wins)."""
+        w = float(self._preset.get(lane, weight))
+        if w < 0:
+            raise ValueError(f"weight must be >= 0, got {w} for {lane!r}")
+        self._weight[lane] = w
+        self._served[lane] = 0
+
+    def unregister(self, lane: str) -> None:
+        """Drop ``lane``'s tickets and counters."""
+        self._weight.pop(lane, None)
+        self._served.pop(lane, None)
+
+    def _draw(self, lanes: Sequence[str]) -> list[str]:
+        tickets = [max(self._weight.get(l, 1.0), _MIN_WEIGHT) for l in lanes]
+        return [self._rng.choices(list(lanes), weights=tickets, k=1)[0]]
+
+    def select(self, active: Sequence[str]) -> list[str]:
+        """One weighted-random winner among the active lanes."""
+        if not active:
+            return []
+        return self._draw(active)
+
+    def peek_ready(self, active: Sequence[str], ready: Sequence[str]) -> list[str]:
+        """One weighted-random winner among the *ready* lanes (no hold)."""
+        if not ready:
+            return []
+        return self._draw(ready)
+
+    def charge(self, lane: str, *, steps: int = 1, tokens: int = 0) -> None:
+        """Count served quanta (the lottery itself is stateless).
+        Unknown lanes (a straggler step racing an unregister) are
+        ignored."""
+        if lane in self._served:
+            self._served[lane] += steps
+
+    def snapshot(self) -> dict:
+        """Ticket weights and served quanta."""
+        return {
+            "policy": "lottery",
+            "weights": dict(self._weight),
+            "served_steps": dict(self._served),
+        }
+
+
 FairnessSpec = Union[FairnessPolicy, str, Mapping[str, float], None]
+
+#: Registered spec keywords -> policy class.  ``tools/check_docs.py``
+#: cross-checks every key here against the :func:`make_fairness` docstring
+#: and DESIGN.md, so adding a policy without documenting it fails CI.
+FAIRNESS_POLICIES: dict = {
+    "round_robin": RoundRobinFairness,
+    "weighted": WeightedFairness,
+    "quota": QuotaFairness,
+    "drr": DeficitRoundRobinFairness,
+    "lottery": LotteryFairness,
+}
 
 
 def make_fairness(spec: FairnessSpec) -> FairnessPolicy:
@@ -284,8 +559,12 @@ def make_fairness(spec: FairnessSpec) -> FairnessPolicy:
 
     ``None`` / ``"round_robin"`` → rotation; ``"weighted"`` → stride
     scheduling (weights from ``register``); a ``{lane: weight}`` mapping →
-    stride scheduling with preset weights; ``"quota[:RATE[:BURST]]"`` →
-    token-rate quotas (RATE tokens per wall-clock second, BURST cap).
+    stride scheduling with preset weights; ``"drr[:QUANTUM]"`` → weighted
+    deficit round-robin (concurrent proportional shares, QUANTUM credits
+    per weight unit per round); ``"lottery[:SEED]"`` → lottery scheduling
+    (probabilistic shares, reproducible under SEED);
+    ``"quota[:RATE[:BURST]]"`` → token-rate quotas (RATE tokens per
+    wall-clock second, BURST cap).
     """
     if spec is None:
         return RoundRobinFairness()
@@ -299,6 +578,12 @@ def make_fairness(spec: FairnessSpec) -> FairnessPolicy:
             return RoundRobinFairness()
         if name == "weighted":
             return WeightedFairness()
+        if name == "drr":
+            return DeficitRoundRobinFairness(
+                quantum=float(rest) if rest else 1.0
+            )
+        if name == "lottery":
+            return LotteryFairness(seed=int(rest) if rest else 0)
         if name == "quota":
             if rest:
                 rate, _, burst = rest.partition(":")

@@ -111,11 +111,20 @@ class DispatchMetrics:
         self.tokens_out = 0
         self.rejected = 0                             # backpressure refusals
         self._engines: dict = {}                      # model -> _EngineSeries
+        self._dropped: set = set()                    # unregistered tombstones
         # quantum-grant latency: lane became grantable -> arbiter granted it
         # (the event-driven hand-off's figure of merit: under contention the
         # p95 must sit below the old 10 ms fallback tick)
         self.grant_latency = LatencySeries("grant", window=65536)
         self._grants = 0
+        # per-grant CPU cost: arbiter time spent selecting + bookkeeping
+        # per grant issued — the O(1)-grant-path figure of merit (must stay
+        # flat as the registered-tenant count grows)
+        self.grant_cost = LatencySeries("grant_cost", window=65536)
+        # ready-set size samples (indexed ready set, recorded per granting
+        # pump): how much of the fleet is actually contending
+        self._ready_sizes = deque(maxlen=8192)
+        self._ready_peak = 0
         # stepper-pool occupancy: busy-worker samples, recorded per grant
         self._pool_size = 0
         self._pool_busy = deque(maxlen=8192)
@@ -141,8 +150,12 @@ class DispatchMetrics:
     ) -> None:
         """Record one engine stepping quantum for ``model``: its wall time
         and the tokens it produced.  Fed by ``Dispatcher.step_lane`` from
-        whichever thread stepped the lane."""
+        whichever thread stepped the lane.  Tombstoned (unregistered)
+        models are ignored — a straggler quantum racing the unregister
+        must not resurrect the dropped series."""
         with self._mu:
+            if model in self._dropped:
+                return
             rec = self._engines.get(model)
             if rec is None:
                 rec = self._engines[model] = _EngineSeries()
@@ -162,6 +175,43 @@ class DispatchMetrics:
         with self._mu:
             self._grants += 1
             self.grant_latency.record(seconds)
+
+    def on_grant_cost(self, seconds: float) -> None:
+        """Record the arbiter CPU cost attributed to one grant: selection
+        plus grant bookkeeping time, divided over the grants the pump
+        issued.  This is the per-event cost the indexed grant path keeps
+        O(active): flat as registered tenants grow, because neither the
+        pump nor the policy walks the registry."""
+        with self._mu:
+            self.grant_cost.record(seconds)
+
+    def on_ready_size(self, size: int) -> None:
+        """Record one indexed-ready-set size sample (taken by the arbiter
+        per granting pump): the number of lanes actually contending for
+        quanta, as opposed to merely registered."""
+        with self._mu:
+            self._ready_sizes.append(int(size))
+            if size > self._ready_peak:
+                self._ready_peak = int(size)
+
+    def drop_engine(self, model: str) -> None:
+        """Forget ``model``'s per-engine series (the tenant was
+        unregistered): a dead tenant must stop occupying snapshot space
+        and per-engine walks forever.  The name is tombstoned so a
+        straggler step racing the unregister cannot resurrect the entry
+        (:meth:`on_engine_step` ignores tombstoned models);
+        :meth:`track_engine` lifts the tombstone on re-registration."""
+        with self._mu:
+            self._engines.pop(model, None)
+            self._dropped.add(model)
+
+    def track_engine(self, model: str) -> None:
+        """(Re-)admit ``model`` to per-engine tracking, lifting any
+        tombstone a previous :meth:`drop_engine` left — called by the
+        dispatcher at registration so a reused tenant name records
+        again."""
+        with self._mu:
+            self._dropped.discard(model)
 
     def on_pool_occupancy(self, busy: int, size: int) -> None:
         """Record one stepper-pool occupancy sample: ``busy`` of ``size``
@@ -239,6 +289,15 @@ class DispatchMetrics:
                 "e2e_ms": self.e2e.summary_ms(),
                 "grants": self._grants,
                 "grant_ms": self.grant_latency.summary_ms(),
+                "grant_cost_ms": self.grant_cost.summary_ms(),
+                "ready_size": {
+                    "mean": (
+                        float(np.mean(np.asarray(self._ready_sizes)))
+                        if self._ready_sizes else 0.0
+                    ),
+                    "peak": self._ready_peak,
+                    "samples": len(self._ready_sizes),
+                },
                 "engines": {
                     model: {
                         "steps": rec.steps,

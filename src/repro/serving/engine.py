@@ -160,6 +160,21 @@ class ServingEngine:
         # dispatchers, or a caller stepping directly while dispatched —
         # into a loud error instead of corrupted KV state.
         self._step_mu = threading.Lock()
+        self._retired = False
+
+    def retire(self) -> None:
+        """Lane-retire hook: release this engine's serving lifecycle.
+
+        Called by ``Dispatcher.unregister_model`` after the lane drained.
+        Refuses all further submissions (``validate_request`` raises),
+        clears any queued requests (there should be none after a drain),
+        and drops the per-engine ``ScheduleKey`` memo so the shared
+        schedule cache's LRU — not a dead tenant's memo — governs how long
+        the sealed executables stay referenced.  Idempotent.
+        """
+        self._retired = True
+        self.queue.clear()
+        self._prefill_keys.clear()
 
     # -- sealed executables through the schedule cache ---------------------
     _EXEC_ARENA_FLOOR = 4096     # conservative floor: never report ~free
@@ -305,7 +320,10 @@ class ServingEngine:
         Dispatchers call this at submit time so an unservable prompt raises
         on the *submitter* (synchronous backpressure semantics), not later
         on a stepping thread where it would poison every tenant's futures.
+        A retired engine (see :meth:`retire`) rejects everything.
         """
+        if self._retired:
+            raise RuntimeError("engine is retired; it no longer serves")
         self._bucket(len(req.prompt))          # ValueError if unservable
 
     def submit(self, req: Request) -> None:

@@ -1,0 +1,519 @@
+"""O(1) grant path: indexed ready set, per-worker parking, DRR (ISSUE 5).
+
+Four suites:
+
+* **unregister** — ``Dispatcher.unregister_model`` (and the
+  ``AsyncDispatcher`` passthrough) drains the lane and removes it from the
+  registry, the indexed ready set, the fairness state, and the per-engine
+  metrics; a racing submit raises instead of stranding a request; the
+  engine's ``retire()`` hook fires; per-engine mode retires the lane's
+  stepper thread;
+* **ready-index hygiene** — a lane that submits once and goes silent
+  leaves no stale ``_ready_since`` stamp or mirror entry behind (the
+  event-driven eviction regression for the old full-stamp leak);
+* **per-worker parking** — a quota refill tick wakes exactly the one
+  designated ticker (not the parked herd), ``timed_wakeups`` /
+  ``timed_grants`` / ``grants`` stay truthful, and a busy pool's
+  wakeups-per-grant stays ≤ 2 (hand-off + at most one ticker promotion);
+* **concurrent weighted fairness** — ``"drr"`` at 3:1 weights realizes a
+  3.0±0.3 decode-quantum share while ≥ 2 lanes verifiably step at the
+  same time; ``"lottery"`` converges in expectation under a fixed seed.
+
+Every test is timeout-guarded: a lost wakeup must fail, not hang.
+"""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+from _fakes import SeqEngine
+
+from repro.dispatch import (
+    AsyncDispatcher,
+    DeficitRoundRobinFairness,
+    Dispatcher,
+    LotteryFairness,
+    QuotaFairness,
+    make_fairness,
+)
+from repro.dispatch.async_dispatcher import _QuantumArbiter
+from repro.serving import Request
+
+PROMPT = np.array([1, 2, 3], np.int32)
+STEPPER_PREFIX = "repro-dispatch-step["
+
+
+def _request(rid, max_new):
+    return Request(rid=rid, prompt=PROMPT.copy(), max_new_tokens=max_new)
+
+
+def _stepper_threads():
+    return [
+        t for t in threading.enumerate()
+        if t.is_alive() and t.name.startswith(STEPPER_PREFIX)
+    ]
+
+
+class _RetireEngine(SeqEngine):
+    """SeqEngine that records the dispatcher's lane-retire hook firing."""
+
+    def __init__(self, name, log, slots=1):
+        super().__init__(name, log, slots=slots)
+        self.retired = False
+
+    def retire(self):
+        self.retired = True
+
+
+class _OverlapEngine(SeqEngine):
+    """SeqEngine whose step dwells briefly and records how many engines
+    were stepping at the same instant — the proof that a policy actually
+    grants lanes concurrently."""
+
+    def __init__(self, name, log, tracker, slots=1, dwell=0.004):
+        super().__init__(name, log, slots=slots)
+        self._tracker = tracker
+        self._dwell = dwell
+
+    def step(self):
+        with self._tracker["mu"]:
+            self._tracker["cur"] += 1
+            if self._tracker["cur"] > self._tracker["peak"]:
+                self._tracker["peak"] = self._tracker["cur"]
+        try:
+            time.sleep(self._dwell)
+            return super().step()
+        finally:
+            with self._tracker["mu"]:
+                self._tracker["cur"] -= 1
+
+
+# -- unregister ---------------------------------------------------------------
+
+@pytest.mark.timeout(60)
+def test_unregister_model_sync_removes_all_state():
+    """Unregister drains the lane on the caller and scrubs every index a
+    dead tenant would otherwise bloat: registry, ready set, fairness
+    dicts, per-engine metrics — and the name becomes reusable."""
+    log = []
+    disp = Dispatcher(max_pending=64, fairness="weighted")
+    eng_a = _RetireEngine("a", log)
+    disp.register_model("a", eng_a, weight=3.0)
+    disp.register_model("b", SeqEngine("b", log), weight=1.0)
+    disp.submit_request("a", _request(0, 3))
+    disp.submit_request("b", _request(1, 3))
+    assert set(disp.active_lanes()) == {"a", "b"}
+
+    out = disp.unregister_model("a")
+    assert out is eng_a and eng_a.retired          # lane-retire hook fired
+    assert eng_a.idle                              # drained, not dropped
+    assert disp.models == ("b",)
+    assert not disp.has_model("a")
+    assert disp.pending() == 1                     # only b's request remains
+    assert disp.active_lanes() == ["b"]
+    snap = disp.snapshot()
+    assert "a" not in snap["fairness"]["served_steps"]
+    assert "a" not in snap["fairness"]["weights"]
+    assert "a" not in snap["engines"]
+    assert snap["ready_lanes"] == 1
+    with pytest.raises(KeyError):
+        disp.submit("a", PROMPT)
+    disp.register_model("a", SeqEngine("a", log))  # name is reusable
+    disp.submit_request("a", _request(2, 2))
+    done = disp.run_until_drained()
+    assert all(r.done for r in done)
+    assert disp.pending() == 0
+
+
+@pytest.mark.timeout(60)
+def test_unregister_while_pool_serving():
+    """Unregistering a tenant under a live stepper pool: survivors keep
+    serving, the dead lane refuses submits, and its metrics vanish."""
+    ad = AsyncDispatcher(max_pending=256, stepping="pool", pool_size=2)
+    for name in ("a", "b", "c"):
+        ad.register_model(name, SeqEngine(name, []))
+    ad.start()
+    futs = [ad.submit(n, PROMPT, max_new_tokens=3) for n in ("a", "b", "c")]
+    assert all(f.result(timeout=30).done for f in futs)
+
+    ad.unregister_model("b")
+    assert ad.models == ("a", "c")
+    assert ad.submit("a", PROMPT, max_new_tokens=2).result(timeout=30).done
+    with pytest.raises(KeyError):
+        ad.submit("b", PROMPT)
+    snap = ad.snapshot()
+    assert "b" not in snap["engines"]
+    assert "b" not in snap["fairness"]["served_steps"]
+    ad.stop()
+    assert not ad.running
+
+
+@pytest.mark.timeout(60)
+def test_unregister_drains_inflight_work_under_pool():
+    """Unregister called with the lane's work still in flight: the drain
+    serves it to completion (the future resolves) before removal."""
+    ad = AsyncDispatcher(max_pending=64, stepping="pool", pool_size=2)
+    ad.register_model("a", SeqEngine("a", []))
+    ad.register_model("b", SeqEngine("b", []))
+    ad.start()
+    fut = ad.submit("a", PROMPT, max_new_tokens=6)
+    ad.unregister_model("a")                       # races the pool workers
+    assert fut.result(timeout=30).done             # drained, never stranded
+    assert ad.models == ("b",)
+    ad.stop()
+
+
+@pytest.mark.timeout(60)
+def test_unregister_per_engine_retires_stepper_thread():
+    """Per-engine mode: the dead lane's stepper thread exits and is
+    joined; the survivor's stepper keeps serving."""
+    before = set(_stepper_threads())
+    ad = AsyncDispatcher(max_pending=64, stepping="per-engine")
+    ad.register_model("a", SeqEngine("a", []))
+    ad.register_model("b", SeqEngine("b", []))
+    ad.start()
+    assert ad.submit("a", PROMPT, max_new_tokens=2).result(timeout=30).done
+    ad.unregister_model("a")
+    names = {t.name for t in set(_stepper_threads()) - before}
+    assert names == {f"{STEPPER_PREFIX}b]"}
+    assert ad.submit("b", PROMPT, max_new_tokens=2).result(timeout=30).done
+    assert ad.snapshot()["async"]["steppers"] == 1
+    ad.stop()
+
+
+@pytest.mark.timeout(60)
+def test_submit_racing_retired_lane_rolls_back_backpressure():
+    """A submit that loses the race against unregister raises KeyError
+    and leaves the pending counter untouched (no leaked admission)."""
+    disp = Dispatcher(max_pending=4)
+    disp.register_model("a", SeqEngine("a", []))
+    lane = disp._lane("a")
+    with lane.queue_mu:
+        lane.retired = True                        # unregister's first act
+    with pytest.raises(KeyError):
+        disp.submit("a", PROMPT)
+    assert disp.pending() == 0
+    # capacity was rolled back: a healthy lane still has all 4 seats
+    with lane.queue_mu:
+        lane.retired = False
+    for i in range(4):
+        disp.submit("a", PROMPT, max_new_tokens=1)
+    assert disp.pending() == 4
+
+
+@pytest.mark.timeout(60)
+def test_metrics_tombstone_blocks_straggler_resurrection():
+    """A step quantum racing the unregister (recording after
+    ``drop_engine``) must not resurrect the dead tenant's metrics entry;
+    re-registering the name lifts the tombstone."""
+    log = []
+    disp = Dispatcher(max_pending=64)
+    disp.register_model("a", SeqEngine("a", log))
+    disp.submit_request("a", _request(0, 2))
+    disp.unregister_model("a")
+    disp.metrics.on_engine_step("a", 0.001, tokens=1)   # the straggler
+    assert "a" not in disp.metrics.snapshot()["engines"]
+    disp.register_model("a", SeqEngine("a", log))       # tombstone lifted
+    disp.submit_request("a", _request(1, 2))
+    disp.run_until_drained()
+    assert disp.metrics.snapshot()["engines"]["a"]["steps"] > 0
+
+
+@pytest.mark.timeout(60)
+def test_drr_filters_unknown_lanes_without_resurrection():
+    """A contender racing its own (un)registration is filtered out of the
+    DRR pick, never resurrected into the deficit table."""
+    drr = DeficitRoundRobinFairness()
+    drr.register("a", weight=2.0)
+    assert drr.peek_ready(["ghost", "a"], ["ghost", "a"]) == ["a"]
+    assert "ghost" not in drr.snapshot()["deficit"]
+    assert drr.peek_ready(["ghost"], ["ghost"]) == []
+
+
+@pytest.mark.timeout(60)
+def test_arbiter_refuses_acquire_for_unregistered_lane():
+    """A per-engine stepper racing past unregister must not park a
+    phantom waiter: acquire on a lane the registry no longer knows
+    returns False immediately."""
+    disp = Dispatcher(max_pending=16)
+    disp.register_model("a", SeqEngine("a", []))
+    arb = _QuantumArbiter(disp, None, tick=30.0)
+    disp.unregister_model("a")
+    assert arb.acquire("a") is False
+    with arb._mu:
+        assert not arb._waiting
+    arb.close()
+
+
+@pytest.mark.timeout(60)
+def test_arbiter_rank_cache_follows_reregistration():
+    """A reused tenant name gets a NEW registration rank: the arbiter's
+    cached rank map must refresh (via the registration epoch), not keep
+    feeding policies the retired lane's old ordering — and the refresh
+    drops dead names, so the cache never grows with tenant churn."""
+    disp = Dispatcher(max_pending=16)
+    disp.register_model("a", SeqEngine("a", []))
+    disp.register_model("b", SeqEngine("b", []))
+    arb = _QuantumArbiter(disp, None, tick=30.0)
+    with arb._mu:
+        assert arb._order_locked({"a", "b"}) == ["a", "b"]
+    disp.unregister_model("a")
+    disp.register_model("a", SeqEngine("a", []))   # reuse: now ranks after b
+    with arb._mu:
+        assert arb._order_locked({"a", "b"}) == ["b", "a"]
+        assert set(arb._rank) == {"a", "b"}        # no dead-name residue
+    arb.close()
+
+
+# -- ready-index hygiene ------------------------------------------------------
+
+@pytest.mark.timeout(60)
+def test_ready_stamp_evicted_when_lane_goes_silent():
+    """Regression for the ``_ready_since`` leak: a lane that submits once
+    and goes silent must leave no stale stamp or mirror entry — eviction
+    is event-driven (the inactive delta), not a side effect of the next
+    full stamp walk (which no longer exists)."""
+    disp = Dispatcher(max_pending=64)
+    disp.register_model("once", SeqEngine("once", []))
+    disp.register_model("busy", SeqEngine("busy", []))
+    arb = _QuantumArbiter(disp, None, tick=30.0)   # fallback off: events only
+    disp.set_lane_event_hook(arb.notify_ready)
+
+    disp.submit_request("once", _request(0, 1))    # one token, then silence
+    assert arb.acquire("once")
+    disp.step_lane("once", release=lambda: arb.release("once"))
+    assert not disp.lane_active("once")
+    with arb._mu:
+        assert "once" not in arb._ready_since
+        assert "once" not in arb._active
+        assert not arb._inflight
+
+    disp.submit_request("busy", _request(1, 2))    # another lane, untouched
+    with arb._mu:
+        assert "busy" in arb._ready_since
+        assert "busy" in arb._active
+        assert "once" not in arb._ready_since
+    arb.close()
+    disp.set_lane_event_hook(None)
+
+
+@pytest.mark.timeout(60)
+def test_indexed_ready_set_tracks_submit_and_drain():
+    """The dispatcher's own index transitions on submit and on the
+    draining step-complete, without anyone walking the registry."""
+    disp = Dispatcher(max_pending=64)
+    for name in ("a", "b", "c"):
+        disp.register_model(name, SeqEngine(name, []))
+    assert disp.active_lanes() == []
+    disp.submit_request("b", _request(0, 1))
+    assert disp.active_lanes() == ["b"]
+    disp.submit_request("a", _request(1, 1))
+    assert disp.active_lanes() == ["a", "b"]       # registration order
+    disp.run_until_drained()
+    assert disp.active_lanes() == []
+    assert disp.snapshot()["ready_lanes"] == 0
+
+
+# -- per-worker parking -------------------------------------------------------
+
+@pytest.mark.timeout(60)
+def test_quota_refill_tick_wakes_exactly_one_parked_worker():
+    """Satellite acceptance: with 3 workers parked on a broke quota lane,
+    only the designated ticker's timed wait expires (≈ elapsed/tick
+    expiries total, NOT 3×), and when fake-clock credit appears exactly
+    one worker is granted — counters stay truthful throughout."""
+    tick = 0.02
+    clock_t = [0.0]
+    policy = QuotaFairness(rate=8.0, burst=8.0, work_conserving=False,
+                           clock=lambda: clock_t[0])
+    disp = Dispatcher(max_pending=64, fairness=policy)
+    disp.register_model("a", SeqEngine("a", []))
+    disp.submit_request("a", _request(0, 4))
+    policy.select(["a"])                           # anchor the refill clock
+    policy.charge("a", tokens=8)                   # lane is broke
+    arb = _QuantumArbiter(disp, None, tick=tick, pool_size=3)
+    disp.set_lane_event_hook(arb.notify_ready)     # replay seeds the mirror
+
+    granted = []
+    mu = threading.Lock()
+
+    def worker():
+        lane = arb.acquire_any()
+        if lane is not None:
+            with mu:
+                granted.append(lane)
+
+    threads = [threading.Thread(target=worker, daemon=True) for _ in range(3)]
+    for t in threads:
+        t.start()
+    park_window = 0.3
+    time.sleep(park_window)
+    stats = arb.stats()
+    assert not granted, "broke lane was granted without credit"
+    assert stats["parked"] == 3
+    assert stats["grants"] == 0
+    # one ticker ticking, not the herd: expiries track elapsed/tick for a
+    # single timed waiter (generous 2x slack for scheduler jitter), far
+    # below the 3x a per-worker timed wait would produce
+    assert 1 <= stats["timed_wakeups"] <= int(park_window / tick * 2) + 2
+
+    clock_t[0] += 10.0                             # credit appears: NO event
+    deadline = time.monotonic() + 5
+    while not granted and time.monotonic() < deadline:
+        time.sleep(0.005)
+    assert granted == ["a"], "quota refill never woke the ticker"
+    s2 = arb.stats()
+    assert s2["grants"] == 1
+    assert s2["timed_grants"] == 1                 # the fallback served it
+    assert s2["parked"] == 2                       # the others never stirred
+    arb.release("a")
+    arb.close()
+    for t in threads:
+        t.join(timeout=5)
+    disp.set_lane_event_hook(None)
+
+
+@pytest.mark.timeout(120)
+def test_pool_wakeups_per_grant_bounded():
+    """Tentpole acceptance at test scale: a busy pool's wakeups-per-grant
+    stays ≤ 2 (one hand-off notify, at most one ticker promotion) — the
+    old ``notify_all`` scheme paid ≈ pool_size wakeups per event."""
+    ad = AsyncDispatcher(max_pending=100_000, stepping="pool", pool_size=4)
+    for i in range(8):
+        ad.register_model(f"m{i}", SeqEngine(f"m{i}", [], slots=2))
+    ad.start()
+    futs = []
+    for i in range(8):
+        for r in range(6):
+            futs.append(
+                ad.submit(f"m{i}", PROMPT, max_new_tokens=4)
+            )
+    assert all(f.result(timeout=60).done for f in futs)
+    stats = ad.snapshot()["async"]["arbiter"]
+    assert stats["grants"] > 0
+    # exclude idle-parking tick expiries (no grant, no herd): judge the
+    # hand-off scheme by targeted notifies per grant
+    assert stats["notify_wakeups"] / stats["grants"] <= 2.0
+    assert stats["wakeups_per_grant"] <= 2.5       # ticks included, bounded
+    ad.stop()
+
+
+# -- concurrent weighted fairness (drr / lottery) -----------------------------
+
+@pytest.mark.timeout(120)
+def test_drr_proportional_shares_with_concurrent_stepping():
+    """ISSUE 5 acceptance: ``"drr"`` at 3:1 weights measures a 3.0±0.3
+    decode-quantum share while at least two lanes verifiably step at the
+    same instant — proportional shares composing with overlap, which
+    stride cannot do by construction."""
+    tracker = {"mu": threading.Lock(), "cur": 0, "peak": 0}
+    log = []
+    disp = Dispatcher(max_pending=100_000, fairness="drr")
+    disp.register_model("heavy", _OverlapEngine("heavy", log, tracker),
+                        weight=3.0)
+    disp.register_model("light", _OverlapEngine("light", log, tracker),
+                        weight=1.0)
+    for rid, lane in enumerate(("heavy", "light")):
+        disp.submit_request(lane, _request(rid, 400))   # stay saturated
+    ad = AsyncDispatcher(disp, stepping="pool", pool_size=4)
+    ad.start()
+    window = 240
+    deadline = time.monotonic() + 90
+    while len(log) < window and time.monotonic() < deadline:
+        time.sleep(0.005)
+    ad.stop(drain=False)
+    counts = {lane: log[:window].count(lane) for lane in ("heavy", "light")}
+    assert sum(counts.values()) == window, "pool workers stalled"
+    ratio = counts["heavy"] / max(counts["light"], 1)
+    assert 2.7 <= ratio <= 3.3, f"3:1 drr realized {ratio:.2f} ({counts})"
+    assert tracker["peak"] >= 2, "drr never stepped two lanes concurrently"
+
+
+@pytest.mark.timeout(60)
+def test_drr_policy_unit_refill_and_rejoin():
+    """DRR bookkeeping: batched refills fund every active lane by weight,
+    charges debit one credit per quantum, and a lane re-joining after
+    idleness restarts from zero credit (no banked burst)."""
+    drr = DeficitRoundRobinFairness()
+    drr.register("a", weight=3.0)
+    drr.register("b", weight=1.0)
+    picks = drr.peek_ready(["a", "b"], ["a", "b"])
+    assert picks == ["a", "b"]                     # both funded, one round
+    snap = drr.snapshot()
+    assert snap["deficit"]["a"] == pytest.approx(3.0)
+    assert snap["deficit"]["b"] == pytest.approx(1.0)
+    for _ in range(3):
+        drr.charge("a")
+    drr.charge("b")
+    # round exhausted: next peek refills both again
+    assert drr.peek_ready(["a", "b"], ["a", "b"]) == ["a", "b"]
+    # a drains; b alone keeps receiving quanta (work conserving)
+    assert drr.peek_ready(["b"], ["b"]) == ["b"]
+    for _ in range(8):
+        drr.charge("b")
+        assert drr.peek_ready(["b"], ["b"]) == ["b"]
+    # a rejoins: credit restarted at one refill, not eight banked rounds
+    drr.peek_ready(["a", "b"], ["a", "b"])
+    assert drr.snapshot()["deficit"]["a"] <= 3.0 + drr._CARRY
+    drr.unregister("a")
+    assert "a" not in drr.snapshot()["deficit"]
+    drr.charge("a")                                # unknown lane: ignored
+    assert "a" not in drr.snapshot()["served_steps"]
+
+
+@pytest.mark.timeout(60)
+def test_drr_round_integrity_holds_spent_lane_until_round_ends():
+    """A lane that spent its round quantum waits while the funded lane
+    finishes the round (this hold is what keeps shares at the weight
+    ratio); the moment the round completes, the refill funds both."""
+    drr = DeficitRoundRobinFairness()
+    drr.register("a", weight=3.0)
+    drr.register("b", weight=1.0)
+    drr.peek_ready(["a", "b"], ["a", "b"])
+    drr.charge("b")                                # b spent its round credit
+    # a still owns 3 credits of this round (executing): b must wait
+    assert drr.peek_ready(["a", "b"], ["b"]) == []
+    for _ in range(3):
+        drr.charge("a")
+    # round complete: the next peek refills and funds both again
+    assert drr.peek_ready(["a", "b"], ["a", "b"]) == ["a", "b"]
+
+
+@pytest.mark.timeout(60)
+def test_lottery_shares_converge_in_expectation():
+    """Seeded lottery over 4000 quanta lands within 15% of the 3:1 ticket
+    ratio — cheap probabilistic shares, deterministic under the seed."""
+    lot = LotteryFairness(seed=7)
+    lot.register("heavy", weight=3.0)
+    lot.register("light", weight=1.0)
+    for _ in range(4000):
+        winner = lot.select(["heavy", "light"])[0]
+        lot.charge(winner)
+    served = lot.snapshot()["served_steps"]
+    ratio = served["heavy"] / served["light"]
+    assert 2.55 <= ratio <= 3.45, f"lottery realized {ratio:.2f}"
+    # same seed, same sequence: reproducible
+    assert _replay_lottery(7, 50) == _replay_lottery(7, 50)
+    assert _replay_lottery(7, 200) != _replay_lottery(8, 200)
+
+
+def _replay_lottery(seed, n):
+    """Reference replay of the seeded lottery draw sequence."""
+    lot = LotteryFairness(seed=seed)
+    lot.register("heavy", weight=3.0)
+    lot.register("light", weight=1.0)
+    return [lot.select(["heavy", "light"])[0] for _ in range(n)]
+
+
+@pytest.mark.timeout(60)
+def test_make_fairness_specs_for_new_policies():
+    """Spec strings build the right policies with their parameters."""
+    assert isinstance(make_fairness("drr"), DeficitRoundRobinFairness)
+    assert make_fairness("drr:2.5")._quantum == pytest.approx(2.5)
+    assert isinstance(make_fairness("lottery"), LotteryFairness)
+    assert isinstance(make_fairness("lottery:42"), LotteryFairness)
+    with pytest.raises(ValueError):
+        make_fairness("bogus")
+    with pytest.raises(ValueError):
+        DeficitRoundRobinFairness(quantum=0.0)

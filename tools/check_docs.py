@@ -1,5 +1,5 @@
 #!/usr/bin/env python
-"""Docs gate (CI `docs` job): two checks, stdlib only.
+"""Docs gate (CI `docs` job): four checks, stdlib only.
 
 1. **Links** — every relative markdown link in README.md / DESIGN.md must
    resolve to a file or directory in the repo (anchors and absolute URLs
@@ -9,6 +9,16 @@
    ``repro.serving`` APIs (modules, public classes, public functions and
    methods) must be 100% docstring-covered.  Equivalent to an
    `interrogate` gate, without the dependency.
+3. **Export integrity** — every name in those packages' ``__all__`` must
+   resolve to a public, docstring-covered definition somewhere in the
+   package: exporting an undocumented (or vanished) symbol is a red
+   build, which is what extends the gate to each PR's new public surface
+   (``drr``/``lottery`` policies, ``unregister_model``, parking stats)
+   automatically.
+4. **Fairness registry** — every policy keyword registered in
+   ``fairness.FAIRNESS_POLICIES`` must be documented in the
+   ``make_fairness`` docstring AND mentioned in DESIGN.md, so a policy
+   cannot ship spec-string-only.
 
     python tools/check_docs.py
 """
@@ -83,8 +93,98 @@ def check_docstrings() -> tuple[list[str], int, int]:
     return missing, documented, total
 
 
+def _documented_names(d: str) -> set:
+    """Public, docstring-covered top-level class/function names across a
+    package directory (the namespace ``__all__`` may legally export)."""
+    names = set()
+    for path in sorted((ROOT / d).glob("*.py")):
+        tree = ast.parse(path.read_text())
+        for node in tree.body:
+            if isinstance(
+                node, (ast.ClassDef, ast.FunctionDef, ast.AsyncFunctionDef)
+            ) and not node.name.startswith("_") and ast.get_docstring(node):
+                names.add(node.name)
+            elif isinstance(node, ast.Assign):
+                # documented module constants count (e.g. a policy registry
+                # carrying its own `#:` comment is fine — AST can't see
+                # comments, so any public constant assignment qualifies)
+                for tgt in node.targets:
+                    if isinstance(tgt, ast.Name) and not tgt.id.startswith("_"):
+                        names.add(tgt.id)
+            elif isinstance(node, ast.AnnAssign) and isinstance(
+                node.target, ast.Name
+            ) and not node.target.id.startswith("_"):
+                names.add(node.target.id)
+    return names
+
+
+def _module_all(d: str) -> list:
+    """The literal ``__all__`` list of a package's ``__init__.py``."""
+    tree = ast.parse((ROOT / d / "__init__.py").read_text())
+    for node in tree.body:
+        if isinstance(node, ast.Assign):
+            for tgt in node.targets:
+                if isinstance(tgt, ast.Name) and tgt.id == "__all__":
+                    return list(ast.literal_eval(node.value))
+    return []
+
+
+def check_exports() -> list[str]:
+    """Every ``__all__`` export must be a documented public definition."""
+    errors = []
+    for d in API_DIRS:
+        known = _documented_names(d)
+        for name in _module_all(d):
+            if name not in known:
+                errors.append(
+                    f"{d}: __all__ exports {name!r} which is not a "
+                    f"documented public definition in the package"
+                )
+    return errors
+
+
+def _fairness_registry_keys() -> list[str]:
+    """Spec keywords from ``FAIRNESS_POLICIES`` in dispatch/fairness.py."""
+    tree = ast.parse((ROOT / "src/repro/dispatch/fairness.py").read_text())
+    for node in tree.body:
+        targets = []
+        if isinstance(node, ast.Assign):
+            targets = [t.id for t in node.targets if isinstance(t, ast.Name)]
+        elif isinstance(node, ast.AnnAssign) and isinstance(node.target, ast.Name):
+            targets = [node.target.id]
+        if "FAIRNESS_POLICIES" in targets and isinstance(node.value, ast.Dict):
+            return [
+                k.value for k in node.value.keys
+                if isinstance(k, ast.Constant) and isinstance(k.value, str)
+            ]
+    return []
+
+
+def check_fairness_registry() -> list[str]:
+    """Each registered policy keyword must be documented in the
+    ``make_fairness`` docstring and mentioned in DESIGN.md."""
+    errors = []
+    keys = _fairness_registry_keys()
+    if not keys:
+        return ["fairness.FAIRNESS_POLICIES registry not found"]
+    tree = ast.parse((ROOT / "src/repro/dispatch/fairness.py").read_text())
+    make_doc = ""
+    for node in tree.body:
+        if isinstance(node, ast.FunctionDef) and node.name == "make_fairness":
+            make_doc = ast.get_docstring(node) or ""
+    design = (ROOT / "DESIGN.md").read_text()
+    for key in keys:
+        if key not in make_doc:
+            errors.append(
+                f"fairness policy {key!r} missing from make_fairness docstring"
+            )
+        if key not in design:
+            errors.append(f"fairness policy {key!r} not mentioned in DESIGN.md")
+    return errors
+
+
 def main() -> int:
-    """Run both checks; non-zero exit (with a report) on any failure."""
+    """Run all four checks; non-zero exit (with a report) on any failure."""
     failures = check_links()
     missing, documented, total = check_docstrings()
     print(f"docstring coverage: {documented}/{total} "
@@ -92,12 +192,14 @@ def main() -> int:
           f"over {', '.join(API_DIRS)}")
     for qualname in missing:
         failures.append(f"missing docstring: {qualname}")
+    failures.extend(check_exports())
+    failures.extend(check_fairness_registry())
     if failures:
         print(f"\nFAIL ({len(failures)} problem(s)):")
         for f in failures:
             print(f"  - {f}")
         return 1
-    print("links OK, docstrings OK")
+    print("links OK, docstrings OK, exports OK, fairness registry OK")
     return 0
 
 
