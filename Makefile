@@ -1,7 +1,7 @@
 # Tier-1 verification (ROADMAP.md): must pass from a fresh checkout.
 PY ?= python
 
-.PHONY: test bench-dispatch bench-smoke serve-example docs-check
+.PHONY: test bench-dispatch bench-smoke trace-smoke serve-example docs-check
 
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
@@ -19,6 +19,13 @@ bench-dispatch:
 # timeout.
 bench-smoke:
 	PYTHONPATH=src $(PY) -m benchmarks.dispatch_bench --smoke
+
+# bench-smoke with the span tracer enabled: exports the Chrome trace and
+# exits non-zero if the JSON fails structural validation or records no
+# step spans (plus every bench-smoke gate above).
+trace-smoke:
+	PYTHONPATH=src $(PY) -m benchmarks.dispatch_bench --smoke \
+		--trace-out /tmp/repro-trace-smoke.json
 
 serve-example:
 	PYTHONPATH=src $(PY) examples/serve_llm.py --requests 8 --max-new 6

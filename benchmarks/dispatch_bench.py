@@ -1,6 +1,6 @@
 """Dispatch-layer benchmark: cache amortization + async multi-tenant serving.
 
-Six measurements backing ISSUE 1/2/3/4/5 acceptance criteria:
+Seven measurements backing ISSUE 1/2/3/4/5/6 acceptance criteria:
 
 1. **warm vs cold** — a cold ``AoTScheduler.schedule`` (trace + stream
    assignment + memory plan + XLA AOT compile) against a warm
@@ -33,10 +33,16 @@ Six measurements backing ISSUE 1/2/3/4/5 acceptance criteria:
    wakeups-per-grant ≤ 2 (per-worker parking — the old arbiter
    ``notify_all``-ed the pool per event), token-identical to the sync
    reference.
+7. **tracer overhead** — the 64-tenant pool workload run tracer-off vs
+   tracer-on (ISSUE 6 acceptance): enabled span recording must cost ≤5%
+   steps/s, and the exported Chrome trace must validate structurally and
+   show ≥2 pool workers with overlapping step spans.
 
     PYTHONPATH=src python -m benchmarks.dispatch_bench
     PYTHONPATH=src python -m benchmarks.dispatch_bench --smoke   # CI variant:
         # 64-tenant kilo_tenant_sparse reduction only, bounded runtime
+    PYTHONPATH=src python -m benchmarks.dispatch_bench --smoke \
+        --trace-out trace.json   # make trace-smoke: tracing on + validation
 """
 
 from __future__ import annotations
@@ -51,6 +57,7 @@ import jax
 import numpy as np
 
 import repro.configs as C
+import repro.obs as obs
 from repro.core import AoTScheduler
 from repro.dispatch import AsyncDispatcher, ScheduleCache
 from repro.models import init_model
@@ -538,6 +545,52 @@ def kilo_tenant_sparse(
     )]
 
 
+def tracer_overhead() -> list[tuple[str, float, str]]:
+    """ISSUE 6 acceptance: the span tracer's enabled-vs-disabled cost on
+    the pool-mode many-tenant workload (64 tenants, 2 hot, 4 workers) —
+    overhead must stay ≤5% steps/s — plus the trace itself: the exported
+    Chrome trace-event JSON must validate structurally and show ≥2 pool
+    workers with overlapping step spans (the visual form of the overlap
+    ``test_stepper_pool`` proves numerically)."""
+    cfg = dataclasses.replace(C.get(ARCHS[0], smoke=True), dtype="float32")
+    params, _ = init_model(jax.random.key(0), cfg)
+    cache = ScheduleCache(capacity=64)
+    # warm the shared executables once: both runs replay identical code
+    ServingEngine(cfg, params, max_slots=2, max_len=64,
+                  prompt_buckets=BUCKETS, schedule_cache=cache)
+    tracer = obs.get_tracer()
+    tracer.disable()
+    off = _many_tenant_run("pool", cfg, params, cache)
+    tracer.clear()
+    tracer.enable()
+    try:
+        on = _many_tenant_run("pool", cfg, params, cache)
+    finally:
+        tracer.disable()
+    events = tracer.drain()
+    trace = obs.to_chrome_trace(events)
+    errors = obs.validate_trace(trace)
+    workers, overlapped = obs.worker_overlap(trace)
+    overhead_pct = (
+        (off["steps_per_s"] - on["steps_per_s"]) / off["steps_per_s"] * 100
+        if off["steps_per_s"] else 0.0
+    )
+    identical = on["tokens"] == off["tokens"]
+    tracer.clear()
+    return [(
+        "dispatch/tracer_overhead",
+        on["wall"] / max(len(on["tokens"]), 1) * 1e6,
+        f"steps_per_s_off={off['steps_per_s']:.0f};"
+        f"steps_per_s_on={on['steps_per_s']:.0f};"
+        f"overhead_pct={overhead_pct:.1f};"
+        f"trace_events={len(events)};"
+        f"trace_valid={'yes' if not errors else 'NO'};"
+        f"workers={workers};"
+        f"overlap={'yes' if overlapped else 'NO'};"
+        f"identical={'yes' if identical else 'NO'}",
+    )]
+
+
 def smoke() -> list[tuple[str, float, str]]:
     """CI-sized reduction: the kilo-tenant measurement at 64 tenants
     (4 hot), tick engines only — no model compiles, bounded runtime.
@@ -613,6 +666,7 @@ def run() -> list[tuple[str, float, str]]:
     return (
         warm_vs_cold() + multi_tenant() + weighted_fairness()
         + parallel_stepping() + many_tenant_sparse() + kilo_tenant_sparse()
+        + tracer_overhead()
     )
 
 
@@ -620,11 +674,44 @@ if __name__ == "__main__":
     if len(sys.argv) >= 3 and sys.argv[1] == "--stepping-child":
         print(_stepping_child(sys.argv[2]))
     elif "--smoke" in sys.argv[1:]:
-        rows = smoke()
+        # --trace-out PATH: run the smoke workload with tracing on, export
+        # the Chrome trace, and gate its structural validity (make
+        # trace-smoke / CI).  Cross-worker overlap is NOT gated here: tick
+        # engines step in microseconds, so two workers mid-span at the
+        # same instant is timing luck — the full tracer_overhead row, on
+        # real engines, is where overlap is asserted.
+        trace_out = None
+        argv = sys.argv[1:]
+        if "--trace-out" in argv:
+            i = argv.index("--trace-out")
+            if i + 1 >= len(argv):
+                sys.exit("--trace-out needs a path")
+            trace_out = argv[i + 1]
+        tracer = obs.get_tracer()
+        if trace_out:
+            tracer.enable()
+        try:
+            rows = smoke()
+        finally:
+            tracer.disable()
         print("name,us_per_call,derived")
         for row in rows:
             print(",".join(str(x) for x in row))
         problems = smoke_gate(rows)
+        if trace_out:
+            trace = obs.write_chrome_trace(trace_out, tracer)
+            problems += [
+                f"trace: {e}" for e in obs.validate_trace(trace)
+            ]
+            spans = obs.step_spans(trace)
+            if not spans:
+                problems.append("trace contains no step spans")
+            st = tracer.stats()
+            print(
+                f"trace: {len(trace['traceEvents'])} events, "
+                f"{len(spans)} step spans, {st['threads']} threads, "
+                f"{st['dropped']} dropped -> {trace_out}"
+            )
         for p in problems:
             print(f"SMOKE GATE FAIL: {p}", file=sys.stderr)
         sys.exit(1 if problems else 0)

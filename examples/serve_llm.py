@@ -19,6 +19,14 @@ round-robin (proportional shares that overlap across workers),
 ``lottery`` (probabilistic shares), or token-rate quotas (tokens per
 wall-clock second).  ``--cache-budget-mb`` caps the reserved-arena bytes
 the shared schedule cache may hold (LRU entries are evicted past it).
+
+Observability (``repro.obs``): ``--trace-out trace.json`` records the
+whole run with the span tracer and exports Chrome trace-event JSON —
+open it at https://ui.perfetto.dev or chrome://tracing to see each
+worker's step spans and one async track per request.  ``--metrics-dump
+metrics.json`` (or ``.prom``) writes one unified registry snapshot —
+dispatcher + fairness + arbiter + schedule-cache series — as JSON or
+Prometheus text.
 """
 
 import argparse
@@ -30,6 +38,7 @@ import jax
 import numpy as np
 
 import repro.configs as C
+import repro.obs as obs
 from repro.dispatch import AsyncDispatcher, ScheduleCache
 from repro.models import init_model
 from repro.serving import ServingEngine
@@ -61,7 +70,17 @@ def main():
     ap.add_argument("--cache-budget-mb", type=float, default=0.0,
                     help="byte budget for the shared schedule cache "
                          "(0 = entry-count LRU only)")
+    ap.add_argument("--trace-out", default="",
+                    help="record the run and export Chrome trace-event / "
+                         "Perfetto JSON to this path")
+    ap.add_argument("--metrics-dump", default="",
+                    help="write one metrics-registry snapshot here "
+                         "(.prom suffix: Prometheus text; else JSON)")
     args = ap.parse_args()
+
+    tracer = obs.get_tracer()
+    if args.trace_out:
+        tracer.enable()
 
     spec = args.bucketing
     bucketing = (tuple(int(b) for b in spec.split(","))
@@ -114,6 +133,19 @@ def main():
         t_submitted = time.perf_counter() - t0
         done = [f.result(timeout=600) for f in futures]
         snap = dispatcher.snapshot()       # while steppers are still live
+        if args.metrics_dump:
+            # collected inside the with-block too: the arbiter series only
+            # exists while the steppers are live
+            registry = obs.MetricsRegistry()
+            obs.register_dispatch(registry, dispatcher)
+            obs.register_cache(registry, cache)
+            if args.trace_out:
+                obs.register_tracer(registry, tracer)
+            text = (registry.to_prometheus()
+                    if args.metrics_dump.endswith(".prom")
+                    else registry.to_json(indent=2))
+            with open(args.metrics_dump, "w") as f:
+                f.write(text)
     wall = time.perf_counter() - t0
     print(f"served {len(done)} requests over {len(models)} model(s) "
           f"in {wall:.2f}s (submit loop itself: {t_submitted*1e3:.1f}ms — "
@@ -146,6 +178,17 @@ def main():
     sample = done[0]
     print(f"sample [{sample.model}]: prompt[{len(sample.prompt)}] -> "
           f"{sample.generated}")
+    if args.trace_out:
+        tracer.disable()
+        trace = obs.write_chrome_trace(args.trace_out, tracer)
+        errors = obs.validate_trace(trace)
+        st = tracer.stats()
+        print(f"trace: {len(trace['traceEvents'])} events -> "
+              f"{args.trace_out} ({st['dropped']} dropped; open it at "
+              f"https://ui.perfetto.dev or chrome://tracing)"
+              + (f" — INVALID: {errors[:3]}" if errors else ""))
+    if args.metrics_dump:
+        print(f"metrics snapshot -> {args.metrics_dump}")
 
 
 if __name__ == "__main__":

@@ -77,6 +77,8 @@ from collections import deque
 from concurrent.futures import Future
 from typing import Any, Callable, Optional
 
+from repro.obs.tracer import get_tracer
+
 from .dispatcher import Dispatcher, DrainTimeoutError
 from .fairness import FairnessSpec
 from .metrics import DispatchMetrics
@@ -172,6 +174,7 @@ class _QuantumArbiter:
         pool_size: int = 0,
         tick: Optional[float] = None,
         clock: Callable[[], float] = time.monotonic,
+        tracer: Optional[Any] = None,
     ):
         if max_concurrent is not None and max_concurrent < 1:
             raise ValueError(
@@ -180,6 +183,7 @@ class _QuantumArbiter:
         self._disp = dispatcher
         self._max = max_concurrent
         self._metrics = metrics
+        self._tracer = tracer if tracer is not None else get_tracer()
         self._pool_size = pool_size          # 0: per-engine mode
         self._tick = self._FALLBACK_WAIT if tick is None else tick
         self._clock = clock
@@ -218,12 +222,16 @@ class _QuantumArbiter:
             self._waiting[lane] = slot
             self._pump_locked()
             timed = False
+            parked = False
             while slot.lane is None:
                 if self._closed or slot.evicted:
                     if self._waiting.get(lane) is slot:
                         del self._waiting[lane]
                         self._promote_ticker_locked()
                     return False
+                if not parked and self._tracer.enabled:
+                    parked = True
+                    self._tracer.instant("park", cat="arbiter", lane=lane)
                 slot.timed_wait = self._ticker_locked() is slot
                 expired = not slot.cv.wait(
                     self._tick if slot.timed_wait else None
@@ -232,9 +240,13 @@ class _QuantumArbiter:
                 timed = expired        # attribute the grant to ITS wakeup
                 if expired:
                     self.timed_wakeups += 1
+                    if self._tracer.enabled:
+                        self._tracer.instant("tick", cat="arbiter", lane=lane)
                     self._pump_locked()
             if timed:
                 self.timed_grants += 1
+            if parked and self._tracer.enabled:
+                self._tracer.instant("wake", cat="arbiter", lane=lane)
             return not self._closed
 
     def acquire_any(self) -> Optional[str]:
@@ -253,6 +265,10 @@ class _QuantumArbiter:
                         lane, slot.lane = slot.lane, None
                         if timed:
                             self.timed_grants += 1
+                        if self._tracer.enabled:
+                            self._tracer.instant(
+                                "wake", cat="arbiter", lane=lane
+                            )
                         return lane
                     lane = self._pick_locked(slot.since)
                     if lane is not None:
@@ -265,6 +281,8 @@ class _QuantumArbiter:
                     # cascades into waking the next worker, and the next)
                     if id(slot) not in self._parked:
                         self._parked[id(slot)] = slot
+                        if self._tracer.enabled:
+                            self._tracer.instant("park", cat="arbiter")
                     slot.timed_wait = self._ticker_locked() is slot
                     expired = not slot.cv.wait(
                         self._tick if slot.timed_wait else None
@@ -273,6 +291,17 @@ class _QuantumArbiter:
                     timed = expired    # attribute the grant to ITS wakeup
                     if expired:
                         self.timed_wakeups += 1
+                        if self._tracer.enabled:
+                            self._tracer.instant("tick", cat="arbiter")
+                        # the designated ticker is the one executor awake on
+                        # a wall-clock cadence, so it owns the idle-period
+                        # occupancy samples — without this, the series only
+                        # ever sees grant instants and a parked pool looks
+                        # exactly as busy as its last grant left it
+                        if self._pool_size and self._metrics is not None:
+                            self._metrics.on_pool_occupancy(
+                                len(self._inflight), self._pool_size
+                            )
                 return None
             finally:
                 # leaving for any reason (grant, close): free the parking
@@ -287,6 +316,11 @@ class _QuantumArbiter:
         directly to a parked executor when one is due."""
         with self._mu:
             self._inflight.discard(lane)
+            if self._tracer.enabled and self._pool_size:
+                self._tracer.counter(
+                    "pool_busy", len(self._inflight), cat="pool",
+                    series="busy",
+                )
             now = self._clock()
             self._last_event = now
             if lane in self._active:
@@ -412,6 +446,16 @@ class _QuantumArbiter:
             if self._pool_size:
                 self._metrics.on_pool_occupancy(
                     len(self._inflight), self._pool_size
+                )
+        if self._tracer.enabled:
+            self._tracer.instant(
+                "grant", cat="arbiter", lane=name,
+                args={"wait_s": max(0.0, now - since)},
+            )
+            if self._pool_size:
+                self._tracer.counter(
+                    "pool_busy", len(self._inflight), cat="pool",
+                    series="busy",
                 )
 
     def _pop_banked_locked(self) -> Optional[str]:
@@ -590,6 +634,7 @@ class AsyncDispatcher:
         stepping: str = "per-engine",
         max_concurrent_steps: Optional[int] = None,
         pool_size: Optional[int] = None,
+        tracer: Optional[Any] = None,
     ) -> None:
         if stepping not in ("per-engine", "single", "pool"):
             raise ValueError(
@@ -600,8 +645,11 @@ class AsyncDispatcher:
             raise ValueError(f"pool_size must be >= 1, got {pool_size}")
         if dispatcher is None:
             dispatcher = Dispatcher(
-                max_pending=max_pending, metrics=metrics, fairness=fairness
+                max_pending=max_pending, metrics=metrics, fairness=fairness,
+                tracer=tracer,
             )
+        elif tracer is not None:
+            dispatcher.tracer = tracer
         self.dispatcher = dispatcher
         self.idle_wait = idle_wait
         self.stepping = stepping
@@ -746,7 +794,7 @@ class AsyncDispatcher:
             if self.stepping == "per-engine":
                 self._arbiter = _QuantumArbiter(
                     self.dispatcher, self.max_concurrent_steps,
-                    metrics=self.metrics,
+                    metrics=self.metrics, tracer=self.dispatcher.tracer,
                 )
                 self.dispatcher.set_lane_event_hook(self._arbiter.notify_ready)
                 for name in names:
@@ -755,6 +803,7 @@ class AsyncDispatcher:
                 self._arbiter = _QuantumArbiter(
                     self.dispatcher, self.max_concurrent_steps,
                     metrics=self.metrics, pool_size=self.pool_size,
+                    tracer=self.dispatcher.tracer,
                 )
                 self.dispatcher.set_lane_event_hook(self._arbiter.notify_ready)
                 for i in range(self.pool_size):
@@ -1180,6 +1229,13 @@ class AsyncDispatcher:
                 self._cv.notify_all()
 
     def _fail(self, exc: BaseException) -> None:
+        tracer = self.dispatcher.tracer
+        if tracer.enabled:
+            # in-flight requests' async tracks stay open in the trace: the
+            # failure killed them mid-lifecycle, and the export shows it
+            tracer.instant(
+                "failed", cat="dispatch", args={"error": repr(exc)}
+            )
         with self._cv:
             self._error = exc
             victims, self._pending = self._pending, set()

@@ -38,6 +38,7 @@ from collections import OrderedDict
 from typing import Any, Callable, Optional
 
 from repro.core.aot import AoTScheduler, ScheduleKey, TaskSchedule
+from repro.obs.tracer import get_tracer
 
 
 @dataclasses.dataclass
@@ -156,6 +157,7 @@ class ScheduleCache:
         *,
         byte_budget: Optional[int] = None,
         scheduler: Optional[AoTScheduler] = None,
+        tracer: Optional[Any] = None,
     ) -> None:
         if capacity < 1:
             raise ValueError(f"capacity must be >= 1, got {capacity}")
@@ -164,6 +166,7 @@ class ScheduleCache:
         self.capacity = capacity
         self.byte_budget = byte_budget
         self.scheduler = scheduler or AoTScheduler()
+        self.tracer = tracer if tracer is not None else get_tracer()
         self.stats = CacheStats()
         self._entries: "OrderedDict[Any, _Entry]" = OrderedDict()
         self._bytes_total = 0                     # sum of entry arena_bytes
@@ -206,6 +209,9 @@ class ScheduleCache:
                 return None
             self._entries.move_to_end(key)
             self.stats.hits += 1
+            if self.tracer.enabled:
+                # no repr(key): hits are the hot path
+                self.tracer.instant("cache.hit", cat="cache")
             return entry.value
 
     def put(
@@ -247,6 +253,8 @@ class ScheduleCache:
             if entry is not None:
                 self._entries.move_to_end(key)
                 self.stats.hits += 1
+                if self.tracer.enabled:
+                    self.tracer.instant("cache.hit", cat="cache")
                 return entry.value
             self.stats.misses += 1
             lock = self._build_locks.setdefault(key, threading.Lock())
@@ -260,14 +268,30 @@ class ScheduleCache:
                     self._entries.move_to_end(key)
                     self.stats.hits += 1
                     self.stats.misses -= 1
+                    if self.tracer.enabled:
+                        self.tracer.instant("cache.hit", cat="cache")
                     return entry.value
             t0 = time.perf_counter()
             # on failure the per-key lock stays in _build_locks: waiters and
             # later callers coalesce on it for the retry.  Popping it here
             # would let a fresh caller mint a second lock and duplicate the
             # build a waiter is already retrying.
-            value = build()
+            try:
+                value = build()
+            except BaseException:
+                if self.tracer.enabled:
+                    self.tracer.instant(
+                        "cache.build_failed", cat="cache",
+                        args={"key": repr(key)},
+                    )
+                raise
             dt = time.perf_counter() - t0
+            if self.tracer.enabled:
+                # build spans are rare and slow; repr(key) is affordable
+                self.tracer.complete(
+                    "cache.build", t0, dt, cat="cache",
+                    args={"key": repr(key)},
+                )
             tid = threading.get_ident()
             # byte derivation (possible memory_analysis() backend call)
             # stays outside the map lock, like the build itself
@@ -366,6 +390,11 @@ class ScheduleCache:
             # the built value — it just isn't cached.
             self.stats.evictions += 1
             self.stats.bytes_evicted += entry.arena_bytes
+            if self.tracer.enabled:
+                self.tracer.instant(
+                    "cache.evict", cat="cache",
+                    args={"bytes": entry.arena_bytes, "oversized": True},
+                )
             return
         self._entries[key] = entry
         self._bytes_total += entry.arena_bytes
@@ -383,3 +412,8 @@ class ScheduleCache:
             self._bytes_total -= entry.arena_bytes
             self.stats.evictions += 1
             self.stats.bytes_evicted += entry.arena_bytes
+            if self.tracer.enabled:
+                self.tracer.instant(
+                    "cache.evict", cat="cache",
+                    args={"bytes": entry.arena_bytes},
+                )

@@ -61,6 +61,8 @@ from typing import Any, Callable, Optional
 
 import numpy as np
 
+from repro.obs.tracer import get_tracer
+
 from .fairness import FairnessSpec, make_fairness
 from .metrics import DispatchMetrics
 
@@ -113,11 +115,15 @@ class Dispatcher:
         metrics: Optional[DispatchMetrics] = None,
         fairness: FairnessSpec = None,
         completed_log: int = 4096,
+        tracer: Optional[Any] = None,
     ) -> None:
         if max_pending < 1:
             raise ValueError(f"max_pending must be >= 1, got {max_pending}")
         self.max_pending = max_pending
         self.metrics = metrics or DispatchMetrics()
+        # request-lifecycle span recorder (repro.obs); the process-wide
+        # default is disabled, so every emit below is one guarded branch
+        self.tracer = tracer if tracer is not None else get_tracer()
         self.fairness = make_fairness(fairness)
         self._lanes: dict[str, _Lane] = {}
         self._order: list[str] = []
@@ -351,6 +357,13 @@ class Dispatcher:
             with self._count_mu:
                 self._pending_count -= 1
             raise KeyError(f"model {lane.name!r} is being unregistered")
+        if self.tracer.enabled:
+            # one async track per request: opened here (rid is final and the
+            # request is durably queued), closed in _complete / _fail
+            self.tracer.async_begin("request", req.rid, lane=lane.name)
+            self.tracer.instant(
+                "queued", cat="request", lane=lane.name, rid=req.rid
+            )
         self._touch_ready(lane)
 
     def set_lane_event_hook(
@@ -538,6 +551,13 @@ class Dispatcher:
                 # duck-typed engine without token stats: charge a finished
                 # request's output in one burst at completion
                 tokens = sum(len(r.generated) for r in newly)
+            if self.tracer.enabled:
+                # span lands on the stepping thread's track — in pool mode
+                # that is what makes multi-worker overlap visible
+                self.tracer.complete(
+                    f"step:{name}", t0, dt, cat="step", lane=name,
+                    args={"tokens": tokens, "finished": len(newly)},
+                )
         with self._fair_mu:
             self.fairness.charge(name, steps=1, tokens=tokens)
         self.metrics.on_engine_step(name, dt, tokens=tokens)
@@ -554,6 +574,12 @@ class Dispatcher:
         """Account finished requests and fire their callbacks (no locks
         held — a slow or re-entrant callback cannot stall other lanes)."""
         for req in newly:
+            if self.tracer.enabled:
+                self.tracer.instant(
+                    "complete", cat="request", lane=name, rid=req.rid,
+                    args={"tokens": len(req.generated)},
+                )
+                self.tracer.async_end("request", req.rid, lane=name)
             self.metrics.observe_request(req)
             self.completed.append(req)
             if getattr(req, "_dispatcher_pending", False):

@@ -40,17 +40,24 @@ class LatencySeries:
     ``window`` bounds retention: percentiles are computed over the most
     recent observations (a deque ring, O(1) per record), so a long-running
     service reports current behavior instead of leaking memory linearly
-    with traffic."""
+    with traffic.  ``dropped`` counts observations the ring has evicted —
+    a windowed p95 over a series that has silently shed most of its
+    history is a different claim than one over everything recorded, and
+    the summary says which it is."""
 
     name: str
     values: Any = dataclasses.field(default_factory=list)
     window: int = 65536
+    dropped: int = 0
 
     def __post_init__(self) -> None:
         self.values = deque(self.values, maxlen=self.window)
 
     def record(self, seconds: float) -> None:
-        """Append one observation (in seconds)."""
+        """Append one observation (in seconds), counting the eviction when
+        the bounded window is already full."""
+        if len(self.values) == self.window:
+            self.dropped += 1
         self.values.append(float(seconds))
 
     @property
@@ -59,11 +66,13 @@ class LatencySeries:
         return len(self.values)
 
     def summary_ms(self) -> dict:
-        """Count/mean/p50/p90/p95/p99/max over the retained window, in ms."""
+        """Count/mean/p50/p90/p95/p99/max over the retained window (in ms),
+        plus ``dropped``: observations the window has evicted."""
         vals = np.asarray(self.values, dtype=np.float64) * 1e3
         if not len(vals):
             return {"count": 0, "mean": 0.0, "p50": 0.0, "p90": 0.0,
-                    "p95": 0.0, "p99": 0.0, "max": 0.0}
+                    "p95": 0.0, "p99": 0.0, "max": 0.0,
+                    "dropped": self.dropped}
         return {
             "count": int(len(vals)),
             "mean": float(vals.mean()),
@@ -72,6 +81,7 @@ class LatencySeries:
             "p95": percentile(vals, 95),
             "p99": percentile(vals, 99),
             "max": float(vals.max()),
+            "dropped": self.dropped,
         }
 
 
@@ -125,10 +135,14 @@ class DispatchMetrics:
         # pump): how much of the fleet is actually contending
         self._ready_sizes = deque(maxlen=8192)
         self._ready_peak = 0
+        self._ready_dropped = 0          # samples the bounded ring evicted
         # stepper-pool occupancy: busy-worker samples, recorded per grant
+        # and — so idle periods appear at all — per fallback tick by the
+        # arbiter's designated ticker
         self._pool_size = 0
         self._pool_busy = deque(maxlen=8192)
         self._pool_busy_peak = 0
+        self._pool_busy_dropped = 0      # samples the bounded ring evicted
         self._t_first_submit: Optional[float] = None
         self._t_last_done: Optional[float] = None
         self._mu = threading.Lock()
@@ -190,6 +204,8 @@ class DispatchMetrics:
         per granting pump): the number of lanes actually contending for
         quanta, as opposed to merely registered."""
         with self._mu:
+            if len(self._ready_sizes) == self._ready_sizes.maxlen:
+                self._ready_dropped += 1
             self._ready_sizes.append(int(size))
             if size > self._ready_peak:
                 self._ready_peak = int(size)
@@ -216,10 +232,14 @@ class DispatchMetrics:
     def on_pool_occupancy(self, busy: int, size: int) -> None:
         """Record one stepper-pool occupancy sample: ``busy`` of ``size``
         workers currently executing a granted quantum.  Sampled at each
-        grant, so the series tracks occupancy under load rather than idle
-        time."""
+        grant AND from the arbiter's designated ticker on every fallback
+        tick expiry, so the series reflects wall-clock occupancy — an idle
+        or parked pool shows up as zeros instead of freezing the series at
+        whatever the last grant recorded."""
         with self._mu:
             self._pool_size = size
+            if len(self._pool_busy) == self._pool_busy.maxlen:
+                self._pool_busy_dropped += 1
             self._pool_busy.append(int(busy))
             if busy > self._pool_busy_peak:
                 self._pool_busy_peak = int(busy)
@@ -297,6 +317,7 @@ class DispatchMetrics:
                     ),
                     "peak": self._ready_peak,
                     "samples": len(self._ready_sizes),
+                    "dropped": self._ready_dropped,
                 },
                 "engines": {
                     model: {
@@ -314,6 +335,7 @@ class DispatchMetrics:
                     "busy_mean": float(busy.mean()) if len(busy) else 0.0,
                     "busy_peak": self._pool_busy_peak,
                     "samples": int(len(busy)),
+                    "dropped": self._pool_busy_dropped,
                 }
         if cache_stats is not None:
             snap["schedule_cache"] = dict(cache_stats)

@@ -1,0 +1,62 @@
+"""Unified observability plane: spans, trace export, metrics registry.
+
+Three pieces, one import surface:
+
+* :mod:`repro.obs.tracer` — :class:`SpanTracer`, a lock-light per-thread
+  ring-buffer recorder for the request lifecycle (submit → queued →
+  granted → step → complete/failed), arbiter, cache, and pool events.
+  :func:`get_tracer` returns the process-wide default instance every
+  dispatch component falls back to.
+* :mod:`repro.obs.export` — Chrome trace-event / Perfetto JSON export
+  (:func:`to_chrome_trace` / :func:`write_chrome_trace`), structural
+  validation (:func:`validate_trace`), and overlap analysis helpers
+  (:func:`step_spans`, :func:`worker_overlap`).
+* :mod:`repro.obs.registry` — :class:`MetricsRegistry`, a typed
+  pull-based registry with JSON and Prometheus text exposition, plus
+  adapters (:func:`register_dispatch`, :func:`register_cache`,
+  :func:`register_tracer`) over the dispatch layer's snapshot dicts.
+
+This package imports nothing from :mod:`repro.dispatch` or
+:mod:`repro.serving` — those layers depend on this one, never the
+reverse.
+"""
+
+from .export import (
+    step_spans,
+    to_chrome_trace,
+    validate_trace,
+    worker_overlap,
+    write_chrome_trace,
+)
+from .registry import (
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    Sample,
+    register_cache,
+    register_dispatch,
+    register_tracer,
+    samples_from_dict,
+)
+from .tracer import SpanTracer, TraceEvent, get_tracer
+
+__all__ = [
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "Sample",
+    "SpanTracer",
+    "TraceEvent",
+    "get_tracer",
+    "register_cache",
+    "register_dispatch",
+    "register_tracer",
+    "samples_from_dict",
+    "step_spans",
+    "to_chrome_trace",
+    "validate_trace",
+    "worker_overlap",
+    "write_chrome_trace",
+]

@@ -31,6 +31,7 @@ from repro.dispatch.bucketing import BucketingPolicy, make_policy
 from repro.dispatch.cache import ScheduleCache
 from repro.models import decode_step, forward, init_cache, init_model
 from repro.models.transformer import encode_memory
+from repro.obs.tracer import get_tracer
 
 
 @dataclasses.dataclass
@@ -90,6 +91,7 @@ class ServingEngine:
         warmup: bool = True,
         greedy: bool = True,
         device: Any = None,
+        tracer: Any = None,
     ) -> None:
         if cfg.family in ("hybrid", "ssm"):
             raise NotImplementedError(
@@ -120,6 +122,7 @@ class ServingEngine:
         )
         self.greedy = greedy
         self.stats = EngineStats()
+        self.tracer = tracer if tracer is not None else get_tracer()
 
         # sealed-executable identity beyond arg shapes: anything that changes
         # the traced computation without changing input shapes.  The device
@@ -373,7 +376,14 @@ class ServingEngine:
                 self.params, jnp.asarray(padded), self.kv_cache,
                 jnp.int32(slot), jnp.int32(plen),
             )
-            self.stats.prefill_s += time.perf_counter() - t0
+            dt = time.perf_counter() - t0
+            self.stats.prefill_s += dt
+            if self.tracer.enabled:
+                # nests inside the dispatcher's step span (same thread)
+                self.tracer.complete(
+                    "prefill", t0, dt, cat="engine", rid=req.rid,
+                    args={"bucket": b},
+                )
             req.t_first = time.perf_counter()
             req.generated.append(int(nxt))
             self.stats.prefill_tokens += 1
@@ -414,7 +424,12 @@ class ServingEngine:
         nxt, self.kv_cache = self._decode(
             self.params, self.kv_cache, jnp.asarray(self._next_tok)
         )
-        self.stats.decode_s += time.perf_counter() - t0
+        dt = time.perf_counter() - t0
+        self.stats.decode_s += dt
+        if self.tracer.enabled:
+            self.tracer.complete(
+                "decode", t0, dt, cat="engine", args={"live": len(live)}
+            )
         self.stats.steps += 1
         nxt_np = np.asarray(nxt)
         for s in live:

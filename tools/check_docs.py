@@ -5,10 +5,10 @@
    resolve to a file or directory in the repo (anchors and absolute URLs
    are skipped).  Docs that point at moved files rot silently; this makes
    the rot a red build instead.
-2. **Docstring coverage** — the public ``repro.dispatch`` and
-   ``repro.serving`` APIs (modules, public classes, public functions and
-   methods) must be 100% docstring-covered.  Equivalent to an
-   `interrogate` gate, without the dependency.
+2. **Docstring coverage** — the public ``repro.dispatch``,
+   ``repro.serving``, and ``repro.obs`` APIs (modules, public classes,
+   public functions and methods) must be 100% docstring-covered.
+   Equivalent to an `interrogate` gate, without the dependency.
 3. **Export integrity** — every name in those packages' ``__all__`` must
    resolve to a public, docstring-covered definition somewhere in the
    package: exporting an undocumented (or vanished) symbol is a red
@@ -32,7 +32,7 @@ from pathlib import Path
 
 ROOT = Path(__file__).resolve().parent.parent
 DOC_FILES = ("README.md", "DESIGN.md")
-API_DIRS = ("src/repro/dispatch", "src/repro/serving")
+API_DIRS = ("src/repro/dispatch", "src/repro/serving", "src/repro/obs")
 LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
 
