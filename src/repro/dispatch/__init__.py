@@ -17,12 +17,22 @@ the ``charge``/submit event, not a poll tick) — behind a future-returning
 ``submit``; and :mod:`metrics` reports latency/throughput/cache numbers
 down to per-engine step, grant-latency, and pool-occupancy series.
 
+Cross-tenant batched decode (:mod:`batching`): hand the dispatcher a
+:class:`BatchComposer` and lanes whose engines agree on a compatibility
+key (same config, weights, device, slots, bucketing — witnessed by
+``ServingEngine.compose_key()``) coalesce into a :class:`ComposeGroup`
+sharing one host engine: one sealed decode step then serves every
+member's sequences at once with per-slot tenancy, freed slots refill
+from member queues in fairness order, and the policy is charged per
+tenant by token share (``FairnessPolicy.charge_composed``).
+
 Thread-safety: every class exported here is safe to use from multiple
 threads; see DESIGN.md §locking-contract for exactly which lock protects
 what and the ordering that keeps the whole layer deadlock-free.
 """
 
 from .async_dispatcher import AsyncDispatcher
+from .batching import BatchComposer, ComposeGroup
 from .bucketing import (
     BucketingPolicy,
     ExactBucketing,
@@ -48,6 +58,7 @@ __all__ = [
     "BucketingPolicy", "ExactBucketing", "ExplicitBuckets",
     "PowerOfTwoBuckets", "make_policy",
     "CacheStats", "ScheduleCache",
+    "BatchComposer", "ComposeGroup",
     "Dispatcher", "AsyncDispatcher", "QueueFullError", "DrainTimeoutError",
     "FairnessPolicy", "RoundRobinFairness", "WeightedFairness",
     "DeficitRoundRobinFairness", "LotteryFairness",

@@ -203,6 +203,8 @@ class _QuantumArbiter:
         self.timed_grants = 0                # grants the fallback tick served
         self.notify_wakeups = 0              # targeted notifies (hand-off/promote)
         self.pump_cpu_s = 0.0                # CPU seconds spent selecting/granting
+        self.group_grants = 0                # grants widened to a compose group
+        self.co_grants = 0                   # co-member quanta claimed alongside
 
     # -- executor-facing ---------------------------------------------------
 
@@ -310,6 +312,52 @@ class _QuantumArbiter:
                     del self._parked[id(slot)]
                     self._promote_ticker_locked()
 
+    def acquire_group(self, lane: str, members: list) -> list:
+        """Widen ``lane``'s already-held grant to its compose group: claim
+        every co-member that is active and not already granted, so ONE
+        worker drives the composed step on behalf of all of them and no
+        second worker can be granted a co-member mid-step.  Returns the
+        claimed lane list (``lane`` first) for :meth:`release_group`.
+        Non-blocking — co-members that are inactive or already executing
+        are simply not claimed (their work is still served by the
+        composed step; their own grants, if any, find an empty lane)."""
+        with self._mu:
+            claimed = [lane]
+            for m in members:
+                if m == lane or m in self._inflight or m not in self._active:
+                    continue
+                self._inflight.add(m)
+                self._ready_since.pop(m, None)
+                self.co_grants += 1
+                claimed.append(m)
+            if len(claimed) > 1:
+                self.group_grants += 1
+                claimed_set = set(claimed)
+                if self._granted_q:
+                    # a banked grant for a claimed lane must not leak to
+                    # another worker while the composed step runs
+                    self._granted_q = deque(
+                        n for n in self._granted_q if n not in claimed_set
+                    )
+            return claimed
+
+    def release_group(self, lanes: list) -> None:
+        """Return a group grant (:meth:`acquire_group`'s claim list): all
+        claimed quanta free at once, then one pump re-grants."""
+        with self._mu:
+            now = self._clock()
+            self._last_event = now
+            for lane in lanes:
+                self._inflight.discard(lane)
+                if lane in self._active:
+                    self._ready_since.setdefault(lane, now)
+            if self._tracer.enabled and self._pool_size:
+                self._tracer.counter(
+                    "pool_busy", len(self._inflight), cat="pool",
+                    series="busy",
+                )
+            self._pump_locked()
+
     def release(self, lane: str) -> None:
         """Return ``lane``'s grant (its engine step finished, fairness
         already charged): the freed quantum is re-granted immediately,
@@ -396,6 +444,8 @@ class _QuantumArbiter:
                 "ready": len(self._active),
                 "queued_grants": len(self._granted_q),
                 "pump_cpu_s": self.pump_cpu_s,
+                "group_grants": self.group_grants,
+                "co_grants": self.co_grants,
             }
 
     # -- grant machinery (all under _mu) -----------------------------------
@@ -635,6 +685,7 @@ class AsyncDispatcher:
         max_concurrent_steps: Optional[int] = None,
         pool_size: Optional[int] = None,
         tracer: Optional[Any] = None,
+        composer: Optional[Any] = None,
     ) -> None:
         if stepping not in ("per-engine", "single", "pool"):
             raise ValueError(
@@ -646,10 +697,13 @@ class AsyncDispatcher:
         if dispatcher is None:
             dispatcher = Dispatcher(
                 max_pending=max_pending, metrics=metrics, fairness=fairness,
-                tracer=tracer,
+                tracer=tracer, composer=composer,
             )
-        elif tracer is not None:
-            dispatcher.tracer = tracer
+        else:
+            if tracer is not None:
+                dispatcher.tracer = tracer
+            if composer is not None:
+                dispatcher.composer = composer
         self.dispatcher = dispatcher
         self.idle_wait = idle_wait
         self.stepping = stepping
@@ -1113,6 +1167,25 @@ class AsyncDispatcher:
         with self._cv:
             return self._stop_flag or self._error is not None
 
+    def _co_claim(self, arbiter: _QuantumArbiter, lane: str) -> list:
+        # widen a held grant to the lane's compose group (no-op for
+        # uncomposed lanes): the returned claim list rides the release=
+        # callback so all quanta free together after the shared step
+        comp = self.dispatcher.composer
+        if comp is None:
+            return [lane]
+        members = comp.members(lane)
+        if len(members) <= 1:
+            return [lane]
+        return arbiter.acquire_group(lane, members)
+
+    @staticmethod
+    def _release_claimed(arbiter: _QuantumArbiter, claimed: list) -> None:
+        if len(claimed) > 1:
+            arbiter.release_group(claimed)
+        else:
+            arbiter.release(claimed[0])
+
     def _run_lane(self, name: str) -> None:
         """Per-engine stepper: pull quanta for one lane through the
         arbiter; never touches any other lane's engine.  Exits on shutdown
@@ -1146,16 +1219,20 @@ class AsyncDispatcher:
                 self._busy.add(name)
             if not arbiter.acquire(name):
                 continue                        # closed: re-check exit flags
+            # composed lane: widen the grant to the whole group so this
+            # stepper drives ONE shared step for every co-member
+            claimed = self._co_claim(arbiter, name)
             try:
                 # the grant is returned via release= BEFORE completion
                 # callbacks run, so a slow user callback never holds a
                 # scheduling quantum hostage; releasing twice on the error
                 # path is a harmless set-discard
                 self.dispatcher.step_lane(
-                    name, release=lambda: arbiter.release(name)
+                    name,
+                    release=lambda: self._release_claimed(arbiter, claimed),
                 )
             except BaseException as exc:  # noqa: BLE001 - fail all futures
-                arbiter.release(name)
+                self._release_claimed(arbiter, claimed)
                 self._fail(exc)
                 return
             with self._cv:
@@ -1178,16 +1255,20 @@ class AsyncDispatcher:
             lane = arbiter.acquire_any()
             if lane is None:
                 continue                    # closed: re-check exit flags
+            # composed lane: claim the co-members too — one worker, one
+            # shared step, no second worker granted a co-member mid-step
+            claimed = self._co_claim(arbiter, lane)
             with self._cv:
-                self._busy.add(lane)
+                self._busy.update(claimed)
             try:
                 # grant returned before completion callbacks (release=), so
                 # a slow user callback never holds a scheduling quantum
                 self.dispatcher.step_lane(
-                    lane, release=lambda: arbiter.release(lane)
+                    lane,
+                    release=lambda: self._release_claimed(arbiter, claimed),
                 )
             except BaseException as exc:  # noqa: BLE001 - fail all futures
-                arbiter.release(lane)
+                self._release_claimed(arbiter, claimed)
                 self._fail(exc)
                 return
             with self._cv:
@@ -1198,8 +1279,12 @@ class AsyncDispatcher:
                 # drain/stop wait for, and every other quantum boundary
                 # has nothing to tell them (drain also re-polls on
                 # idle_wait, so a skipped notify costs at most one poll)
-                if not self.dispatcher.lane_active(lane):
-                    self._busy.discard(lane)
+                drained = False
+                for member in claimed:
+                    if not self.dispatcher.lane_active(member):
+                        self._busy.discard(member)
+                        drained = True
+                if drained:
                     self._cv.notify_all()
 
     def _run_single(self, label: str) -> None:

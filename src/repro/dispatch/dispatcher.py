@@ -49,7 +49,12 @@ Lock order: ``step_mu → queue_mu`` and ``step_mu → _fair_mu`` are the only
 dispatcher-internal nestings; ``_reg_mu`` and ``_count_mu`` never nest
 with anything.  ``_ready_mu`` is taken before the arbiter's lock (the
 hook runs under it) and never after any dispatcher lock that the hook's
-consumers take.  Completion callbacks run OUTSIDE all dispatcher locks.
+consumers take.  With a batch composer attached, a compose group's
+``step_mu`` stands in for its member lanes' step locks (``group.step_mu →
+queue_mu → _ready_mu`` via the engine submit hook is the one new nesting;
+nothing under ``_ready_mu`` takes a lane lock, so the order is acyclic),
+and the composer's own mutex is a leaf.  Completion callbacks run OUTSIDE
+all dispatcher locks.
 """
 
 from __future__ import annotations
@@ -116,11 +121,15 @@ class Dispatcher:
         fairness: FairnessSpec = None,
         completed_log: int = 4096,
         tracer: Optional[Any] = None,
+        composer: Optional[Any] = None,
     ) -> None:
         if max_pending < 1:
             raise ValueError(f"max_pending must be >= 1, got {max_pending}")
         self.max_pending = max_pending
         self.metrics = metrics or DispatchMetrics()
+        # cross-tenant batch composer (repro.dispatch.batching): when set,
+        # compatible lanes share one host engine and step via step_group
+        self.composer = composer
         # request-lifecycle span recorder (repro.obs); the process-wide
         # default is disabled, so every emit below is one guarded branch
         self.tracer = tracer if tracer is not None else get_tracer()
@@ -176,6 +185,14 @@ class Dispatcher:
         with self._fair_mu:
             self.fairness.register(name, weight=weight)
         self.metrics.track_engine(name)   # lift any unregister tombstone
+        if self.composer is not None:
+            self.composer.add_lane(name, engine)
+        # engine-side submit hook: direct engine.submit() work becomes
+        # visible to the indexed ready set (and thus to pool grants and
+        # the composer's refill path) instead of only to the sync walk
+        set_hook = getattr(engine, "set_submit_hook", None)
+        if set_hook is not None:
+            set_hook(self._engine_submit_hook(name))
         return engine
 
     def unregister_model(self, name: str, *, max_steps: int = 100_000) -> Any:
@@ -195,16 +212,31 @@ class Dispatcher:
         hook (``ServingEngine`` does), it is invoked last.
         """
         lane = self._lane(name)
+        if self.composer is not None:
+            # a retiring HOST lane disbands its group: refill pauses for
+            # the survivors so the drain loop below can run the host dry
+            self.composer.begin_retire(name)
         with lane.queue_mu:
             lane.retired = True
         for _ in range(max_steps):
-            if not (lane.queue or not lane.engine.idle):
+            if not (
+                lane.queue
+                or not lane.engine.idle
+                or self._composed_busy(name)
+            ):
                 break
             self.step_lane(name)
         else:
             raise DrainTimeoutError(
                 f"unregister exhausted {max_steps} steps draining {name!r}"
             )
+        if self.composer is not None:
+            # host drained (or member emptied): leave the group; survivors
+            # of a dissolved group re-form around a fresh host
+            self.composer.finish_retire(name)
+        set_hook = getattr(lane.engine, "set_submit_hook", None)
+        if set_hook is not None:
+            set_hook(None)
         # retire from the ready index (delta: the arbiter drops the lane
         # from its mirror, ready stamps, and queued grants) BEFORE the
         # registry removal, so no new grant can form for a vanishing lane
@@ -407,7 +439,11 @@ class Dispatcher:
         mutex, which profiling showed was the grant path's largest
         remaining contention cost."""
         with self._ready_mu:
-            active = bool(lane.queue) or not lane.engine.idle
+            active = (
+                bool(lane.queue)
+                or not lane.engine.idle
+                or self._composed_busy(lane.name)
+            )
             was = lane.name in self._active_set
             if active and not was:
                 self._active_set.add(lane.name)
@@ -450,7 +486,28 @@ class Dispatcher:
         lane = self._lane_or_none(name)
         if lane is None:
             return False
-        return bool(lane.queue) or not lane.engine.idle
+        return (
+            bool(lane.queue)
+            or not lane.engine.idle
+            or self._composed_busy(name)
+        )
+
+    def _composed_busy(self, name: str) -> bool:
+        # a composed member's in-flight work lives in its group's HOST
+        # engine, invisible to the lane's own engine.idle — this is the
+        # extra activity term every readiness check needs
+        comp = self.composer
+        return comp is not None and comp.lane_busy(name)
+
+    def _engine_submit_hook(self, name: str) -> Callable[[], None]:
+        # fired by the engine inside submit() (under no engine lock that
+        # we re-enter); recomputing readiness here is what makes direct
+        # engine.submit() traffic reach the indexed ready set
+        def hook() -> None:
+            lane = self._lane_or_none(name)
+            if lane is not None:
+                self._touch_ready(lane)
+        return hook
 
     def _active(self) -> list[str]:
         # sync-path truth walk (one pass over every lane): kept for
@@ -459,7 +516,9 @@ class Dispatcher:
         # never calls this — it mirrors the O(active) indexed set instead.
         return [
             lane.name for lane in self._lanes_snapshot()
-            if lane.queue or not lane.engine.idle
+            if lane.queue
+            or not lane.engine.idle
+            or self._composed_busy(lane.name)
         ]
 
     def active_lanes(self) -> list[str]:
@@ -525,7 +584,20 @@ class Dispatcher:
         dispatcher lock.  A lane unregistered between grant and step is a
         no-op quantum (``release`` still runs) — never an error on the
         stepping thread.
+
+        A lane composed into a :class:`~repro.dispatch.batching.ComposeGroup`
+        delegates its quantum to :meth:`step_group` — the host engine is
+        then only ever stepped under the group's step lock, which is what
+        keeps the single-stepper contract intact with N lanes sharing it.
         """
+        comp = self.composer
+        if comp is not None and comp.group_of(name) is not None:
+            return self.step_group(name, release=release)
+        return self._step_lane_solo(name, release=release)
+
+    def _step_lane_solo(
+        self, name: str, *, release: Optional[Callable[[], None]] = None
+    ) -> list:
         lane = self._lane_or_none(name)
         if lane is None:
             # unregistered while a grant was in flight: return the quantum
@@ -570,6 +642,176 @@ class Dispatcher:
         self._complete(name, newly)
         return newly
 
+    def step_group(
+        self, name: str, *, release: Optional[Callable[[], None]] = None
+    ) -> list:
+        """One COMPOSED scheduling quantum: step the host engine of
+        ``name``'s compose group, serving every member's in-flight
+        sequences in one batched decode; returns all finished requests
+        (any member's).
+
+        The quantum, under the group's step lock (never the host lane's —
+        one stepper in the host at a time, whoever's grant arrived):
+
+        1. **refill** — freed host slots are seated from member lane
+           queues in fairness-policy order (``peek_ready`` over the
+           group's members), falling back to join order when the policy
+           holds for a lane with nothing queued (work conservation beats
+           an idle slot);
+        2. **step** — one ``host.step()``: one sealed decode step serving
+           N tenants;
+        3. **attribute** — per-lane token deltas are measured per slot
+           (each seated request knows its owner), the fairness policy is
+           charged via ``charge_composed`` (the step splits by token
+           share; tokens charge in full), composer metrics record
+           occupancy/coalescing, and a ``composed:<host>`` span plus
+           per-tenant share instants land in the trace;
+        4. member engines holding DIRECT submissions (work seated outside
+           the dispatcher) are stepped too — their KV lives in their own
+           engine, not the host.
+
+        Ready-index transitions for every member fire before ``release``;
+        completion callbacks run last, outside all locks, routed per
+        request owner.  A group dissolved between grant and step falls
+        back to a solo quantum.
+        """
+        comp = self.composer
+        group = comp.group_of(name) if comp is not None else None
+        if group is None:
+            return self._step_lane_solo(name, release=release)
+        with group.step_mu:
+            host = group.host
+            members = comp.members(name)
+            if not members:
+                members = [name]
+            retiring = group.retiring
+            refill_from = [retiring] if retiring is not None else members
+            self._refill_group(group, members, refill_from)
+            # pre-step snapshot of every request that can emit tokens this
+            # step: seated slots plus engine-queued admissions
+            before = [
+                (req, len(req.generated))
+                for req in list(getattr(host, "slots", ()))
+                + list(getattr(host, "queue", ()))
+                if req is not None
+            ]
+            t0 = time.perf_counter()
+            newly = list(host.step())
+            dt = time.perf_counter() - t0
+            tokens_by_lane: dict[str, int] = {}
+            for req, n0 in before:
+                d = len(req.generated) - n0
+                if d > 0:
+                    owner = getattr(req, "model", "") or group.host_lane
+                    tokens_by_lane[owner] = tokens_by_lane.get(owner, 0) + d
+            occupied = sum(
+                1 for s in getattr(host, "slots", ()) if s is not None
+            )
+            occupied += sum(
+                1 for r in newly if getattr(r, "error", None) is None
+            )
+            capacity = len(getattr(host, "slots", ()))
+            if self.tracer.enabled:
+                # one decode span for the shared step, fanning out to
+                # per-tenant share instants (cat="composer")
+                self.tracer.complete(
+                    f"composed:{group.host_lane}", t0, dt, cat="step",
+                    lane=group.host_lane,
+                    args={
+                        "lanes": len(tokens_by_lane),
+                        "occupied": occupied,
+                        "finished": len(newly),
+                    },
+                )
+                for owner, toks in tokens_by_lane.items():
+                    self.tracer.instant(
+                        "composed_share", cat="composer", lane=owner,
+                        args={"tokens": toks},
+                    )
+            # escape hatch: direct engine.submit() work lives in the
+            # member's OWN engine (its KV is there) — step it alongside
+            for m in members:
+                if m == group.host_lane:
+                    continue
+                lane_m = self._lane_or_none(m)
+                if lane_m is None or lane_m.engine.idle:
+                    continue
+                eng = lane_m.engine
+                with lane_m.step_mu:
+                    mb = [
+                        (r, len(r.generated))
+                        for r in list(getattr(eng, "slots", ()))
+                        + list(getattr(eng, "queue", ()))
+                        if r is not None
+                    ]
+                    newly.extend(eng.step())
+                d = sum(len(r.generated) - n0 for r, n0 in mb)
+                if d > 0:
+                    tokens_by_lane[m] = tokens_by_lane.get(m, 0) + d
+        if tokens_by_lane:
+            with self._fair_mu:
+                try:
+                    self.fairness.charge_composed(tokens_by_lane)
+                except KeyError:
+                    pass   # a lane mid-(un)register: skip the charge
+            for owner, toks in tokens_by_lane.items():
+                # per-engine series keep per-tenant visibility; composed
+                # steps appear in every occupant's series with the shared
+                # step's wall time
+                self.metrics.on_engine_step(owner, dt, tokens=toks)
+        if occupied or tokens_by_lane:
+            self.metrics.on_composed_step(
+                dt, occupied=occupied, capacity=capacity,
+                tokens_by_lane=tokens_by_lane,
+            )
+        for m in members:
+            lane_m = self._lane_or_none(m)
+            if lane_m is not None:
+                self._touch_ready(lane_m)
+        if release is not None:
+            release()
+        by_owner: dict[str, list] = {}
+        for req in newly:
+            owner = getattr(req, "model", "") or group.host_lane
+            by_owner.setdefault(owner, []).append(req)
+        for owner, reqs in by_owner.items():
+            self._complete(owner, reqs)
+        return newly
+
+    def _refill_group(self, group: Any, members: list, refill_from: list) -> None:
+        """Seat freed host slots from member lane queues, one seat per
+        fairness pick (called under the group's step lock).  ``refill_from``
+        restricts donors during a disband drain."""
+        host = group.host
+        lanes: dict[str, _Lane] = {}
+        for m in refill_from:
+            lane = self._lane_or_none(m)
+            if lane is not None and lane.queue:
+                lanes[m] = lane
+        while lanes and host.free_slots() > 0:
+            queued = [m for m in members if m in lanes]
+            live = set(group.occupancy())
+            active = [m for m in members if m in lanes or m in live]
+            with self._fair_mu:
+                try:
+                    picks = self.fairness.peek_ready(active, queued)
+                except KeyError:
+                    picks = []
+            pick = next((p for p in picks if p in lanes), None)
+            if pick is None:
+                # the policy held its quantum for a lane with nothing
+                # queued: seat in join order rather than idle a slot
+                pick = queued[0]
+            lane = lanes[pick]
+            with lane.queue_mu:
+                req = lane.queue.popleft() if lane.queue else None
+            if req is None:
+                del lanes[pick]
+                continue
+            host.submit(req)
+            if not lane.queue:
+                del lanes[pick]
+
     def _complete(self, name: str, newly: list) -> None:
         """Account finished requests and fire their callbacks (no locks
         held — a slow or re-entrant callback cannot stall other lanes)."""
@@ -613,7 +855,16 @@ class Dispatcher:
                 # consistent registry + policy state
                 order = []
         finished = []
+        served_groups: set[int] = set()
         for name in order:
+            comp = self.composer
+            group = comp.group_of(name) if comp is not None else None
+            if group is not None:
+                # one composed step serves every member: don't re-step the
+                # shared host once per member in the same quantum
+                if id(group) in served_groups:
+                    continue
+                served_groups.add(id(group))
             finished.extend(self.step_lane(name))
         return finished
 
@@ -663,4 +914,6 @@ class Dispatcher:
             snap["ready_lanes"] = len(self._active_set)
         with self._fair_mu:
             snap["fairness"] = self.fairness.snapshot()
+        if self.composer is not None:
+            snap["compose_groups"] = self.composer.snapshot()
         return snap

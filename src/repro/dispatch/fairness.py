@@ -78,8 +78,35 @@ class FairnessPolicy:
         """
         raise NotImplementedError
 
-    def charge(self, lane: str, *, steps: int = 1, tokens: int = 0) -> None:
-        """Account actual consumption after ``lane`` was served."""
+    def charge(self, lane: str, *, steps: float = 1, tokens: int = 0) -> None:
+        """Account actual consumption after ``lane`` was served.
+
+        ``steps`` may be fractional: a composed (cross-tenant batched)
+        decode step is ONE device step shared by several lanes, and
+        :meth:`charge_composed` splits it by slot share — charging every
+        tenant a whole step for a shared step would bill the group N×
+        the hardware it used."""
+
+    def charge_composed(
+        self, tokens_by_lane: Mapping[str, int], *, steps: float = 1.0
+    ) -> None:
+        """Account one shared (composed) step across its occupant lanes.
+
+        ``tokens_by_lane`` maps each lane to the tokens its slots produced
+        in the shared step; ``steps`` is the device-step cost of the whole
+        composed quantum (normally 1).  The default splits ``steps``
+        proportionally to each lane's token share — a tenant occupying 3
+        of 4 live slots pays 3/4 of the step — and delegates to
+        :meth:`charge` per lane, so every policy's existing accounting
+        (stride passes, DRR deficits, quota debits) prices shared steps
+        correctly without policy-specific code."""
+        total = sum(tokens_by_lane.values())
+        for lane, toks in tokens_by_lane.items():
+            if total > 0:
+                share = toks / total
+            else:
+                share = 1.0 / max(len(tokens_by_lane), 1)
+            self.charge(lane, steps=steps * share, tokens=toks)
 
     def peek_ready(self, active: Sequence[str], ready: Sequence[str]) -> list[str]:
         """Grantable lanes for an event-driven arbiter, in policy order.
@@ -127,7 +154,7 @@ class RoundRobinFairness(FairnessPolicy):
         self._turn += 1
         return list(active[k:]) + list(active[:k])
 
-    def charge(self, lane: str, *, steps: int = 1, tokens: int = 0) -> None:
+    def charge(self, lane: str, *, steps: float = 1, tokens: int = 0) -> None:
         """Count served quanta (rotation itself needs no accounting).
         Unknown lanes are ignored — a straggler step racing an unregister
         must not resurrect the lane's counters."""
@@ -204,7 +231,7 @@ class WeightedFairness(FairnessPolicy):
         rank = {lane: i for i, lane in enumerate(self._order)}
         return [min(active, key=lambda l: (self._pass[l], rank[l]))]
 
-    def charge(self, lane: str, *, steps: int = 1, tokens: int = 0) -> None:
+    def charge(self, lane: str, *, steps: float = 1, tokens: int = 0) -> None:
         """Advance ``lane``'s pass by ``steps``/weight (stride update).
         Unknown lanes (a straggler step racing an unregister) are
         ignored."""
@@ -308,7 +335,7 @@ class QuotaFairness(FairnessPolicy):
             return [max(active, key=lambda l: self._budget[l])]
         return []
 
-    def charge(self, lane: str, *, steps: int = 1, tokens: int = 0) -> None:
+    def charge(self, lane: str, *, steps: float = 1, tokens: int = 0) -> None:
         """Debit ``lane``'s bucket by the tokens it actually produced.
         Unknown lanes (a straggler step racing an unregister) are
         ignored."""
@@ -452,7 +479,7 @@ class DeficitRoundRobinFairness(FairnessPolicy):
         rank = {lane: i for i, lane in enumerate(self._order)}
         return sorted(funded, key=lambda l: rank[l])
 
-    def charge(self, lane: str, *, steps: int = 1, tokens: int = 0) -> None:
+    def charge(self, lane: str, *, steps: float = 1, tokens: int = 0) -> None:
         """Debit ``lane``'s deficit one credit per served quantum.
         Unknown lanes (a straggler step racing an unregister) are
         ignored."""
@@ -524,7 +551,7 @@ class LotteryFairness(FairnessPolicy):
             return []
         return self._draw(ready)
 
-    def charge(self, lane: str, *, steps: int = 1, tokens: int = 0) -> None:
+    def charge(self, lane: str, *, steps: float = 1, tokens: int = 0) -> None:
         """Count served quanta (the lottery itself is stateless).
         Unknown lanes (a straggler step racing an unregister) are
         ignored."""

@@ -120,6 +120,8 @@ class DispatchMetrics:
         self.requests_done = 0
         self.tokens_out = 0
         self.rejected = 0                             # backpressure refusals
+        self.truncated = 0           # finished early: context window filled
+        self.failed = 0              # completed with error (never served)
         self._engines: dict = {}                      # model -> _EngineSeries
         self._dropped: set = set()                    # unregistered tombstones
         # quantum-grant latency: lane became grantable -> arbiter granted it
@@ -143,6 +145,18 @@ class DispatchMetrics:
         self._pool_busy = deque(maxlen=8192)
         self._pool_busy_peak = 0
         self._pool_busy_dropped = 0      # samples the bounded ring evicted
+        # batch-composer series: shared cross-tenant decode steps — how
+        # full the shared batch ran (slot occupancy), how often a step
+        # actually served >1 tenant (coalesce rate), and each tenant's
+        # token share of the composed traffic
+        self._comp_steps = 0
+        self._comp_coalesced = 0         # composed steps serving >= 2 lanes
+        self._comp_capacity = 0
+        self._comp_occ = deque(maxlen=8192)
+        self._comp_occ_peak = 0
+        self._comp_occ_dropped = 0
+        self._comp_lane_tokens: dict = {}
+        self.composed_step_latency = LatencySeries("composed_step", window=8192)
         self._t_first_submit: Optional[float] = None
         self._t_last_done: Optional[float] = None
         self._mu = threading.Lock()
@@ -219,6 +233,7 @@ class DispatchMetrics:
         :meth:`track_engine` lifts the tombstone on re-registration."""
         with self._mu:
             self._engines.pop(model, None)
+            self._comp_lane_tokens.pop(model, None)
             self._dropped.add(model)
 
     def track_engine(self, model: str) -> None:
@@ -244,12 +259,52 @@ class DispatchMetrics:
             if busy > self._pool_busy_peak:
                 self._pool_busy_peak = int(busy)
 
+    def on_composed_step(
+        self,
+        seconds: float,
+        *,
+        occupied: int,
+        capacity: int,
+        tokens_by_lane: Any,
+    ) -> None:
+        """Record one composed (cross-tenant batched) decode step: its wall
+        time, how many of the shared batch's ``capacity`` slots were live
+        (``occupied``), and the tokens each occupant lane's slots produced.
+        Fed by ``Dispatcher.step_group``; the snapshot's ``composer``
+        section derives slot occupancy, coalesce rate (fraction of
+        composed steps that actually served ≥ 2 tenants), and per-tenant
+        shares from these samples."""
+        with self._mu:
+            self._comp_steps += 1
+            self._comp_capacity = capacity
+            lanes_served = sum(1 for t in tokens_by_lane.values() if t > 0)
+            if lanes_served >= 2:
+                self._comp_coalesced += 1
+            if len(self._comp_occ) == self._comp_occ.maxlen:
+                self._comp_occ_dropped += 1
+            self._comp_occ.append(int(occupied))
+            if occupied > self._comp_occ_peak:
+                self._comp_occ_peak = int(occupied)
+            for lane, toks in tokens_by_lane.items():
+                if toks and lane not in self._dropped:
+                    self._comp_lane_tokens[lane] = (
+                        self._comp_lane_tokens.get(lane, 0) + int(toks)
+                    )
+            self.composed_step_latency.record(seconds)
+
     def observe_request(self, req: Any) -> None:
-        """Fold one finished request (serving ``Request`` timestamps) in."""
+        """Fold one finished request (serving ``Request`` timestamps) in,
+        counting truncations (context window filled before
+        ``max_new_tokens``) and failures (completed with ``error`` set)
+        so neither outcome is invisible in the aggregate."""
         ntok = len(req.generated)
         with self._mu:
             self.requests_done += 1
             self.tokens_out += ntok
+            if getattr(req, "truncated", False):
+                self.truncated += 1
+            if getattr(req, "error", None):
+                self.failed += 1
             if req.t_first and req.t_submit:
                 self.ttft.record(req.t_first - req.t_submit)
             if req.t_done and req.t_submit:
@@ -301,6 +356,8 @@ class DispatchMetrics:
                 "requests_done": self.requests_done,
                 "tokens_out": self.tokens_out,
                 "rejected": self.rejected,
+                "truncated": self.truncated,
+                "failed": self.failed,
                 "wall_seconds": self._wall_locked(),
                 "tokens_per_second": self._tokens_per_second_locked(),
                 "requests_per_second": self._requests_per_second_locked(),
@@ -328,6 +385,24 @@ class DispatchMetrics:
                     for model, rec in self._engines.items()
                 },
             }
+            if self._comp_steps:
+                occ = np.asarray(self._comp_occ, dtype=np.float64)
+                total_tok = sum(self._comp_lane_tokens.values())
+                snap["composer"] = {
+                    "steps": self._comp_steps,
+                    "coalesced_steps": self._comp_coalesced,
+                    "coalesce_rate": self._comp_coalesced / self._comp_steps,
+                    "capacity": self._comp_capacity,
+                    "occupancy_mean": float(occ.mean()) if len(occ) else 0.0,
+                    "occupancy_peak": self._comp_occ_peak,
+                    "occupancy_dropped": self._comp_occ_dropped,
+                    "step_ms": self.composed_step_latency.summary_ms(),
+                    "lane_tokens": dict(self._comp_lane_tokens),
+                    "lane_share": {
+                        lane: toks / total_tok
+                        for lane, toks in self._comp_lane_tokens.items()
+                    } if total_tok else {},
+                }
             if self._pool_size:
                 busy = np.asarray(self._pool_busy, dtype=np.float64)
                 snap["pool"] = {

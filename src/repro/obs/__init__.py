@@ -9,8 +9,10 @@ Three pieces, one import surface:
   dispatch component falls back to.
 * :mod:`repro.obs.export` — Chrome trace-event / Perfetto JSON export
   (:func:`to_chrome_trace` / :func:`write_chrome_trace`), structural
-  validation (:func:`validate_trace`), and overlap analysis helpers
-  (:func:`step_spans`, :func:`worker_overlap`).
+  validation (:func:`validate_trace`), and analysis helpers
+  (:func:`step_spans`, :func:`worker_overlap`, :func:`composed_spans` —
+  the latter extracts the batch composer's shared-decode spans and their
+  per-tenant share fan-out).
 * :mod:`repro.obs.registry` — :class:`MetricsRegistry`, a typed
   pull-based registry with JSON and Prometheus text exposition, plus
   adapters (:func:`register_dispatch`, :func:`register_cache`,
@@ -22,6 +24,7 @@ reverse.
 """
 
 from .export import (
+    composed_spans,
     step_spans,
     to_chrome_trace,
     validate_trace,
@@ -49,6 +52,7 @@ __all__ = [
     "Sample",
     "SpanTracer",
     "TraceEvent",
+    "composed_spans",
     "get_tracer",
     "register_cache",
     "register_dispatch",

@@ -168,6 +168,27 @@ def step_spans(trace: dict, cat: str = "step") -> list[tuple]:
     return out
 
 
+def composed_spans(trace: dict) -> list[tuple]:
+    """Composed-step decode spans and their per-tenant share fan-out, as
+    ``(name, start_us, dur_us, args)`` tuples: every ``X`` span named
+    ``composed:<host>`` (one shared device step serving N tenants — the
+    batch composer emits one per group quantum, with occupancy and lane
+    count in ``args``) followed in emission order by its
+    ``composed_share`` instants (``cat="composer"``, one per tenant with
+    that step's token count).  The raw material for per-tenant share and
+    coalesce-rate analysis straight from a trace."""
+    out = []
+    for ev in trace.get("traceEvents", []):
+        name = ev.get("name", "")
+        if ev.get("ph") == "X" and name.startswith("composed:"):
+            out.append(
+                (name, ev["ts"], ev.get("dur", 0.0), ev.get("args", {}))
+            )
+        elif ev.get("ph") == "i" and name == "composed_share":
+            out.append((name, ev["ts"], 0.0, ev.get("args", {})))
+    return out
+
+
 def worker_overlap(trace: dict, cat: str = "step") -> tuple[int, bool]:
     """``(worker_tracks, overlapped)``: how many distinct threads recorded
     ``cat`` spans, and whether any two spans on *different* threads

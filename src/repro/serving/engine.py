@@ -38,7 +38,15 @@ from repro.obs.tracer import get_tracer
 class Request:
     """One generation request: prompt in, tokens out, engine-stamped
     timestamps (``t_submit``/``t_first``/``t_done``) for latency metrics.
-    The unit of traffic for both the engine and the dispatch layer."""
+    The unit of traffic for both the engine and the dispatch layer.
+
+    ``truncated`` is set when the engine stopped the request early because
+    its context window filled (``prompt + generated`` reached ``max_len``)
+    — the caller got fewer than ``max_new_tokens`` tokens and this flag is
+    the signal saying why.  ``error`` is set (with ``done``) when the
+    request was failed rather than served — an unservable prompt reaching
+    admission, or a retire racing a direct submit — so no request ever
+    silently vanishes."""
 
     rid: int
     prompt: np.ndarray                 # (P,) int32
@@ -51,6 +59,8 @@ class Request:
     # filled by the engine:
     generated: list = dataclasses.field(default_factory=list)
     done: bool = False
+    truncated: bool = False            # finished early: context window full
+    error: Optional[str] = None        # failed (not served): why
     t_submit: float = 0.0
     t_first: float = 0.0
     t_done: float = 0.0
@@ -164,20 +174,52 @@ class ServingEngine:
         # into a loud error instead of corrupted KV state.
         self._step_mu = threading.Lock()
         self._retired = False
+        # engine-side submit hook (installed by a dispatcher): called after
+        # every direct submit() so directly-enqueued work reaches the
+        # indexed ready set — without it, pool grants never see traffic
+        # that bypassed the dispatcher's front door
+        self._submit_hook: Optional[Callable[[], None]] = None
 
     def retire(self) -> None:
         """Lane-retire hook: release this engine's serving lifecycle.
 
         Called by ``Dispatcher.unregister_model`` after the lane drained.
-        Refuses all further submissions (``validate_request`` raises),
-        clears any queued requests (there should be none after a drain),
-        and drops the per-engine ``ScheduleKey`` memo so the shared
-        schedule cache's LRU — not a dead tenant's memo — governs how long
-        the sealed executables stay referenced.  Idempotent.
+        Refuses all further submissions (``validate_request`` raises) and
+        drops the per-engine ``ScheduleKey`` memo so the shared schedule
+        cache's LRU — not a dead tenant's memo — governs how long the
+        sealed executables stay referenced.  Requests still queued (a
+        direct ``submit`` racing the retire — there are none after a
+        dispatcher drain) are FAILED loudly: each is completed with
+        ``error`` set and its ``on_complete`` fired, never silently
+        dropped.  Idempotent.
         """
         self._retired = True
-        self.queue.clear()
+        stranded, self.queue = list(self.queue), []
         self._prefill_keys.clear()
+        for req in stranded:
+            self._fail_request(req, "engine retired with request queued")
+
+    def _fail_request(self, req: Request, why: str) -> None:
+        """Complete ``req`` as failed: ``done`` + ``error`` set, terminal
+        timestamp stamped, ``on_complete`` fired (no locks held)."""
+        req.error = why
+        req.done = True
+        req.t_done = time.perf_counter()
+        cb = req.on_complete
+        if cb is not None:
+            cb(req.model, req)
+
+    def set_submit_hook(self, hook: Optional[Callable[[], None]]) -> None:
+        """Install (or clear, with ``None``) the direct-submit hook.
+
+        The hook fires after every :meth:`submit` appends to the engine
+        queue.  ``Dispatcher.register_model`` points it at the lane's
+        ready-index recompute, so work submitted to the engine directly —
+        bypassing the dispatcher — still lands in the indexed ready set
+        and pool grants (and the batch composer's refill path) can see
+        it.  The hook must be fast and must not call back into the
+        engine."""
+        self._submit_hook = hook
 
     # -- sealed executables through the schedule cache ---------------------
     _EXEC_ARENA_FLOOR = 4096     # conservative floor: never report ~free
@@ -316,6 +358,19 @@ class ServingEngine:
                 new_cache[k] = v
         return nxt, new_cache
 
+    def compose_key(self) -> tuple:
+        """Batched-decode compatibility key for the batch composer.
+
+        Two engines whose keys are equal replay the *same* sealed decode
+        executable over interchangeable KV-cache slots, so their lanes'
+        requests may share one batched decode step: the key is the sealed
+        executable's identity beyond shapes (``_key_options``: cfg, device,
+        ``max_len``, ``max_slots``), the bucketing policy (prefill shapes
+        must land in the same bucket family), and the **weights' object
+        identity** — same config with different parameters is a different
+        computation and must never coalesce."""
+        return (self._key_options, repr(self.bucketing), id(self.params))
+
     # -- request flow --------------------------------------------------------
     def validate_request(self, req: Request) -> None:
         """Reject requests this engine can never serve.
@@ -331,14 +386,22 @@ class ServingEngine:
 
     def submit(self, req: Request) -> None:
         """Enqueue ``req`` for admission on a later :meth:`step` (stamps
-        ``t_submit`` unless the dispatcher already did)."""
+        ``t_submit`` unless the dispatcher already did), then fires the
+        installed submit hook so directly-submitted work becomes visible
+        to the dispatch layer's ready index."""
         if not req.t_submit:         # dispatcher may have stamped lane entry
             req.t_submit = time.perf_counter()
         self.queue.append(req)
+        hook = self._submit_hook
+        if hook is not None:
+            hook()
 
     def free_slots(self) -> int:
-        """Seats available right now (admission control hook)."""
-        return sum(1 for s in self.slots if s is None) - len(self.queue)
+        """Seats available right now (admission control hook), clamped at
+        0 — once the queue holds more requests than free seats there is
+        no capacity, not negative capacity (admission-control arithmetic
+        built on this must never see a negative)."""
+        return max(0, sum(1 for s in self.slots if s is None) - len(self.queue))
 
     @property
     def idle(self) -> bool:
@@ -365,9 +428,20 @@ class ServingEngine:
         for slot in range(self.max_slots):
             if self.slots[slot] is not None or not self.queue:
                 continue
-            req = self.queue.pop(0)
+            # validate BEFORE popping: an unservable directly-submitted
+            # prompt (dispatcher submits are validated up front) is failed
+            # and returned as finished — popping first and then raising
+            # would lose the request and poison the stepping thread
+            req = self.queue[0]
             plen = len(req.prompt)
-            b = self._bucket(plen)
+            try:
+                b = self._bucket(plen)
+            except ValueError as exc:
+                self.queue.pop(0)
+                self._fail_request(req, f"unservable prompt: {exc}")
+                finished.append(req)
+                continue
+            self.queue.pop(0)
             exe = self._get_prefill_exec(b)    # schedule-cache hit when warm
             padded = np.zeros((1, b), np.int32)
             padded[0, :plen] = req.prompt
@@ -439,6 +513,10 @@ class ServingEngine:
             self.stats.tokens_out += 1
             pos_full = len(req.prompt) + len(req.generated)
             if len(req.generated) >= req.max_new_tokens or pos_full >= self.max_len - 1:
+                if len(req.generated) < req.max_new_tokens:
+                    # context window full before max_new_tokens: the caller
+                    # gets fewer tokens than asked — say so, loudly
+                    req.truncated = True
                 self._finish(req, s)
                 finished.append(req)
         return finished

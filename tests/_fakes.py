@@ -77,6 +77,33 @@ class SeqEngine(FakeEngine):
         return finished
 
 
+class ComposableEngine(SeqEngine):
+    """A ``SeqEngine`` that opts into the batch composer: engines sharing
+    the same ``key`` report the same ``compose_key()`` and so coalesce
+    into one :class:`repro.dispatch.BatchComposer` group (the first
+    registered becomes the host).  Also carries the engine-side submit
+    hook so direct ``submit()`` work reaches the dispatcher's indexed
+    ready set, mirroring ``ServingEngine``."""
+
+    def __init__(self, name, log, slots=1, cost=2, key="shared"):
+        super().__init__(name, log, slots=slots, cost=cost)
+        self.key = key
+        self._submit_hook = None
+
+    def compose_key(self):
+        """Compatibility key: equal keys mean batched-decode compatible."""
+        return ("fake", self.key, len(self.slots))
+
+    def set_submit_hook(self, hook):
+        """Install (or clear, with ``None``) the post-submit callback."""
+        self._submit_hook = hook
+
+    def submit(self, req):
+        super().submit(req)
+        if self._submit_hook is not None:
+            self._submit_hook()
+
+
 class FailingEngine(FakeEngine):
     """Accepts requests, then blows up on the first step that has work —
     exercises the async dispatcher's error propagation path."""

@@ -1,0 +1,309 @@
+"""Batch-composer suite: cross-tenant batched decode (ISSUE 7 tentpole).
+
+Covers the acceptance claims: per-tenant token identity vs the unbatched
+reference across pool and per-engine stepping, fairness shares under
+SHARED steps (3:1 within the drr/stride tolerances), slot refill on
+finish, incompatible compatibility keys never coalescing, the arbiter's
+group-grant path, and host-retire disband/re-form — plus the real
+``ServingEngine`` path end to end.
+"""
+
+import dataclasses
+import threading
+import time
+
+import jax
+import numpy as np
+import pytest
+
+import repro.configs as C
+from repro.dispatch import (
+    AsyncDispatcher,
+    BatchComposer,
+    Dispatcher,
+    ScheduleCache,
+)
+from repro.models import init_model
+from repro.serving import Request, ServingEngine
+
+from _fakes import ComposableEngine
+
+PROMPT = np.array([1, 2, 3], np.int32)
+
+
+def _request(rid, max_new=4):
+    return Request(rid=rid, prompt=PROMPT.copy(), max_new_tokens=max_new)
+
+
+def _expected(req):
+    # SeqEngine stream: rid*1000 + i for the i-th output token
+    return [req.rid * 1000 + i for i in range(req.max_new_tokens)]
+
+
+def _composed(n_lanes=3, slots=8, **disp_kw):
+    log = []
+    disp = Dispatcher(composer=BatchComposer(), **disp_kw)
+    names = [f"t{i}" for i in range(n_lanes)]
+    for n in names:
+        disp.register_model(n, ComposableEngine(n, log, slots=slots))
+    return disp, names, log
+
+
+# -- token identity -----------------------------------------------------------
+
+@pytest.mark.timeout(60)
+def test_composed_token_identity_sync():
+    """One host serves every lane; outputs match the unbatched stream."""
+    disp, names, log = _composed()
+    reqs = [disp.submit(n, PROMPT, max_new_tokens=5)
+            for n in names for _ in range(3)]
+    disp.run_until_drained()
+    assert all(r.generated == _expected(r) for r in reqs)
+    assert set(log) == {"t0"}          # only the host engine ever stepped
+    snap = disp.snapshot()
+    assert snap["compose_groups"]["groups"] == 1
+    assert snap["composer"]["steps"] > 0
+
+
+@pytest.mark.timeout(60)
+@pytest.mark.parametrize("stepping,pool", [("pool", 4), ("per-engine", None)])
+def test_composed_token_identity_async(stepping, pool):
+    """Pool and per-engine stepping stay token-identical under composition
+    (the composed step runs whoever's grant arrives first)."""
+    log = []
+    ad = AsyncDispatcher(
+        stepping=stepping, pool_size=pool, composer=BatchComposer()
+    )
+    names = ["a", "b", "c", "d"]
+    for n in names:
+        ad.register_model(n, ComposableEngine(n, log, slots=4))
+    ad.start()
+    futs = [ad.submit(n, PROMPT, max_new_tokens=16)
+            for n in names for _ in range(4)]
+    reqs = [f.result(timeout=30) for f in futs]
+    ad.stop()
+    assert all(r.generated == _expected(r) for r in reqs)
+    assert set(log) == {"a"}
+
+
+# -- fairness under shared steps ----------------------------------------------
+
+def _fairness_shares(policy):
+    """Two lanes at 3:1 weight share one host (2 slots); measure the token
+    split over whole composed steps while both stay backlogged."""
+    disp, _, _ = _composed(n_lanes=0, fairness=policy, max_pending=100_000)
+    log = []
+    for name, weight in (("heavy", 3.0), ("light", 1.0)):
+        disp.register_model(
+            name, ComposableEngine(name, log, slots=2), weight=weight
+        )
+    # max_new=1: every seat turns over each step, so every seat is a fresh
+    # policy decision — the pure slot-allocation fairness question
+    for i in range(480):
+        disp.submit_request("heavy", _request(i, 1))
+        disp.submit_request("light", _request(1000 + i, 1))
+    for _ in range(160):
+        disp.step_lane("heavy")        # composed: serves BOTH lanes
+    tokens = disp.snapshot()["composer"]["lane_tokens"]
+    assert tokens["heavy"] + tokens["light"] == 320   # 2 seats x 160 steps
+    return tokens["heavy"] / tokens["light"]
+
+
+@pytest.mark.timeout(60)
+def test_composed_drr_shares_3_to_1():
+    """Acceptance: drr realizes 3:1 token shares through SHARED steps —
+    the fractional ``charge_composed`` split keeps round credits honest
+    when one device step serves both lanes."""
+    ratio = _fairness_shares("drr")
+    assert 2.7 <= ratio <= 3.3, f"3:1 drr realized {ratio:.2f}"
+
+
+@pytest.mark.timeout(60)
+def test_composed_stride_shares_3_to_1():
+    """Same claim for weighted stride: pass progress advances by each
+    lane's token share of the composed step."""
+    ratio = _fairness_shares("weighted")
+    assert 2.7 <= ratio <= 3.3, f"3:1 stride realized {ratio:.2f}"
+
+
+# -- slot tenancy -------------------------------------------------------------
+
+@pytest.mark.timeout(60)
+def test_slot_refilled_on_finish():
+    """A freed slot is reseated from another member's queue on the next
+    composed step — iteration-level scheduling, not run-to-completion of
+    a whole lane."""
+    disp, names, log = _composed(n_lanes=2, slots=1)
+    a = disp.submit("t0", PROMPT, max_new_tokens=3)
+    b = disp.submit("t1", PROMPT, max_new_tokens=3)
+    for _ in range(3):
+        disp.step_lane("t0")
+    assert a.done and not b.done           # one seat: a ran to finish first
+    disp.run_until_drained()
+    assert b.generated == _expected(b)     # b seated in a's freed slot
+    comp = disp.snapshot()["composer"]
+    assert comp["occupancy_peak"] == 1     # capacity never exceeded
+    assert comp["coalesced_steps"] == 0    # 1 seat: never 2 lanes per step
+    assert set(log) == {"t0"}              # b was served by the host
+
+
+@pytest.mark.timeout(60)
+def test_incompatible_keys_never_coalesce():
+    """Lanes whose engines disagree on the compatibility key keep their
+    own groups (and hosts) — only exact-computation twins share a step."""
+    log = []
+    disp = Dispatcher(composer=BatchComposer())
+    disp.register_model("a1", ComposableEngine("a1", log, slots=4, key="A"))
+    disp.register_model("a2", ComposableEngine("a2", log, slots=4, key="A"))
+    disp.register_model("b1", ComposableEngine("b1", log, slots=4, key="B"))
+    reqs = [disp.submit(n, PROMPT, max_new_tokens=4) for n in ("a1", "a2", "b1")]
+    disp.run_until_drained()
+    assert all(r.generated == _expected(r) for r in reqs)
+    assert set(log) == {"a1", "b1"}        # two hosts, never cross-batched
+    snap = disp.snapshot()["compose_groups"]
+    assert snap["groups"] == 2
+    assert snap["by_host"]["a1"]["lanes"] == ["a1", "a2"]
+    assert snap["by_host"]["b1"]["lanes"] == ["b1"]
+
+
+@pytest.mark.timeout(60)
+def test_direct_engine_submit_still_served_and_visible():
+    """Carry-over satellite: work submitted straight to a member ENGINE
+    (not the dispatcher) reaches the indexed ready set via the submit
+    hook, and the composed quantum steps that engine too (its KV lives
+    there, not in the host)."""
+    disp, names, log = _composed(n_lanes=2, slots=4)
+    req = _request(7, max_new=3)
+    disp.engine("t1").submit(req)          # direct: bypasses the dispatcher
+    assert disp.active_lanes() == ["t1"]   # hook indexed it
+    for _ in range(4):
+        disp.step_lane("t1")
+    assert req.done and req.generated == _expected(req)
+    assert "t1" in set(log)                # served by its own engine
+
+
+# -- arbiter group grants -----------------------------------------------------
+
+@pytest.mark.timeout(60)
+def test_group_grant_claims_co_members():
+    """One worker's grant widens to the whole group: co-members are
+    claimed (inflight) so no second worker can race the composed step,
+    and all quanta release together."""
+    log = []
+    ad = AsyncDispatcher(
+        stepping="pool", pool_size=1, composer=BatchComposer()
+    )
+    for n in ("a", "b", "c"):
+        ad.register_model(n, ComposableEngine(n, log, slots=4))
+    ad.start()
+    futs = [ad.submit(n, PROMPT, max_new_tokens=32)
+            for n in ("a", "b", "c") for _ in range(4)]
+    reqs = [f.result(timeout=30) for f in futs]
+    arb = ad.snapshot()["async"]["arbiter"]
+    ad.stop()
+    assert all(r.generated == _expected(r) for r in reqs)
+    assert arb["group_grants"] > 0
+    assert arb["co_grants"] > 0
+    assert arb["inflight"] == 0            # released together, none leaked
+
+
+# -- retirement ---------------------------------------------------------------
+
+@pytest.mark.timeout(60)
+def test_unregister_member_drains_through_host():
+    """Retiring a NON-host member drains its queued and in-flight work
+    through the host, then leaves the group intact."""
+    disp, names, log = _composed(n_lanes=3, slots=4)
+    reqs = [disp.submit("t1", PROMPT, max_new_tokens=4) for _ in range(6)]
+    disp.unregister_model("t1")
+    assert all(r.done and r.generated == _expected(r) for r in reqs)
+    snap = disp.snapshot()["compose_groups"]
+    assert snap["by_host"]["t0"]["lanes"] == ["t0", "t2"]
+
+
+@pytest.mark.timeout(60)
+def test_unregister_host_disbands_and_reforms():
+    """Retiring the HOST lane disbands the group: the host drains fully
+    (survivors' in-flight completes there), survivors re-form around a
+    new host, and their queued work is served by it afterwards."""
+    disp, names, log = _composed(n_lanes=3, slots=2)
+    host_reqs = [disp.submit("t0", PROMPT, max_new_tokens=4) for _ in range(3)]
+    surv_reqs = [disp.submit(n, PROMPT, max_new_tokens=4)
+                 for n in ("t1", "t2") for _ in range(3)]
+    disp.unregister_model("t0")
+    assert all(r.done for r in host_reqs)  # retiring lane fully served
+    snap = disp.snapshot()["compose_groups"]
+    assert snap["groups"] == 1
+    assert snap["by_host"]["t1"]["lanes"] == ["t1", "t2"]
+    disp.run_until_drained()
+    assert all(r.done and r.generated == _expected(r) for r in surv_reqs)
+    assert "t1" in set(log)                # the new host stepped
+
+
+# -- the real engine ----------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = dataclasses.replace(C.get("phi4-mini-3.8b", smoke=True), dtype="float32")
+    params, _ = init_model(jax.random.key(0), cfg)
+    return cfg, params
+
+
+def _serving(model, cache, **kw):
+    cfg, params = model
+    kw.setdefault("max_slots", 2)
+    kw.setdefault("max_len", 48)
+    kw.setdefault("prompt_buckets", (8, 16))
+    return ServingEngine(cfg, params, schedule_cache=cache, **kw)
+
+
+def _serving_reqs(cfg, n, seed, max_new=3):
+    rng = np.random.default_rng(seed)
+    return [
+        Request(rid=i, prompt=rng.integers(0, cfg.vocab, 5).astype(np.int32),
+                max_new_tokens=max_new)
+        for i in range(n)
+    ]
+
+
+@pytest.mark.timeout(120)
+def test_serving_engines_compose_token_identical(model):
+    """End to end on real engines: twin ``ServingEngine``s coalesce (same
+    cfg/params/shapes/bucketing ⇒ same compose key), one sealed decode
+    serves both tenants, and outputs match the solo reference exactly."""
+    cfg, _ = model
+    cache = ScheduleCache(capacity=16)
+    ref_eng = _serving(model, cache)
+    for r in _serving_reqs(cfg, 4, seed=11):
+        ref_eng.submit(r)
+    ref = {r.rid: r.generated for r in ref_eng.run_until_drained()}
+
+    disp = Dispatcher(composer=BatchComposer())
+    disp.register_model("x", _serving(model, cache))
+    disp.register_model("y", _serving(model, cache))
+    assert disp.snapshot()["compose_groups"]["groups"] == 1
+    xs = _serving_reqs(cfg, 2, seed=11)          # rids 0..1 = ref rids 0..1
+    ys = _serving_reqs(cfg, 4, seed=11)[2:]      # rids 2..3 = ref rids 2..3
+    for r in xs:
+        disp.submit_request("x", r)
+    for r in ys:
+        disp.submit_request("y", r)
+    disp.run_until_drained()
+    got = {r.rid: r.generated for r in xs + ys}
+    assert got == ref
+    # both tenants' decode ran in the host's shared step
+    comp = disp.snapshot()["composer"]
+    assert set(comp["lane_tokens"]) == {"x", "y"}
+
+
+@pytest.mark.timeout(120)
+def test_serving_engines_different_bucketing_never_coalesce(model):
+    """Bucket-incompatible real engines keep separate groups: a different
+    bucketing policy means different prefill shape families, hence a
+    different compose key."""
+    cache = ScheduleCache(capacity=32)
+    disp = Dispatcher(composer=BatchComposer())
+    disp.register_model("x", _serving(model, cache))
+    disp.register_model("y", _serving(model, cache, prompt_buckets=(8, 16, 32)))
+    snap = disp.snapshot()["compose_groups"]
+    assert snap["groups"] == 2

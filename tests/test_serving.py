@@ -150,6 +150,97 @@ def test_prefill_tokens_counted_separately(model, shared_cache):
     assert Dispatcher._engine_tokens(eng.stats) == 6
 
 
+def test_truncation_is_signaled(model, shared_cache):
+    """ISSUE 7 satellite: a request stopped early by a full context window
+    must say so — ``truncated`` set on the request, fewer tokens than
+    asked, and the dispatcher's ``truncated`` counter incremented —
+    instead of silently returning a short answer."""
+    cfg, _ = model
+    disp = Dispatcher(max_pending=16)
+    disp.register_model("m", _engine(model, shared_cache, max_len=24))
+    req = disp.submit("m", np.ones(16, np.int32), max_new_tokens=64)
+    disp.run_until_drained()
+    assert req.done and req.truncated
+    assert 0 < len(req.generated) < 64     # stopped at the window, loudly
+    snap = disp.snapshot()
+    assert snap["truncated"] == 1
+    # the untruncated path stays unflagged
+    ok = disp.submit("m", np.ones(4, np.int32), max_new_tokens=2)
+    disp.run_until_drained()
+    assert not ok.truncated and snap["truncated"] == 1
+
+
+def test_free_slots_never_negative(model, shared_cache):
+    """ISSUE 7 satellite (property): across every queue/slot state a
+    serving engine passes through — deep overflow queues, partial drains,
+    refills — ``free_slots()`` is clamped at 0, never negative."""
+    cfg, _ = model
+    eng = _engine(model, shared_cache)                  # 2 slots
+    states = []
+    for n_queued in range(7):
+        for r in _reqs(cfg, n_queued, max_new=2, seed=n_queued + 1):
+            eng.submit(r)
+        states.append(eng.free_slots())
+        assert eng.free_slots() == max(0, 2 - len(eng.queue))
+        while not eng.idle:
+            eng.step()
+            assert eng.free_slots() >= 0                # during drain too
+    assert min(states) == 0 and max(states) == 2        # both regimes hit
+
+
+def test_retire_fails_queued_requests_loudly(model, shared_cache):
+    """ISSUE 7 satellite: retire() with directly-submitted requests still
+    queued must complete them as failed (error + ``on_complete``), not
+    silently vanish them — the direct-submit retire race."""
+    cfg, _ = model
+    eng = _engine(model, shared_cache)
+    seen = []
+    reqs = _reqs(cfg, 3, max_new=2)
+    for r in reqs:
+        r.on_complete = lambda model_name, req: seen.append(req.rid)
+        eng.submit(r)                  # never stepped: all three queued
+    eng.retire()
+    assert not eng.queue
+    for r in reqs:
+        assert r.done and r.error      # failed, not dropped
+        assert "retired" in r.error
+    assert sorted(seen) == [0, 1, 2]   # every callback fired
+    with pytest.raises(RuntimeError):
+        eng.validate_request(_reqs(cfg, 1)[0])
+
+
+def test_unservable_direct_submit_fails_request_not_stepper(model, shared_cache):
+    """ISSUE 7 satellite: an unservable prompt submitted straight to the
+    engine (skipping dispatcher validation) must fail THAT request with
+    an error — not raise on the stepping thread (poisoning every tenant)
+    or lose the already-popped request."""
+    cfg, _ = model
+    eng = _engine(model, shared_cache)
+    bad = Request(rid=9, prompt=np.zeros(17, np.int32), max_new_tokens=2)
+    good = _reqs(cfg, 1, max_new=2)[0]
+    eng.submit(bad)
+    eng.submit(good)
+    finished = eng.run_until_drained()          # must not raise
+    assert bad in finished and bad.done
+    assert bad.error and "unservable" in bad.error
+    assert good.done and not good.error         # queue kept flowing
+    assert len(good.generated) == 2
+
+
+def test_direct_engine_submit_reaches_ready_index(model, shared_cache):
+    """ISSUE 7 carry-over: the engine-side submit hook makes direct
+    ``engine.submit()`` work visible to the dispatcher's indexed ready
+    set, so pool grants (and the composer's refill) can see it."""
+    cfg, _ = model
+    disp = Dispatcher(max_pending=16)
+    disp.register_model("m", _engine(model, shared_cache))
+    assert disp.active_lanes() == []
+    disp.engine("m").submit(_reqs(cfg, 1, max_new=2)[0])
+    assert disp.active_lanes() == ["m"]         # hook indexed the lane
+    disp.run_until_drained()
+    assert disp.active_lanes() == []
+
+
 def test_dispatcher_matches_direct_engine(model, shared_cache):
     """Token-identical outputs: dispatcher multiplexing vs direct serving."""
     cfg, _ = model
