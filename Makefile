@@ -1,10 +1,22 @@
 # Tier-1 verification (ROADMAP.md): must pass from a fresh checkout.
 PY ?= python
 
-.PHONY: test bench-dispatch bench-smoke trace-smoke serve-example docs-check
+.PHONY: test test-scenarios bench-dispatch bench-smoke trace-smoke \
+	serve-example docs-check
 
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
+
+# The deterministic scheduling-scenario suites (fake clock + scripted
+# traces driving the real dispatcher): preemption ordering, SLO admission
+# control, load shedding.  A subset of `make test`, callable on its own
+# for fast iteration on the dispatch plane; pytest-timeout (or the
+# conftest SIGALRM fallback) bounds every test, so a wedged scenario
+# fails instead of hanging.
+test-scenarios:
+	PYTHONPATH=src $(PY) -m pytest -x -q \
+		tests/test_preemption.py tests/test_slo.py \
+		tests/test_dispatch_properties.py
 
 docs-check:
 	$(PY) tools/check_docs.py

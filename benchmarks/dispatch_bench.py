@@ -43,6 +43,13 @@ Eight measurements backing ISSUE 1/2/3/4/5/6/7 acceptance criteria:
    (ISSUE 7 acceptance): the composed step costs the same regardless of
    slot occupancy, so aggregate tokens/s must multiply (≥ 2× gated,
    ~N× expected) while every tenant's outputs stay token-identical.
+9. **overload p99** — saturated batch lanes plus paced interactive
+   traffic through the pool, run twice on the same workload: priority
+   classes + SLO targets (interactive class 0 preempting batch renewals
+   at quantum granularity) vs the no-priority baseline (ISSUE 8
+   acceptance): the interactive e2e p99 with preemption must sit
+   strictly below the baseline's, with preemptions observed (> 0) and
+   per-class p99 / preemption / shed / admission counters reported.
 
     PYTHONPATH=src python -m benchmarks.dispatch_bench
     PYTHONPATH=src python -m benchmarks.dispatch_bench --smoke   # CI variant:
@@ -65,7 +72,12 @@ import numpy as np
 import repro.configs as C
 import repro.obs as obs
 from repro.core import AoTScheduler
-from repro.dispatch import AsyncDispatcher, BatchComposer, ScheduleCache
+from repro.dispatch import (
+    AsyncDispatcher,
+    BatchComposer,
+    ScheduleCache,
+    percentile,
+)
 from repro.models import init_model
 from repro.serving import Request, ServingEngine
 
@@ -646,6 +658,109 @@ def batched_decode(
     )]
 
 
+OVERLOAD_INTER_LANES = 2
+OVERLOAD_BATCH_LANES = 6
+OVERLOAD_BATCH_REQS = 60      # backlog per batch lane: saturated throughout
+OVERLOAD_BATCH_MAX_NEW = 6
+OVERLOAD_INTER_REQS = 12      # paced: one in flight at a time
+OVERLOAD_INTER_MAX_NEW = 2
+OVERLOAD_TARGET_MS = 250.0    # generous: SLO plane live, nothing rejected
+
+
+def _overload_run(priority: bool) -> dict:
+    """One overload measurement: every batch lane backlogged for the whole
+    run, interactive requests paced one-at-a-time (each waits for its
+    completion, so its e2e latency IS the scheduling tail it saw).  With
+    ``priority``, interactive lanes register at class 0 with a latency
+    target and batch at class 1 under ``priority:round_robin``; the
+    baseline runs the identical workload class-blind."""
+    disp = AsyncDispatcher(
+        max_pending=10_000, stepping="pool", pool_size=2,
+        fairness="priority:round_robin" if priority else "round_robin",
+    )
+    inter = [f"inter-{i}" for i in range(OVERLOAD_INTER_LANES)]
+    batch = [f"batch-{i}" for i in range(OVERLOAD_BATCH_LANES)]
+    for name in inter:
+        disp.register_model(
+            name, _SpinTickEngine(slots=2),
+            priority_class=0,
+            latency_target_ms=OVERLOAD_TARGET_MS if priority else None,
+        )
+    for name in batch:
+        disp.register_model(
+            name, _SpinTickEngine(slots=2),
+            priority_class=1 if priority else 0,
+        )
+    rid = 0
+    futures = []
+    inter_lat: list[float] = []
+    t0 = time.perf_counter()
+    with disp:
+        for name in batch:
+            for _ in range(OVERLOAD_BATCH_REQS):
+                futures.append(disp.submit_request(
+                    name, _kilo_request(rid, OVERLOAD_BATCH_MAX_NEW)
+                ))
+                rid += 1
+        for k in range(OVERLOAD_INTER_REQS):
+            fut = disp.submit_request(
+                inter[k % len(inter)],
+                _kilo_request(rid, OVERLOAD_INTER_MAX_NEW),
+            )
+            rid += 1
+            r = fut.result(timeout=600)
+            inter_lat.append(r.t_done - r.t_submit)
+        done = [f.result(timeout=600) for f in futures]
+        snap = disp.snapshot()
+    wall = time.perf_counter() - t0
+    n_tok = sum(len(r.generated) for r in done) + sum(
+        OVERLOAD_INTER_MAX_NEW for _ in inter_lat
+    )
+    return {
+        "inter_p99_ms": percentile(
+            np.asarray(inter_lat, dtype=np.float64) * 1e3, 99
+        ),
+        "snap": snap,
+        "wall": wall,
+        "n_tok": n_tok,
+    }
+
+
+def overload_p99() -> list[tuple[str, float, str]]:
+    """ISSUE 8 acceptance: interactive-class e2e p99 under batch overload,
+    preemption on vs off, same workload — plus the per-class counters the
+    SLO plane tracks (preemptions, shed, admission rejections, per-class
+    p99 from the metrics plane)."""
+    base = _overload_run(False)
+    pri = _overload_run(True)
+    classes = pri["snap"].get("classes", {})
+    c0 = classes.get(0, {})
+    c1 = classes.get(1, {})
+    improvement = (
+        base["inter_p99_ms"] / pri["inter_p99_ms"]
+        if pri["inter_p99_ms"] else float("inf")
+    )
+    return [(
+        "dispatch/overload_p99",
+        pri["wall"] / max(pri["n_tok"], 1) * 1e6,
+        f"inter_lanes={OVERLOAD_INTER_LANES};"
+        f"batch_lanes={OVERLOAD_BATCH_LANES};"
+        f"inter_p99_ms_priority={pri['inter_p99_ms']:.3f};"
+        f"inter_p99_ms_baseline={base['inter_p99_ms']:.3f};"
+        f"improvement={improvement:.2f}x;"
+        f"priority_lt_baseline="
+        f"{'yes' if pri['inter_p99_ms'] < base['inter_p99_ms'] else 'NO'};"
+        f"preemptions={pri['snap'].get('preemptions', 0)};"
+        f"shed={pri['snap'].get('shed', 0)};"
+        f"admission_rejected={pri['snap'].get('admission_rejected', 0)};"
+        f"class0_e2e_p99_ms={c0.get('e2e_ms', {}).get('p99', 0.0):.3f};"
+        f"class1_e2e_p99_ms={c1.get('e2e_ms', {}).get('p99', 0.0):.3f};"
+        f"class0_grant_p95_ms={c0.get('grant_ms', {}).get('p95', 0.0):.3f};"
+        f"class0_deadline_miss={c0.get('deadline_miss', 0)}/"
+        f"{c0.get('deadline_total', 0)}",
+    )]
+
+
 def tracer_overhead() -> list[tuple[str, float, str]]:
     """ISSUE 6 acceptance: the span tracer's enabled-vs-disabled cost on
     the pool-mode many-tenant workload (64 tenants, 2 hot, 4 workers) —
@@ -701,7 +816,7 @@ def smoke() -> list[tuple[str, float, str]]:
     return kilo_tenant_sparse(
         n_tenants=KILO_SMOKE_TENANTS, n_hot=4, pool_size=KILO_POOL_SIZE,
         baseline_tenants=16,
-    ) + batched_decode()
+    ) + batched_decode() + overload_p99()
 
 
 def smoke_gate(rows: list[tuple[str, float, str]]) -> list[str]:
@@ -740,6 +855,19 @@ def smoke_gate(rows: list[tuple[str, float, str]]) -> list[str]:
                     f"{name}: speedup={speedup:.2f}x below the 2x composer "
                     f"bound (shared step no longer amortizing?)"
                 )
+        if name == "dispatch/overload_p99":
+            if derived.get("priority_lt_baseline") != "yes":
+                failures.append(
+                    f"{name}: interactive p99 with preemption "
+                    f"({derived.get('inter_p99_ms_priority')} ms) not below "
+                    f"the no-priority baseline "
+                    f"({derived.get('inter_p99_ms_baseline')} ms)"
+                )
+            if int(derived.get("preemptions", "0")) < 1:
+                failures.append(
+                    f"{name}: no preemptions observed — class ordering "
+                    f"never displaced a batch renewal under overload"
+                )
     return failures
 
 
@@ -777,7 +905,7 @@ def run() -> list[tuple[str, float, str]]:
     return (
         warm_vs_cold() + multi_tenant() + weighted_fairness()
         + parallel_stepping() + many_tenant_sparse() + kilo_tenant_sparse()
-        + batched_decode() + tracer_overhead()
+        + batched_decode() + overload_p99() + tracer_overhead()
     )
 
 

@@ -20,6 +20,19 @@ round-robin (proportional shares that overlap across workers),
 wall-clock second).  ``--cache-budget-mb`` caps the reserved-arena bytes
 the shared schedule cache may hold (LRU entries are evicted past it).
 
+Mixed interactive + batch serving: ``--priority-classes 0,1`` assigns one
+priority class per arch (lower = more important; any nonzero class turns
+the fairness policy into per-class composition — class 0 preempts class 1
+at quantum granularity, batch renewals simply stop while interactive work
+is ready, in-flight steps always complete) and ``--latency-targets-ms
+250,0`` gives classes latency targets (0 = best-effort): requests whose
+deadlines are provably unmeetable are refused with ``AdmissionRejected``
+on their futures instead of poisoning the tail.
+
+    PYTHONPATH=src python examples/serve_llm.py \
+        --archs stablelm-1.6b,phi4-mini-3.8b \
+        --priority-classes 0,1 --latency-targets-ms 5000,0
+
 Observability (``repro.obs``): ``--trace-out trace.json`` records the
 whole run with the span tracer and exports Chrome trace-event JSON —
 open it at https://ui.perfetto.dev or chrome://tracing to see each
@@ -39,7 +52,7 @@ import numpy as np
 
 import repro.configs as C
 import repro.obs as obs
-from repro.dispatch import AsyncDispatcher, ScheduleCache
+from repro.dispatch import AdmissionRejected, AsyncDispatcher, ScheduleCache
 from repro.models import init_model
 from repro.serving import ServingEngine
 
@@ -58,6 +71,14 @@ def main():
                          '"lottery[:SEED]", or "quota[:RATE[:BURST]]"')
     ap.add_argument("--weights", default="",
                     help="comma-separated per-arch weights (weighted/quota)")
+    ap.add_argument("--priority-classes", default="",
+                    help="comma-separated per-arch priority classes "
+                         "(lower = more important; any nonzero class "
+                         "composes the fairness policy per class)")
+    ap.add_argument("--latency-targets-ms", default="",
+                    help="comma-separated per-arch latency targets in ms "
+                         "(0 = best-effort; targeted lanes get admission "
+                         "control and deadline tracking)")
     ap.add_argument("--stepping", default="per-engine",
                     choices=("per-engine", "single", "pool"),
                     help="one stepper thread per model, one shared loop, or "
@@ -90,6 +111,14 @@ def main():
                if args.weights else [1.0] * len(archs))
     if len(weights) != len(archs):
         ap.error("--weights must list one weight per arch")
+    classes = ([int(c) for c in args.priority_classes.split(",")]
+               if args.priority_classes else [0] * len(archs))
+    if len(classes) != len(archs):
+        ap.error("--priority-classes must list one class per arch")
+    targets = ([float(t) for t in args.latency_targets_ms.split(",")]
+               if args.latency_targets_ms else [0.0] * len(archs))
+    if len(targets) != len(archs):
+        ap.error("--latency-targets-ms must list one target per arch")
 
     cache = ScheduleCache(
         capacity=64,
@@ -105,14 +134,17 @@ def main():
     )
 
     t0 = time.perf_counter()
-    for arch, weight in zip(archs, weights):
+    for arch, weight, cls, target in zip(archs, weights, classes, targets):
         cfg = dataclasses.replace(C.get(arch, smoke=True), dtype="float32")
         params, _ = init_model(jax.random.key(0), cfg)
         engine = ServingEngine(
             cfg, params, max_slots=args.slots, max_len=128,
             bucketing=bucketing, schedule_cache=cache,
         )
-        dispatcher.register_model(arch, engine, weight=weight)
+        dispatcher.register_model(
+            arch, engine, weight=weight,
+            priority_class=cls, latency_target_ms=target or None,
+        )
     print(f"AoT scheduling done in {time.perf_counter()-t0:.1f}s "
           f"({cache.stats.builds} schedules sealed, shared cache)")
 
@@ -131,7 +163,12 @@ def main():
                 tenant=f"tenant-{i % 3}",
             ))
         t_submitted = time.perf_counter() - t0
-        done = [f.result(timeout=600) for f in futures]
+        done, refused = [], 0
+        for f in futures:
+            try:
+                done.append(f.result(timeout=600))
+            except AdmissionRejected:
+                refused += 1               # typed backpressure, per future
         snap = dispatcher.snapshot()       # while steppers are still live
         if args.metrics_dump:
             # collected inside the with-block too: the arbiter series only
@@ -171,13 +208,25 @@ def main():
               f"step p50 {eng['step_ms']['p50']:.1f}ms "
               f"p99 {eng['step_ms']['p99']:.1f}ms, {eng['tokens']} tokens")
     print("fairness:", json.dumps(snap["fairness"], default=str))
+    if "classes" in snap:
+        for cls, c in sorted(snap["classes"].items()):
+            print(f"  class[{cls}] {','.join(c['lanes'])}: "
+                  f"e2e p99 {c['e2e_ms']['p99']:.0f}ms, "
+                  f"grant p95 {c['grant_ms']['p95']:.2f}ms, "
+                  f"{c['preemptions']} preemptions, {c['shed']} shed, "
+                  f"{c['admission_rejected']} refused, "
+                  f"deadline misses {c['deadline_miss']}/{c['deadline_total']}")
+        if refused:
+            print(f"admission refused {refused} request(s) "
+                  f"(AdmissionRejected on their futures)")
     cache_snap = cache.snapshot()
     print(f"schedule cache: {json.dumps(cache.stats.as_dict(), indent=None)} "
           f"(arena {cache_snap['arena_bytes_total']} bytes, "
           f"budget {cache_snap['byte_budget']})")
-    sample = done[0]
-    print(f"sample [{sample.model}]: prompt[{len(sample.prompt)}] -> "
-          f"{sample.generated}")
+    if done:
+        sample = done[0]
+        print(f"sample [{sample.model}]: prompt[{len(sample.prompt)}] -> "
+              f"{sample.generated}")
     if args.trace_out:
         tracer.disable()
         trace = obs.write_chrome_trace(args.trace_out, tracer)

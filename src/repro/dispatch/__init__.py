@@ -26,6 +26,17 @@ member's sequences at once with per-slot tenancy, freed slots refill
 from member queues in fairness order, and the policy is charged per
 tenant by token share (``FairnessPolicy.charge_composed``).
 
+SLO plane (:mod:`slo`): lanes register with a ``priority_class`` (lower =
+more important; strict class ordering composes with any fairness policy
+within a class via :class:`ClassedFairness`) and an optional
+``latency_target_ms``.  Preemption is quantum-granular and free — a
+lower-class lane's grant simply is not renewed while a higher class has
+ready work; in-flight device steps always complete.  Completions feed an
+adaptive overload controller (:class:`AdaptiveController`), and requests
+whose deadlines are provably unmeetable are refused with typed
+:class:`AdmissionRejected` backpressure (or load-shed from the queue
+under overload) — surfaced through ``AsyncDispatcher.submit`` futures.
+
 Thread-safety: every class exported here is safe to use from multiple
 threads; see DESIGN.md §locking-contract for exactly which lock protects
 what and the ordering that keeps the whole layer deadlock-free.
@@ -44,6 +55,7 @@ from .cache import CacheStats, ScheduleCache
 from .dispatcher import Dispatcher, DrainTimeoutError, QueueFullError
 from .fairness import (
     FAIRNESS_POLICIES,
+    ClassedFairness,
     DeficitRoundRobinFairness,
     FairnessPolicy,
     LotteryFairness,
@@ -53,6 +65,7 @@ from .fairness import (
     make_fairness,
 )
 from .metrics import DispatchMetrics, LatencySeries, percentile
+from .slo import AdaptiveController, AdmissionRejected, SLOPolicy
 
 __all__ = [
     "BucketingPolicy", "ExactBucketing", "ExplicitBuckets",
@@ -62,6 +75,7 @@ __all__ = [
     "Dispatcher", "AsyncDispatcher", "QueueFullError", "DrainTimeoutError",
     "FairnessPolicy", "RoundRobinFairness", "WeightedFairness",
     "DeficitRoundRobinFairness", "LotteryFairness",
-    "QuotaFairness", "FAIRNESS_POLICIES", "make_fairness",
+    "QuotaFairness", "ClassedFairness", "FAIRNESS_POLICIES", "make_fairness",
     "DispatchMetrics", "LatencySeries", "percentile",
+    "AdmissionRejected", "AdaptiveController", "SLOPolicy",
 ]

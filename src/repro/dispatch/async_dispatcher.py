@@ -82,6 +82,7 @@ from repro.obs.tracer import get_tracer
 from .dispatcher import Dispatcher, DrainTimeoutError
 from .fairness import FairnessSpec
 from .metrics import DispatchMetrics
+from .slo import AdmissionRejected
 
 _SINGLE = "loop"         # stepper label in "single" mode
 
@@ -492,7 +493,8 @@ class _QuantumArbiter:
         since = max(self._ready_since.pop(name, now),
                     floor, self._last_event)
         if self._metrics is not None:
-            self._metrics.on_grant(max(0.0, now - since))
+            # lane= routes the sample into the per-class grant series too
+            self._metrics.on_grant(max(0.0, now - since), lane=name)
             if self._pool_size:
                 self._metrics.on_pool_occupancy(
                     len(self._inflight), self._pool_size
@@ -735,12 +737,30 @@ class AsyncDispatcher:
 
     # -- passthroughs ------------------------------------------------------
 
-    def register_model(self, name: str, engine: Any, *, weight: float = 1.0) -> Any:
+    def register_model(
+        self,
+        name: str,
+        engine: Any,
+        *,
+        weight: float = 1.0,
+        priority_class: int = 0,
+        latency_target_ms: Optional[float] = None,
+    ) -> Any:
         """Register a tenant; if the dispatcher is live in per-engine mode,
         its stepper thread spawns immediately.  Pool mode needs no spawn:
         the fixed workers multiplex every registered lane, so a hundredth
-        tenant costs a dict entry, not a thread."""
-        out = self.dispatcher.register_model(name, engine, weight=weight)
+        tenant costs a dict entry, not a thread.  ``priority_class`` and
+        ``latency_target_ms`` flow to the SLO plane exactly as on
+        :meth:`Dispatcher.register_model` — grants consult class ordering
+        before fairness, and unmeetable deadlines fail the submit future
+        with :class:`~repro.dispatch.slo.AdmissionRejected`."""
+        out = self.dispatcher.register_model(
+            name,
+            engine,
+            weight=weight,
+            priority_class=priority_class,
+            latency_target_ms=latency_target_ms,
+        )
         with self._cv:
             if (
                 self.stepping == "per-engine"
@@ -932,7 +952,11 @@ class AsyncDispatcher:
         belongs on the submitter, not inside the future), and raises
         ``RuntimeError`` when the loop is dead or was never started — new
         traffic is never silently queued behind a loop that will not serve
-        it.
+        it.  SLO admission control
+        (:class:`~repro.dispatch.slo.AdmissionRejected`: the lane's
+        deadline is provably unmeetable) FAILS THE FUTURE instead — the
+        refusal is per-request scheduling state callers poll like any
+        other completion, and the stepping threads never see it.
         """
         fut = self._new_future()
         try:
@@ -943,6 +967,11 @@ class AsyncDispatcher:
                 tenant=tenant,
                 on_complete=self._completion(fut, on_complete),
             )
+        except AdmissionRejected as exc:
+            self._forget(fut)
+            if fut.set_running_or_notify_cancel():
+                fut.set_exception(exc)
+            return fut
         except BaseException:
             self._forget(fut)
             raise
@@ -953,13 +982,20 @@ class AsyncDispatcher:
         """Enqueue a caller-constructed ``Request``; returns its ``Future``.
 
         Chains (does not replace) any ``on_complete`` already on the
-        request.
+        request.  As with :meth:`submit`, SLO admission refusals fail the
+        returned future rather than raising.
         """
         fut = self._new_future()
         original_cb = getattr(req, "on_complete", None)
         req.on_complete = self._completion(fut, original_cb)
         try:
             self.dispatcher.submit_request(model, req)
+        except AdmissionRejected as exc:
+            req.on_complete = original_cb
+            self._forget(fut)
+            if fut.set_running_or_notify_cancel():
+                fut.set_exception(exc)
+            return fut
         except BaseException:
             # a rejected request must come back unchanged, or a retry would
             # chain the dead future's wrapper under its own
@@ -1101,7 +1137,14 @@ class AsyncDispatcher:
         def done(model: str, req: Any) -> None:
             self._forget(fut)
             if fut.set_running_or_notify_cancel():
-                fut.set_result(req)
+                # a load-shed request completes with a typed admission
+                # error attached: its future FAILS with that error, so
+                # backpressure surfaces exactly where submit's does
+                shed_exc = getattr(req, "_admission_error", None)
+                if shed_exc is not None:
+                    fut.set_exception(shed_exc)
+                else:
+                    fut.set_result(req)
             if user_cb is not None:
                 user_cb(model, req)
 

@@ -68,8 +68,9 @@ import numpy as np
 
 from repro.obs.tracer import get_tracer
 
-from .fairness import FairnessSpec, make_fairness
+from .fairness import ClassedFairness, FairnessSpec, make_fairness
 from .metrics import DispatchMetrics
+from .slo import AdmissionRejected, SLOPolicy
 
 
 class QueueFullError(RuntimeError):
@@ -88,15 +89,21 @@ class _Lane:
     by :meth:`Dispatcher.unregister_model`) refuses new submissions while
     the lane drains out.  Internal to the dispatcher."""
 
-    __slots__ = ("name", "engine", "queue", "queue_mu", "step_mu", "retired")
+    __slots__ = (
+        "name", "engine", "queue", "queue_mu", "step_mu", "retired",
+        "priority_class",
+    )
 
-    def __init__(self, name: str, engine: Any) -> None:
+    def __init__(
+        self, name: str, engine: Any, *, priority_class: int = 0
+    ) -> None:
         self.name = name
         self.engine = engine
         self.queue: deque = deque()
         self.queue_mu = threading.Lock()
         self.step_mu = threading.Lock()
         self.retired = False
+        self.priority_class = priority_class
 
 
 class Dispatcher:
@@ -122,11 +129,16 @@ class Dispatcher:
         completed_log: int = 4096,
         tracer: Optional[Any] = None,
         composer: Optional[Any] = None,
+        slo: Optional[SLOPolicy] = None,
     ) -> None:
         if max_pending < 1:
             raise ValueError(f"max_pending must be >= 1, got {max_pending}")
         self.max_pending = max_pending
         self.metrics = metrics or DispatchMetrics()
+        # SLO plane (repro.dispatch.slo): priority classes, latency
+        # targets, admission control, shedding.  Always present — with no
+        # targets registered it admits everything and costs one dict probe
+        self.slo = slo if slo is not None else SLOPolicy()
         # cross-tenant batch composer (repro.dispatch.batching): when set,
         # compatible lanes share one host engine and step via step_group
         self.composer = composer
@@ -134,6 +146,9 @@ class Dispatcher:
         # default is disabled, so every emit below is one guarded branch
         self.tracer = tracer if tracer is not None else get_tracer()
         self.fairness = make_fairness(fairness)
+        # kept so the first priority-classed registration can adopt the
+        # live policy into a ClassedFairness seeded from the same spec
+        self._fairness_spec = fairness
         self._lanes: dict[str, _Lane] = {}
         self._order: list[str] = []
         self._rank: dict[str, int] = {}      # name -> registration index
@@ -151,6 +166,10 @@ class Dispatcher:
         # walking every registered lane per pump.
         self._ready_mu = threading.Lock()
         self._active_set: set[str] = set()
+        # class-partitioned view of the same ready set (cls -> lane names),
+        # maintained on the identical transitions under _ready_mu — the
+        # O(1) answer to "does a higher class have ready work right now"
+        self._ready_by_class: dict[int, set] = {}
         # lane-readiness delta feed (event-driven arbiter hand-off): set by
         # the async layer, invoked UNDER _ready_mu with (name, active) so
         # deltas reach the consumer in truth order — a submit's "active"
@@ -165,15 +184,39 @@ class Dispatcher:
 
     # -- registration ------------------------------------------------------
 
-    def register_model(self, name: str, engine: Any, *, weight: float = 1.0) -> Any:
+    def register_model(
+        self,
+        name: str,
+        engine: Any,
+        *,
+        weight: float = 1.0,
+        priority_class: int = 0,
+        latency_target_ms: Optional[float] = None,
+    ) -> Any:
         """Add a tenant: ``name`` gets its own lane over ``engine``.
 
         ``weight`` parameterizes the fairness policy (decode-quantum share
         under ``weighted``, refill-rate multiplier under ``quota``).
+        ``priority_class`` (lower = more important; default 0) places the
+        lane in the SLO plane's strict class ordering: the first nonzero
+        class upgrades a single-class fairness policy in place to
+        :class:`~repro.dispatch.fairness.ClassedFairness` (existing lanes
+        keep their schedule as class 0).  ``latency_target_ms`` gives the
+        lane a per-request deadline — completions feed the adaptive
+        overload controller and submissions gain admission control
+        (:class:`~repro.dispatch.slo.AdmissionRejected` backpressure).
         Registration is thread-safe and allowed while serving is live —
         an ``AsyncDispatcher`` picks the new lane up on its next pass.
         """
-        lane = _Lane(name, engine)
+        if priority_class < 0:
+            raise ValueError(
+                f"priority_class must be >= 0, got {priority_class}"
+            )
+        if latency_target_ms is not None and latency_target_ms <= 0:
+            raise ValueError(
+                f"latency_target_ms must be > 0, got {latency_target_ms}"
+            )
+        lane = _Lane(name, engine, priority_class=int(priority_class))
         with self._reg_mu:
             if name in self._lanes:
                 raise ValueError(f"model {name!r} already registered")
@@ -182,8 +225,26 @@ class Dispatcher:
             self._rank[name] = self._next_rank
             self._next_rank += 1
             self._reg_epoch += 1
+        existing = [n for n in self.models if n != name]
         with self._fair_mu:
-            self.fairness.register(name, weight=weight)
+            if priority_class != 0 and not isinstance(
+                self.fairness, ClassedFairness
+            ):
+                # lazy upgrade: the live policy becomes class 0 with all
+                # its accumulated state; further classes get fresh inner
+                # policies built from the original spec
+                self.fairness = ClassedFairness.adopt(
+                    self.fairness, self._fairness_spec, existing
+                )
+            self.fairness.register(
+                name, weight=weight, priority_class=priority_class
+            )
+        self.slo.register_lane(
+            name,
+            priority_class=priority_class,
+            latency_target_ms=latency_target_ms,
+        )
+        self.metrics.set_lane_class(name, priority_class)
         self.metrics.track_engine(name)   # lift any unregister tombstone
         if self.composer is not None:
             self.composer.add_lane(name, engine)
@@ -242,11 +303,13 @@ class Dispatcher:
         # registry removal, so no new grant can form for a vanishing lane
         with self._ready_mu:
             self._active_set.discard(name)
+            self._discard_classed_locked(name, lane.priority_class)
             hook = self._lane_event_hook
             if hook is not None:
                 hook(name, False)
         with self._fair_mu:
             self.fairness.unregister(name)
+        self.slo.unregister_lane(name)
         with self._reg_mu:
             self._lanes.pop(name, None)
             if name in self._order:
@@ -261,6 +324,7 @@ class Dispatcher:
         # outlive the tenant
         with self._ready_mu:
             self._active_set.discard(name)
+            self._discard_classed_locked(name, lane.priority_class)
             hook = self._lane_event_hook
             if hook is not None:
                 hook(name, False)
@@ -341,9 +405,12 @@ class Dispatcher:
 
         Raises ``KeyError`` for an unknown model, a validation error for a
         request the engine can never serve (synchronously, on the
-        submitter), and :class:`QueueFullError` at capacity.  Only the
-        lane's queue lock and the O(1) counter lock are taken, so submit
-        latency is independent of engine step time.
+        submitter), :class:`QueueFullError` at capacity, and — when the
+        lane carries a latency target whose deadline is provably
+        unmeetable — :class:`~repro.dispatch.slo.AdmissionRejected`, with
+        the pending charge rolled back.  Only the lane's queue lock and
+        the O(1) counter lock are taken, so submit latency is independent
+        of engine step time.
         """
         from repro.serving.engine import Request  # lazy: avoid import cycle
 
@@ -358,6 +425,7 @@ class Dispatcher:
         )
         self._validate(lane, req)
         self._admit(req)
+        self._slo_admit(lane, req)
         with self._count_mu:
             req.rid = self._next_rid
             self._next_rid += 1
@@ -365,13 +433,37 @@ class Dispatcher:
         return req
 
     def submit_request(self, model: str, req: Any) -> Any:
-        """Enqueue a caller-constructed ``Request`` (keeps its rid/fields)."""
+        """Enqueue a caller-constructed ``Request`` (keeps its rid/fields;
+        a pre-stamped ``req.deadline`` is honored by admission control)."""
         lane = self._lane(model)
         self._validate(lane, req)
         req.model = model
         self._admit(req)
+        self._slo_admit(lane, req)
         self._enqueue(lane, req)
         return req
+
+    def _slo_admit(self, lane: _Lane, req: Any) -> None:
+        """Admission control (after the capacity charge, before enqueue):
+        stamp the request's deadline from the lane's latency target and
+        raise :class:`~repro.dispatch.slo.AdmissionRejected` — with the
+        pending backpressure charge rolled back, exactly like a racing
+        retirement — when that deadline is provably unmeetable behind the
+        work already queued."""
+        with lane.queue_mu:
+            queued_ahead = len(lane.queue)
+        try:
+            req.deadline = self.slo.admit(
+                lane.name,
+                queued_ahead,
+                deadline=getattr(req, "deadline", 0.0) or None,
+            )
+        except AdmissionRejected:
+            req._dispatcher_pending = False
+            with self._count_mu:
+                self._pending_count -= 1
+            self.metrics.on_admission_reject(lane.priority_class)
+            raise
 
     def _enqueue(self, lane: _Lane, req: Any) -> None:
         """Append to the lane FIFO (re-checking retirement under the queue
@@ -397,6 +489,13 @@ class Dispatcher:
                 "queued", cat="request", lane=lane.name, rid=req.rid
             )
         self._touch_ready(lane)
+        # overload response on the submitter's thread: when the adaptive
+        # controller reports a tripped class, walk the queues once and
+        # shed what provably cannot make its deadline anymore.  Gated on
+        # the O(classes) flag check, so the untripped fast path pays one
+        # method call
+        if self.slo.any_overloaded():
+            self.shed()
 
     def set_lane_event_hook(
         self, hook: Optional[Callable[[str, bool], None]]
@@ -447,13 +546,37 @@ class Dispatcher:
             was = lane.name in self._active_set
             if active and not was:
                 self._active_set.add(lane.name)
+                self._ready_by_class.setdefault(
+                    lane.priority_class, set()
+                ).add(lane.name)
             elif not active and was:
                 self._active_set.discard(lane.name)
+                self._discard_classed_locked(lane.name, lane.priority_class)
             else:
                 return
             hook = self._lane_event_hook
             if hook is not None:
                 hook(lane.name, active)
+
+    def _discard_classed_locked(self, name: str, cls: int) -> None:
+        """Drop ``name`` from the class-partitioned ready view (caller
+        holds ``_ready_mu``), pruning the class bucket when it empties so
+        the partition stays O(classes-with-ready-work)."""
+        bucket = self._ready_by_class.get(cls)
+        if bucket is not None:
+            bucket.discard(name)
+            if not bucket:
+                del self._ready_by_class[cls]
+
+    def ready_by_class(self) -> dict:
+        """The indexed ready set partitioned by priority class
+        (``{class: sorted lane names}``), most important class first —
+        the SLO plane's O(1)-maintained view of who is contending."""
+        with self._ready_mu:
+            return {
+                cls: sorted(names)
+                for cls, names in sorted(self._ready_by_class.items())
+            }
 
     def _validate(self, lane: _Lane, req: Any) -> None:
         """An unservable request (e.g. prompt beyond the engine's bucket
@@ -563,9 +686,90 @@ class Dispatcher:
         event re-pumps from consistent state."""
         with self._fair_mu:
             try:
-                return self.fairness.peek_ready(list(active), list(ready))
+                picks = self.fairness.peek_ready(list(active), list(ready))
             except KeyError:
-                return []
+                picks = []
+            events = self._drain_preempted_locked()
+        self._report_preemptions(events)
+        return picks
+
+    def _drain_preempted_locked(self) -> Any:
+        # collect (lane, class) displacement events under _fair_mu; the
+        # metrics feed happens after release (metrics' lock stays a leaf)
+        drain = getattr(self.fairness, "drain_preempted", None)
+        return drain() if drain is not None else ()
+
+    def _report_preemptions(self, events: Any) -> None:
+        for _, cls in events:
+            self.metrics.on_preemption(cls)
+
+    def shed(self, *, now: Optional[float] = None) -> list:
+        """Shed queued requests whose deadlines are provably unmeetable.
+
+        Walks every lane that carries a latency target, collects queued
+        requests that can no longer finish by their deadline (given the
+        class's current service estimate and their queue position), and
+        fails them one at a time — each round's victim chosen by
+        :meth:`SLOPolicy.pick_shed`: the **lowest class with the latest
+        deadline**, so interactive work is the last to go.  A shed request
+        completes with ``error`` set and a typed
+        :class:`~repro.dispatch.slo.AdmissionRejected` attached (the async
+        layer fails its future with it); the pending backpressure charge
+        is released through the normal completion path and per-class shed
+        counters are bumped.  In-flight (seated) requests are never
+        touched — shedding, like preemption, acts only at the queue.
+        Returns the shed requests.  Triggered automatically on submit
+        while the adaptive controller reports overload; safe to call
+        directly at any time (no-op when every deadline is still
+        meetable)."""
+        shed_reqs: list = []
+        # each round re-walks the queues (positions shift as victims
+        # leave); bounded by the pending cap so a racing producer cannot
+        # pin the submitter in here
+        for _ in range(self.max_pending + 1):
+            cands: list = []
+            for lane in self._lanes_snapshot():
+                if self.slo.target_s(lane.name) is None:
+                    continue
+                with lane.queue_mu:
+                    queued = list(lane.queue)
+                for pos, req in enumerate(queued):
+                    dl = getattr(req, "deadline", 0.0)
+                    if dl and self.slo.unmeetable(
+                        lane.name, dl, pos, now=now
+                    ):
+                        cands.append(
+                            (lane.name, lane.priority_class, dl, req)
+                        )
+            if not cands:
+                break
+            i = self.slo.pick_shed([c[:3] for c in cands])
+            name, cls, dl, req = cands[i]
+            lane = self._lane_or_none(name)
+            if lane is None:
+                continue
+            with lane.queue_mu:
+                try:
+                    lane.queue.remove(req)
+                    removed = True
+                except ValueError:
+                    removed = False   # a stepper seated it first: not ours
+            if not removed:
+                continue
+            exc = AdmissionRejected(
+                f"shed under overload: {name!r} (class {cls}) deadline "
+                "became unmeetable while queued",
+                lane=name, priority_class=cls, deadline=dl,
+            )
+            req.error = str(exc)
+            req._admission_error = exc
+            req.done = True
+            req.t_done = time.perf_counter()
+            self.metrics.on_shed(cls)
+            self._touch_ready(lane)
+            self._complete(name, [req])
+            shed_reqs.append(req)
+        return shed_reqs
 
     def step_lane(self, name: str, *, release: Optional[Callable[[], None]] = None) -> list:
         """One scheduling quantum for a single lane; returns its finished
@@ -633,6 +837,7 @@ class Dispatcher:
         with self._fair_mu:
             self.fairness.charge(name, steps=1, tokens=tokens)
         self.metrics.on_engine_step(name, dt, tokens=tokens)
+        self.slo.on_step(name, dt)   # class service-time estimate feed
         # fold the post-step truth into the ready index (and deliver the
         # delta to the arbiter) BEFORE returning the grant: the release
         # re-pump must not re-grant a lane this quantum just drained
@@ -759,6 +964,7 @@ class Dispatcher:
                 # steps appear in every occupant's series with the shared
                 # step's wall time
                 self.metrics.on_engine_step(owner, dt, tokens=toks)
+                self.slo.on_step(owner, dt)
         if occupied or tokens_by_lane:
             self.metrics.on_composed_step(
                 dt, occupied=occupied, capacity=capacity,
@@ -824,6 +1030,18 @@ class Dispatcher:
                 self.tracer.async_end("request", req.rid, lane=name)
             self.metrics.observe_request(req)
             self.completed.append(req)
+            if getattr(req, "error", None) is None:
+                # served requests with a latency target feed the adaptive
+                # controller and the per-class deadline-miss series (shed
+                # requests never do — they'd double-count the overload)
+                target = self.slo.target_s(name)
+                if target is not None and req.t_done and req.t_submit:
+                    missed = self.slo.on_complete(
+                        name, req.t_done - req.t_submit
+                    )
+                    self.metrics.on_deadline(
+                        self.slo.lane_class(name), missed
+                    )
             if getattr(req, "_dispatcher_pending", False):
                 req._dispatcher_pending = False
                 with self._count_mu:
@@ -854,6 +1072,8 @@ class Dispatcher:
                 # a lane mid-(un)register: skip the quantum, next one sees
                 # consistent registry + policy state
                 order = []
+            events = self._drain_preempted_locked()
+        self._report_preemptions(events)
         finished = []
         served_groups: set[int] = set()
         for name in order:
@@ -912,6 +1132,11 @@ class Dispatcher:
         snap["pending"] = self.pending()
         with self._ready_mu:
             snap["ready_lanes"] = len(self._active_set)
+            snap["ready_by_class"] = {
+                cls: len(names)
+                for cls, names in sorted(self._ready_by_class.items())
+            }
+        snap["slo"] = self.slo.snapshot()
         with self._fair_mu:
             snap["fairness"] = self.fairness.snapshot()
         if self.composer is not None:

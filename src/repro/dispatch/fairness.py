@@ -7,7 +7,7 @@ is the only place scheduling preference lives — engines and the dispatcher
 itself stay policy-free, which is what lets the same implementations back
 both the synchronous ``Dispatcher`` and the threaded ``AsyncDispatcher``.
 
-Five implementations:
+Six implementations:
 
 * :class:`RoundRobinFairness` — serve every active lane each quantum,
   rotating which goes first (the original ``Dispatcher`` behavior);
@@ -34,7 +34,13 @@ Five implementations:
   refilled by ``rate`` tokens **per wall-clock second** (monotonic clock)
   up to ``burst``; lanes with credit are served richest-first and debited
   what they produce.  Work-conserving by default (if nobody has credit, the
-  least-indebted lane still runs).
+  least-indebted lane still runs);
+* :class:`ClassedFairness` — strict priority classes
+  (``register_model(priority_class=...)``, lower = more important)
+  composing any of the above *within* each class: the most important
+  class with eligible lanes takes every quantum, which realizes
+  quantum-granularity preemption as grant **non-renewal** — see
+  ``repro.dispatch.slo`` for the admission/SLO half of that plane.
 
 Policies are NOT internally locked: the owning dispatcher serializes all
 calls (``Dispatcher._fair_mu`` — one dedicated mutex, shared with the
@@ -58,8 +64,16 @@ _MIN_WEIGHT = 1e-6      # stride floor: weight 0 means "background", not "never"
 class FairnessPolicy:
     """Decides the service order of lanes, one scheduling quantum at a time."""
 
-    def register(self, lane: str, *, weight: float = 1.0) -> None:
-        """Admit ``lane`` to the schedule (called once per model)."""
+    def register(
+        self, lane: str, *, weight: float = 1.0, priority_class: int = 0
+    ) -> None:
+        """Admit ``lane`` to the schedule (called once per model).
+
+        ``priority_class`` is part of the registration protocol so the
+        dispatcher can pass it unconditionally; only
+        :class:`ClassedFairness` acts on it — the single-class policies
+        ignore it (every lane is one flat class to them).
+        """
         raise NotImplementedError
 
     def unregister(self, lane: str) -> None:
@@ -138,8 +152,10 @@ class RoundRobinFairness(FairnessPolicy):
         self._turn = 0
         self._served: dict[str, int] = {}
 
-    def register(self, lane: str, *, weight: float = 1.0) -> None:
-        """Admit ``lane``; round-robin ignores weights."""
+    def register(
+        self, lane: str, *, weight: float = 1.0, priority_class: int = 0
+    ) -> None:
+        """Admit ``lane``; round-robin ignores weights and classes."""
         self._served[lane] = 0
 
     def unregister(self, lane: str) -> None:
@@ -183,8 +199,11 @@ class WeightedFairness(FairnessPolicy):
         self._served: dict[str, int] = {}
         self._last_active: frozenset = frozenset()
 
-    def register(self, lane: str, *, weight: float = 1.0) -> None:
-        """Admit ``lane`` at ``weight`` (preset mapping wins if present)."""
+    def register(
+        self, lane: str, *, weight: float = 1.0, priority_class: int = 0
+    ) -> None:
+        """Admit ``lane`` at ``weight`` (preset mapping wins if present;
+        ``priority_class`` is ignored — stride is single-class)."""
         w = float(self._preset.get(lane, weight))
         if w < 0:
             raise ValueError(f"weight must be >= 0, got {w} for {lane!r}")
@@ -292,10 +311,13 @@ class QuotaFairness(FairnessPolicy):
         self._served: dict[str, int] = {}
         self._tokens: dict[str, int] = {}
 
-    def register(self, lane: str, *, weight: float = 1.0) -> None:
+    def register(
+        self, lane: str, *, weight: float = 1.0, priority_class: int = 0
+    ) -> None:
         """Admit ``lane`` with a full burst of credit.  ``weight`` scales
         the base refill rate, so ``register_model(weight=3)`` means the
-        same thing under quota as under weighted fairness."""
+        same thing under quota as under weighted fairness
+        (``priority_class`` is ignored — quota is single-class)."""
         rate = float(self._rates.get(lane, self.rate * max(weight, 0.0)))
         self._rate_of[lane] = rate
         self._budget[lane] = self.burst
@@ -397,8 +419,11 @@ class DeficitRoundRobinFairness(FairnessPolicy):
         self._rounds = 0
         self._last_active: frozenset = frozenset()
 
-    def register(self, lane: str, *, weight: float = 1.0) -> None:
-        """Admit ``lane`` at ``weight`` (preset mapping wins if present)."""
+    def register(
+        self, lane: str, *, weight: float = 1.0, priority_class: int = 0
+    ) -> None:
+        """Admit ``lane`` at ``weight`` (preset mapping wins if present;
+        ``priority_class`` is ignored — DRR is single-class)."""
         w = float(self._preset.get(lane, weight))
         if w < 0:
             raise ValueError(f"weight must be >= 0, got {w} for {lane!r}")
@@ -522,8 +547,11 @@ class LotteryFairness(FairnessPolicy):
         self._weight: dict[str, float] = {}
         self._served: dict[str, int] = {}
 
-    def register(self, lane: str, *, weight: float = 1.0) -> None:
-        """Admit ``lane`` with ``weight`` tickets (preset mapping wins)."""
+    def register(
+        self, lane: str, *, weight: float = 1.0, priority_class: int = 0
+    ) -> None:
+        """Admit ``lane`` with ``weight`` tickets (preset mapping wins;
+        ``priority_class`` is ignored — lottery is single-class)."""
         w = float(self._preset.get(lane, weight))
         if w < 0:
             raise ValueError(f"weight must be >= 0, got {w} for {lane!r}")
@@ -567,6 +595,201 @@ class LotteryFairness(FairnessPolicy):
         }
 
 
+class ClassedFairness(FairnessPolicy):
+    """Strict priority classes composed over per-class inner policies.
+
+    Lanes register with a ``priority_class`` (**lower is more
+    important**: class 0 is interactive, class 1+ batch tiers).  Each
+    class owns its own inner fairness policy built from ``inner`` (any
+    :data:`FairnessSpec` — ``"drr"``, ``"weighted"``, ``"lottery"``, a
+    policy instance used as a template, ...), so weights and shares keep
+    their meaning *within* a class while classes themselves are ordered
+    strictly: a grant decision looks only at the most important class
+    that has eligible lanes and delegates to that class's inner policy.
+
+    This is what makes preemption quantum-granular and free: the
+    dispatcher/arbiter consult the policy at every quantum boundary, so
+    when a higher-class lane goes ready, the lower-class lane that held
+    the last grant simply is **not renewed** — its in-flight device step
+    always completes untouched (tokens stay identical to the sync
+    reference), it just doesn't get the next quantum.  Each such
+    displacement (a previously-granted lane passed over, while still
+    having work, for a more important class) is counted; the dispatcher
+    drains the events via :meth:`drain_preempted` into per-class metrics.
+
+    Holds compose: when the top ready class's inner policy returns ``[]``
+    (e.g. DRR holding for its round owners), the whole policy holds —
+    lower classes do NOT leak through, which is exactly the strictness
+    that keeps the interactive class's grant tail tight under overload.
+    Work conservation across classes still holds where it matters: a
+    class with no *ready* lanes (all executing) never blocks the classes
+    below it.
+    """
+
+    def __init__(self, inner: "FairnessSpec" = None) -> None:
+        self._spec = inner
+        self._inner: dict[int, FairnessPolicy] = {}
+        self._class_of: dict[str, int] = {}
+        self._held: set = set()              # lanes picked by the last grant
+        self._pending_preempted: list = []   # (lane, cls) since last drain
+        self.preemptions = 0
+        self._preempted_by_class: dict[int, int] = {}
+
+    def _make_inner(self) -> FairnessPolicy:
+        # a policy INSTANCE as spec is a template, not a shared schedule:
+        # each class gets a fresh policy of the same type
+        spec = self._spec
+        if isinstance(spec, FairnessPolicy):
+            return type(spec)()
+        return make_fairness(spec)
+
+    @classmethod
+    def adopt(
+        cls,
+        policy: FairnessPolicy,
+        spec: "FairnessSpec",
+        lanes: Sequence[str],
+    ) -> "ClassedFairness":
+        """Wrap a live single-class ``policy`` as class 0 of a new
+        classed schedule, carrying its accumulated state (passes,
+        deficits, counters) so the upgrade is invisible to the lanes
+        already registered.  ``spec`` seeds the inner policies of any
+        further classes; ``lanes`` are the already-registered lane names
+        (all class 0).  This is how the dispatcher upgrades lazily: the
+        first ``register_model(priority_class=1)`` adopts, earlier
+        tenants keep their schedule."""
+        out = cls(inner=spec)
+        out._inner[0] = policy
+        for lane in lanes:
+            out._class_of[lane] = 0
+        return out
+
+    def register(
+        self, lane: str, *, weight: float = 1.0, priority_class: int = 0
+    ) -> None:
+        """Admit ``lane`` at ``weight`` inside class ``priority_class``
+        (lower = more important), creating that class's inner policy on
+        first use."""
+        if priority_class < 0:
+            raise ValueError(
+                f"priority_class must be >= 0, got {priority_class}"
+            )
+        cls_id = int(priority_class)
+        inner = self._inner.get(cls_id)
+        if inner is None:
+            inner = self._inner[cls_id] = self._make_inner()
+        self._class_of[lane] = cls_id
+        inner.register(lane, weight=weight)
+
+    def unregister(self, lane: str) -> None:
+        """Scrub ``lane`` from its class's inner policy AND from the
+        preemption bookkeeping (held-grant set, undrained displacement
+        events) — a retired tenant that was granted-then-not-renewed must
+        not linger anywhere."""
+        cls_id = self._class_of.pop(lane, None)
+        self._held.discard(lane)
+        if self._pending_preempted:
+            self._pending_preempted = [
+                ev for ev in self._pending_preempted if ev[0] != lane
+            ]
+        if cls_id is not None:
+            inner = self._inner.get(cls_id)
+            if inner is not None:
+                inner.unregister(lane)
+
+    def _split_top(self, lanes: Sequence[str]):
+        # (top class id, lanes of that class) among the known subset
+        known = [l for l in lanes if l in self._class_of]
+        if not known:
+            return None, []
+        top = min(self._class_of[l] for l in known)
+        return top, [l for l in known if self._class_of[l] == top]
+
+    def _note_grant(self, picks: Sequence[str], candidates: Sequence[str], top: int) -> None:
+        # displacement = a lane we granted last time, still wanting work,
+        # passed over because a more important class took the quantum
+        if not picks:
+            return
+        cand = set(candidates)
+        for lane in self._held:
+            if lane in cand and self._class_of.get(lane, top) > top:
+                cls_id = self._class_of[lane]
+                self._pending_preempted.append((lane, cls_id))
+                self.preemptions += 1
+                self._preempted_by_class[cls_id] = (
+                    self._preempted_by_class.get(cls_id, 0) + 1
+                )
+        self._held = set(picks)
+
+    def select(self, active: Sequence[str]) -> list[str]:
+        """Serve the most important class with active lanes, delegating
+        the order within it to that class's inner policy."""
+        top, subset = self._split_top(active)
+        if top is None:
+            return []
+        picks = self._inner[top].select(subset)
+        self._note_grant(picks, [l for l in active if l in self._class_of], top)
+        return picks
+
+    def peek_ready(self, active: Sequence[str], ready: Sequence[str]) -> list[str]:
+        """Grantable lanes: the most important class with **ready** lanes
+        wins the quantum; its inner policy picks (and may hold) within
+        the class.  A class whose lanes are all executing does not block
+        the classes below it — but a top class whose inner policy holds
+        does, which is the strict-priority contract."""
+        top, ready_top = self._split_top(ready)
+        if top is None:
+            return []
+        active_top = [
+            l for l in active if self._class_of.get(l) == top
+        ]
+        picks = self._inner[top].peek_ready(active_top, ready_top)
+        self._note_grant(picks, [l for l in ready if l in self._class_of], top)
+        return picks
+
+    def charge(self, lane: str, *, steps: float = 1, tokens: int = 0) -> None:
+        """Route consumption accounting to ``lane``'s class's inner
+        policy (unknown lanes — stragglers racing an unregister — are
+        ignored, matching every single-class policy)."""
+        cls_id = self._class_of.get(lane)
+        if cls_id is None:
+            return
+        inner = self._inner.get(cls_id)
+        if inner is not None:
+            inner.charge(lane, steps=steps, tokens=tokens)
+
+    def drain_preempted(self) -> list:
+        """Return and clear the ``(lane, priority_class)`` displacement
+        events recorded since the last drain — the dispatcher forwards
+        them to per-class preemption counters outside the fairness lock.
+        """
+        out = self._pending_preempted
+        self._pending_preempted = []
+        return out
+
+    def lane_class(self, lane: str) -> int:
+        """``lane``'s priority class (0 when unknown)."""
+        return self._class_of.get(lane, 0)
+
+    def snapshot(self) -> dict:
+        """Per-class inner snapshots plus the preemption counters and a
+        merged ``served_steps`` view across classes."""
+        served: dict = {}
+        classes = {}
+        for cls_id, inner in sorted(self._inner.items()):
+            snap = inner.snapshot()
+            classes[cls_id] = snap
+            served.update(snap.get("served_steps", {}))
+        return {
+            "policy": "priority",
+            "class_of": dict(self._class_of),
+            "classes": classes,
+            "preemptions": self.preemptions,
+            "preempted_by_class": dict(self._preempted_by_class),
+            "served_steps": served,
+        }
+
+
 FairnessSpec = Union[FairnessPolicy, str, Mapping[str, float], None]
 
 #: Registered spec keywords -> policy class.  ``tools/check_docs.py``
@@ -578,6 +801,7 @@ FAIRNESS_POLICIES: dict = {
     "quota": QuotaFairness,
     "drr": DeficitRoundRobinFairness,
     "lottery": LotteryFairness,
+    "priority": ClassedFairness,
 }
 
 
@@ -591,7 +815,12 @@ def make_fairness(spec: FairnessSpec) -> FairnessPolicy:
     per weight unit per round); ``"lottery[:SEED]"`` → lottery scheduling
     (probabilistic shares, reproducible under SEED);
     ``"quota[:RATE[:BURST]]"`` → token-rate quotas (RATE tokens per
-    wall-clock second, BURST cap).
+    wall-clock second, BURST cap); ``"priority[:INNER]"`` → strict
+    priority classes (``register_model(priority_class=...)``, lower =
+    more important) composing an INNER policy spec per class — e.g.
+    ``"priority:drr"`` is strict classes with weighted deficit
+    round-robin within each class (INNER defaults to round-robin and may
+    itself carry arguments: ``"priority:drr:0.5"``).
     """
     if spec is None:
         return RoundRobinFairness()
@@ -616,5 +845,7 @@ def make_fairness(spec: FairnessSpec) -> FairnessPolicy:
                 rate, _, burst = rest.partition(":")
                 return QuotaFairness(float(rate), float(burst or 64.0))
             return QuotaFairness()
+        if name == "priority":
+            return ClassedFairness(inner=rest or None)
         raise ValueError(f"unknown fairness policy {spec!r}")
     raise TypeError(f"cannot build a fairness policy from {spec!r}")

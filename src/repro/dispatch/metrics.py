@@ -157,6 +157,21 @@ class DispatchMetrics:
         self._comp_occ_dropped = 0
         self._comp_lane_tokens: dict = {}
         self.composed_step_latency = LatencySeries("composed_step", window=8192)
+        # SLO / priority-class plane: per-class grant + e2e distributions
+        # and the preemption / shed / admission / deadline counters that
+        # make overload behavior per class observable (a priority scheme
+        # you can't see is one you can't trust)
+        self._lane_class: dict = {}          # lane -> priority class
+        self._class_grant: dict = {}         # cls -> LatencySeries
+        self._class_e2e: dict = {}           # cls -> LatencySeries
+        self.preemptions = 0                 # grants not renewed for class
+        self._preempt_by_class: dict = {}
+        self.shed = 0                        # queued requests load-shed
+        self._shed_by_class: dict = {}
+        self.admission_rejected = 0          # AdmissionRejected at submit
+        self._admission_by_class: dict = {}
+        self._deadline_miss: dict = {}       # cls -> completions past target
+        self._deadline_total: dict = {}      # cls -> completions with target
         self._t_first_submit: Optional[float] = None
         self._t_last_done: Optional[float] = None
         self._mu = threading.Lock()
@@ -191,7 +206,7 @@ class DispatchMetrics:
             rec.tokens += tokens
             rec.step_latency.record(seconds)
 
-    def on_grant(self, seconds: float) -> None:
+    def on_grant(self, seconds: float, *, lane: Optional[str] = None) -> None:
         """Record one quantum grant: ``seconds`` is the arbiter's reaction
         time — from the latest of the lane becoming ready, its executor
         (blocked stepper / idle pool worker) becoming free, and the last
@@ -199,10 +214,64 @@ class DispatchMetrics:
         behind busy executors and a policy's own rationing (stride holding
         for its top pick) are scheduling decisions, not hand-off delay,
         and are excluded.  Fed by the async layer's arbiter on every
-        grant, in every arbitrated stepping mode."""
+        grant, in every arbitrated stepping mode.  When ``lane`` is given
+        and carries a priority class (:meth:`set_lane_class`), the sample
+        also lands in that class's grant series — the per-class tail the
+        SLO plane is judged by."""
         with self._mu:
             self._grants += 1
             self.grant_latency.record(seconds)
+            if lane is not None and lane in self._lane_class:
+                cls = self._lane_class[lane]
+                series = self._class_grant.get(cls)
+                if series is None:
+                    series = self._class_grant[cls] = LatencySeries(
+                        f"grant_class_{cls}", window=65536
+                    )
+                series.record(seconds)
+
+    def set_lane_class(self, lane: str, cls: int) -> None:
+        """Bind ``lane`` to priority class ``cls`` so grant and e2e
+        samples route into per-class series — called by the dispatcher at
+        registration (:func:`drop_engine` unbinds)."""
+        with self._mu:
+            self._lane_class[lane] = int(cls)
+
+    def on_preemption(self, cls: int, n: int = 1) -> None:
+        """Count ``n`` quantum-boundary preemptions (grants not renewed)
+        suffered by class ``cls`` lanes in favor of a higher class."""
+        with self._mu:
+            self.preemptions += n
+            self._preempt_by_class[cls] = (
+                self._preempt_by_class.get(cls, 0) + n
+            )
+
+    def on_shed(self, cls: int) -> None:
+        """Count one queued class-``cls`` request load-shed because its
+        deadline became unmeetable."""
+        with self._mu:
+            self.shed += 1
+            self._shed_by_class[cls] = self._shed_by_class.get(cls, 0) + 1
+
+    def on_admission_reject(self, cls: int) -> None:
+        """Count one class-``cls`` submission refused at admission
+        (``AdmissionRejected``: the deadline was provably unmeetable)."""
+        with self._mu:
+            self.admission_rejected += 1
+            self._admission_by_class[cls] = (
+                self._admission_by_class.get(cls, 0) + 1
+            )
+
+    def on_deadline(self, cls: int, missed: bool) -> None:
+        """Record one completed class-``cls`` request that carried a
+        latency target: ``missed`` says whether it finished past its
+        deadline (the deadline-miss series is the ratio of these)."""
+        with self._mu:
+            self._deadline_total[cls] = self._deadline_total.get(cls, 0) + 1
+            if missed:
+                self._deadline_miss[cls] = (
+                    self._deadline_miss.get(cls, 0) + 1
+                )
 
     def on_grant_cost(self, seconds: float) -> None:
         """Record the arbiter CPU cost attributed to one grant: selection
@@ -234,6 +303,7 @@ class DispatchMetrics:
         with self._mu:
             self._engines.pop(model, None)
             self._comp_lane_tokens.pop(model, None)
+            self._lane_class.pop(model, None)
             self._dropped.add(model)
 
     def track_engine(self, model: str) -> None:
@@ -309,6 +379,14 @@ class DispatchMetrics:
                 self.ttft.record(req.t_first - req.t_submit)
             if req.t_done and req.t_submit:
                 self.e2e.record(req.t_done - req.t_submit)
+                cls = self._lane_class.get(getattr(req, "model", None))
+                if cls is not None:
+                    series = self._class_e2e.get(cls)
+                    if series is None:
+                        series = self._class_e2e[cls] = LatencySeries(
+                            f"e2e_class_{cls}"
+                        )
+                    series.record(req.t_done - req.t_submit)
                 if ntok > 1 and req.t_first:
                     # decode tokens exclude the one produced by prefill
                     self.per_token.record(
@@ -385,6 +463,45 @@ class DispatchMetrics:
                     for model, rec in self._engines.items()
                 },
             }
+            snap["preemptions"] = self.preemptions
+            snap["shed"] = self.shed
+            snap["admission_rejected"] = self.admission_rejected
+            if self._lane_class:
+                all_classes = sorted(
+                    set(self._lane_class.values())
+                    | set(self._class_grant)
+                    | set(self._class_e2e)
+                    | set(self._preempt_by_class)
+                    | set(self._shed_by_class)
+                    | set(self._admission_by_class)
+                    | set(self._deadline_total)
+                )
+                snap["classes"] = {
+                    cls: {
+                        "lanes": sorted(
+                            l for l, c in self._lane_class.items()
+                            if c == cls
+                        ),
+                        "grant_ms": (
+                            self._class_grant[cls].summary_ms()
+                            if cls in self._class_grant
+                            else LatencySeries("empty").summary_ms()
+                        ),
+                        "e2e_ms": (
+                            self._class_e2e[cls].summary_ms()
+                            if cls in self._class_e2e
+                            else LatencySeries("empty").summary_ms()
+                        ),
+                        "preemptions": self._preempt_by_class.get(cls, 0),
+                        "shed": self._shed_by_class.get(cls, 0),
+                        "admission_rejected": (
+                            self._admission_by_class.get(cls, 0)
+                        ),
+                        "deadline_total": self._deadline_total.get(cls, 0),
+                        "deadline_miss": self._deadline_miss.get(cls, 0),
+                    }
+                    for cls in all_classes
+                }
             if self._comp_steps:
                 occ = np.asarray(self._comp_occ, dtype=np.float64)
                 total_tok = sum(self._comp_lane_tokens.values())

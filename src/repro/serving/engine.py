@@ -46,13 +46,17 @@ class Request:
     the signal saying why.  ``error`` is set (with ``done``) when the
     request was failed rather than served — an unservable prompt reaching
     admission, or a retire racing a direct submit — so no request ever
-    silently vanishes."""
+    silently vanishes.  ``deadline`` (0.0 — none) is stamped by the
+    dispatcher's SLO plane at admission when the lane carries a latency
+    target: submit time plus target, on the SLO policy's clock — the
+    value overload shedding compares against."""
 
     rid: int
     prompt: np.ndarray                 # (P,) int32
     max_new_tokens: int = 16
     tenant: str = ""                   # set by the dispatcher (multi-tenant)
     model: str = ""
+    deadline: float = 0.0              # SLO deadline (0.0: best-effort)
     on_complete: Optional[Callable] = dataclasses.field(
         default=None, repr=False, compare=False
     )

@@ -1,0 +1,348 @@
+"""Deterministic scheduling-scenario harness (fake clock, scripted traces).
+
+The SLO/preemption plane makes claims about *ordering* and *tails* —
+"the interactive lane's first grant after going ready precedes any batch
+renewal", "grant-latency p95 under overload drops with priorities on".
+Asserting those statistically over real threads is flaky by construction;
+this harness asserts them exactly instead:
+
+* :class:`FakeClock` — virtual time, advanced only by the runner, shared
+  with the dispatcher's :class:`~repro.dispatch.slo.SLOPolicy` so every
+  deadline/admission decision is reproducible to the tick;
+* :class:`Arrival` — one scripted submission (virtual time, lane, size);
+* :class:`ScriptedEngine` — a ``_TickEngine``-style instrumented fake:
+  deterministic tokens (request ``rid`` emits ``rid * 1000 + i``), fake-
+  clock timestamps, and a per-step virtual-time log, so token identity
+  and "the in-flight quantum completed" are exact assertions;
+* :class:`ScenarioRunner` — drives the real synchronous
+  :class:`~repro.dispatch.Dispatcher` through the real grant primitive
+  (``fairness_peek`` over the indexed ready set, mirroring the async
+  arbiter's pump) with N virtual workers and unit-cost quanta, entirely
+  on the calling thread: no real threads, no sleeps, no races.  Grants,
+  per-class grant latency (ready→grant in virtual time, re-stamped at
+  quantum release exactly like the arbiter's ``_ready_since``),
+  rejections, sheds, and preemption counts come back in a
+  :class:`ScenarioResult`.
+
+The runner is a *model* of the async arbiter, not a reimplementation: it
+calls the same policy entry points in the same order (peek → grant →
+step → charge → re-peek), so what it proves about ordering is what the
+arbiter enforces — the async suites then check the threaded paths agree
+on tokens.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.dispatch import Dispatcher, SLOPolicy, percentile
+from repro.dispatch.slo import AdmissionRejected
+from repro.serving import Request
+
+PROMPT = np.array([1, 2, 3], np.int32)
+
+_EPS = 1e-9          # float-time slop when comparing virtual timestamps
+
+
+class FakeClock:
+    """Virtual monotonic clock: ``clock()`` reads, ``advance*`` writes."""
+
+    def __init__(self, start: float = 0.0) -> None:
+        self._t = float(start)
+
+    def __call__(self) -> float:
+        return self._t
+
+    def now(self) -> float:
+        """Current virtual time."""
+        return self._t
+
+    def advance(self, dt: float) -> None:
+        """Move time forward by ``dt`` (negative dt is a bug: raises)."""
+        if dt < 0:
+            raise ValueError(f"cannot rewind the clock (dt={dt})")
+        self._t += dt
+
+    def advance_to(self, t: float) -> None:
+        """Move time forward to absolute ``t`` (no-op if already past)."""
+        if t > self._t:
+            self._t = float(t)
+
+
+@dataclasses.dataclass
+class Arrival:
+    """One scripted submission: at virtual time ``t``, lane ``lane``
+    receives a request for ``max_new_tokens`` tokens.  ``rid`` defaults to
+    the arrival's index in the sorted trace, so a priority run and its
+    sync reference agree on request identities even when one of them
+    sheds."""
+
+    t: float
+    lane: str
+    max_new_tokens: int = 4
+    rid: Optional[int] = None
+
+
+class ScriptedEngine:
+    """Deterministic instrumented engine on the fake clock.
+
+    Request ``rid`` emits token ``rid * 1000 + i`` as its i-th output,
+    one per step (the ``SeqEngine`` contract, so token-identity checks
+    compose with the rest of the suite); timestamps come from the shared
+    :class:`FakeClock`; ``step_log`` records each quantum's virtual time —
+    the proof that a preempted lane's in-flight quantum ran to completion.
+    """
+
+    def __init__(self, name: str, clock: FakeClock, slots: int = 1) -> None:
+        self.name = name
+        self._clock = clock
+        self.slots = [None] * slots
+        self.queue: list = []
+        self.step_log: list = []       # virtual time of every step taken
+
+    def submit(self, req: Request) -> None:
+        """Accept one request into the engine-side queue."""
+        self.queue.append(req)
+
+    def free_slots(self) -> int:
+        """Seats available for admission (slots minus engine queue)."""
+        return sum(1 for s in self.slots if s is None) - len(self.queue)
+
+    @property
+    def idle(self) -> bool:
+        """True when no request is queued or seated."""
+        return not self.queue and all(s is None for s in self.slots)
+
+    def step(self) -> list:
+        """One quantum: seat queued requests, emit one token per live
+        request, finish those that reached ``max_new_tokens``."""
+        self.step_log.append(self._clock())
+        for i, s in enumerate(self.slots):
+            if s is None and self.queue:
+                self.slots[i] = self.queue.pop(0)
+        finished = []
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            req.generated.append(req.rid * 1000 + len(req.generated))
+            if not req.t_first:
+                req.t_first = self._clock()
+            if len(req.generated) >= req.max_new_tokens:
+                req.done = True
+                req.t_done = self._clock()
+                self.slots[i] = None
+                finished.append(req)
+        return finished
+
+
+@dataclasses.dataclass
+class ScenarioResult:
+    """Everything a scenario run observed, in virtual time."""
+
+    grants: list = dataclasses.field(default_factory=list)   # (t, lane)
+    grant_latency: dict = dataclasses.field(default_factory=dict)
+    lane_grant_latency: dict = dataclasses.field(default_factory=dict)
+    tokens: dict = dataclasses.field(default_factory=dict)   # (lane,rid)->[]
+    rejected: list = dataclasses.field(default_factory=list)  # (t, lane, rid)
+    shed: list = dataclasses.field(default_factory=list)      # (lane, rid)
+    preemptions: int = 0
+
+    def grants_for(self, lane: str) -> list:
+        """Virtual grant times for ``lane``, in order."""
+        return [t for t, l in self.grants if l == lane]
+
+    def grant_p95(self, cls: int) -> float:
+        """p95 of class ``cls``'s ready→grant latency (virtual seconds)."""
+        return percentile(self.grant_latency.get(cls, []), 95)
+
+    def lane_grant_p95(self, *lanes: str) -> float:
+        """p95 of the pooled ready→grant latency across ``lanes`` — the
+        class-agnostic view a no-priority baseline run is compared on."""
+        pooled: list = []
+        for lane in lanes:
+            pooled.extend(self.lane_grant_latency.get(lane, []))
+        return percentile(pooled, 95)
+
+
+class ScenarioRunner:
+    """Drive a real ``Dispatcher`` through a scripted trace in virtual time.
+
+    ``workers`` virtual executors each serve one granted quantum of
+    ``step_cost`` virtual seconds; grants flow through the dispatcher's
+    own ``fairness_peek`` (the arbiter's grant primitive) over the real
+    indexed ready set, restricted to lanes not currently executing — the
+    arbiter's one-outstanding-grant-per-lane rule.  Completed quanta call
+    the real ``step_lane`` (fairness charge, metrics, SLO feedback,
+    completion callbacks included)."""
+
+    def __init__(
+        self,
+        *,
+        fairness=None,
+        workers: int = 1,
+        step_cost: float = 1.0,
+        slo: Optional[SLOPolicy] = None,
+        max_pending: int = 1_000_000,
+    ) -> None:
+        self.clock = FakeClock()
+        self.slo = slo if slo is not None else SLOPolicy(clock=self.clock)
+        self.disp = Dispatcher(
+            max_pending=max_pending, fairness=fairness, slo=self.slo
+        )
+        self.workers = workers
+        self.step_cost = float(step_cost)
+        self.engines: dict = {}
+        # ready-since stamps, arbiter-style: set on the inactive→active
+        # delta (the dispatcher's own lane-event hook, so the stamp lands
+        # exactly when the indexed ready set admits the lane), popped at
+        # grant, re-stamped at quantum release while work remains
+        self._ready_at: dict = {}
+        self.disp.set_lane_event_hook(self._on_lane_event)
+
+    def _on_lane_event(self, name: str, active: bool) -> None:
+        if active:
+            self._ready_at.setdefault(name, self.clock.now())
+        else:
+            self._ready_at.pop(name, None)
+
+    def add_lane(
+        self,
+        name: str,
+        *,
+        priority_class: int = 0,
+        weight: float = 1.0,
+        latency_target_ms: Optional[float] = None,
+        slots: int = 1,
+    ) -> ScriptedEngine:
+        """Register one scripted lane; returns its instrumented engine."""
+        eng = ScriptedEngine(name, self.clock, slots=slots)
+        self.disp.register_model(
+            name,
+            eng,
+            weight=weight,
+            priority_class=priority_class,
+            latency_target_ms=latency_target_ms,
+        )
+        self.engines[name] = eng
+        return eng
+
+    def _submit(self, arrival: Arrival, rid: int, result: ScenarioResult) -> None:
+        def record(model: str, req: Request) -> None:
+            if getattr(req, "_admission_error", None) is not None:
+                result.shed.append((model, req.rid))
+            else:
+                result.tokens[(model, req.rid)] = list(req.generated)
+
+        req = Request(
+            rid=rid,
+            prompt=PROMPT.copy(),
+            max_new_tokens=arrival.max_new_tokens,
+            on_complete=record,
+        )
+        try:
+            self.disp.submit_request(arrival.lane, req)
+        except AdmissionRejected:
+            result.rejected.append((self.clock.now(), arrival.lane, rid))
+
+    def _grant(self, busy: list, result: ScenarioResult) -> None:
+        # grant until workers are full or the policy yields/holds; one
+        # pick consumed per peek, mirroring the arbiter's pump-then-bank
+        while len(busy) < self.workers:
+            executing = {lane for _, lane in busy}
+            active = self.disp.active_lanes()
+            ready = [l for l in active if l not in executing]
+            if not ready:
+                return
+            picks = [
+                p for p in self.disp.fairness_peek(active, ready)
+                if p in set(ready)
+            ]
+            if not picks:
+                return                      # policy holds the quantum
+            lane = picks[0]
+            t = self.clock.now()
+            result.grants.append((t, lane))
+            cls = self.slo.lane_class(lane)
+            since = self._ready_at.pop(lane, t)
+            lat = max(0.0, t - since)
+            result.grant_latency.setdefault(cls, []).append(lat)
+            result.lane_grant_latency.setdefault(lane, []).append(lat)
+            busy.append((t + self.step_cost, lane))
+
+    def run(
+        self, arrivals, *, max_virtual_time: float = 100_000.0
+    ) -> ScenarioResult:
+        """Play the trace to completion; returns the observations.
+
+        Raises ``RuntimeError`` if the scenario wedges (pending work, no
+        executing quantum, no future arrival — a policy hold that nothing
+        can release) or runs past ``max_virtual_time`` — the deterministic
+        stand-in for a deadlock timeout."""
+        trace = sorted(arrivals, key=lambda a: a.t)
+        result = ScenarioResult()
+        busy: list = []          # (virtual completion time, lane)
+        i = 0
+        while True:
+            now = self.clock.now()
+            while i < len(trace) and trace[i].t <= now + _EPS:
+                a = trace[i]
+                self._submit(a, a.rid if a.rid is not None else i, result)
+                i += 1
+            self._grant(busy, result)
+            if not busy:
+                if i >= len(trace):
+                    if self.disp.pending() > 0:
+                        raise RuntimeError(
+                            f"scenario wedged at t={now}: "
+                            f"{self.disp.pending()} pending, nothing "
+                            "executing, no future arrivals"
+                        )
+                    break
+                self.clock.advance_to(trace[i].t)
+                continue
+            t_next = min(t for t, _ in busy)
+            if i < len(trace):
+                t_next = min(t_next, trace[i].t)
+            if t_next > max_virtual_time:
+                raise RuntimeError(
+                    f"scenario exceeded max_virtual_time={max_virtual_time}"
+                )
+            self.clock.advance_to(t_next)
+            for entry in [e for e in busy if e[0] <= self.clock.now() + _EPS]:
+                busy.remove(entry)
+                _, lane = entry
+                self.disp.step_lane(lane)
+                if self.disp.lane_active(lane):
+                    # arbiter semantics: a lane with remaining work is
+                    # renewal-eligible from the moment its quantum released
+                    self._ready_at[lane] = self.clock.now()
+        snap = self.disp.snapshot()
+        result.preemptions = snap.get("preemptions", 0)
+        return result
+
+
+def sync_token_reference(lane_specs, arrivals) -> dict:
+    """Token-identity oracle: the same lanes and the same trace, served by
+    a plain synchronous no-priority round-robin drain.  ``lane_specs`` is
+    ``[(name, slots), ...]``; arrivals submit in trace order with the same
+    rid assignment as :meth:`ScenarioRunner.run`.  Returns the
+    ``{(lane, rid): tokens}`` map a correct preemption implementation must
+    reproduce exactly for every request it serves (preemption = grant
+    non-renewal, never token surgery)."""
+    clock = FakeClock()
+    disp = Dispatcher(max_pending=1_000_000, slo=SLOPolicy(clock=clock))
+    for name, slots in lane_specs:
+        disp.register_model(name, ScriptedEngine(name, clock, slots=slots))
+    trace = sorted(arrivals, key=lambda a: a.t)
+    for i, a in enumerate(trace):
+        req = Request(
+            rid=a.rid if a.rid is not None else i,
+            prompt=PROMPT.copy(),
+            max_new_tokens=a.max_new_tokens,
+        )
+        disp.submit_request(a.lane, req)
+    done = disp.run_until_drained()
+    return {(r.model, r.rid): list(r.generated) for r in done}

@@ -15,6 +15,17 @@ Fairness invariants, over arbitrary weights and randomized schedules:
 * proportional share — under saturation, served quanta track weights;
 * starvation-freedom — a lane that stays active is served within
   ``ceil(W/w) + n`` quanta of joining, for any randomized submit schedule.
+
+Priority/SLO invariants (ISSUE 8), over random classes, weights, and
+readiness traces:
+
+* class partial order — every grant comes from the minimal priority
+  class with ready work, for ANY readiness schedule;
+* within-class proportionality — composing fairness under
+  :class:`ClassedFairness` preserves the inner policy's weighted shares
+  (an idle higher class must not distort them);
+* shed victim — ``pick_shed`` always returns the lowest class (largest
+  class number), latest deadline within it.
 """
 
 import math
@@ -23,9 +34,11 @@ import pytest
 from _hypothesis_compat import given, settings, st
 
 from repro.dispatch import (
+    ClassedFairness,
     ExactBucketing,
     ExplicitBuckets,
     PowerOfTwoBuckets,
+    SLOPolicy,
     WeightedFairness,
 )
 
@@ -170,3 +183,108 @@ def test_no_starvation_under_randomized_schedule(case):
                     f"{lane} starved for {waiting[lane]} quanta "
                     f"(bound {bound}, weights {weights})"
                 )
+
+
+# -- priority-class invariants ------------------------------------------------
+
+@st.composite
+def classed_schedules(draw, steps=60, max_lanes=5, max_class=3):
+    """Random lanes with random classes/weights plus a random readiness
+    trace (every step: an arbitrary non-empty ready subset)."""
+    n = draw(st.integers(min_value=2, max_value=max_lanes))
+    lanes = [f"lane{i}" for i in range(n)]
+    classes = {
+        lane: draw(st.integers(min_value=0, max_value=max_class))
+        for lane in lanes
+    }
+    weights = {
+        lane: float(draw(st.integers(min_value=1, max_value=8)))
+        for lane in lanes
+    }
+    schedule = []
+    for _ in range(steps):
+        ready = [l for l in lanes if draw(st.booleans())]
+        schedule.append(
+            ready or [lanes[draw(st.integers(min_value=0, max_value=n - 1))]]
+        )
+    return classes, weights, schedule
+
+
+@given(classed_schedules())
+@settings(max_examples=50, deadline=None)
+def test_grant_order_respects_class_partial_order(case):
+    """Property 3a: whatever the readiness trace, every pick belongs to
+    the minimal (most important) class among the ready lanes — strict
+    class ordering admits no exception."""
+    classes, weights, schedule = case
+    policy = ClassedFairness(inner="round_robin")
+    for lane in sorted(classes):
+        policy.register(
+            lane, weight=weights[lane], priority_class=classes[lane]
+        )
+    for ready in schedule:
+        picks = policy.peek_ready(list(ready), list(ready))
+        if not picks:
+            continue
+        top = min(classes[lane] for lane in ready)
+        for lane in picks:
+            assert classes[lane] == top, (
+                f"granted {lane} (class {classes[lane]}) while class {top} "
+                f"had ready work: {sorted(ready)}"
+            )
+            policy.charge(lane, steps=1, tokens=1)
+
+
+@given(weight_maps(max_weight=8))
+@settings(max_examples=50, deadline=None)
+def test_within_class_shares_track_weights_under_priorities(weights):
+    """Property 3b: ClassedFairness composes, it does not replace — the
+    inner stride policy's weight-proportional shares hold within a class
+    (same lag bound as the un-classed test above) even with an idle
+    higher-priority lane registered."""
+    if sum(weights.values()) == 0:
+        weights = {k: 1.0 for k in weights}
+    policy = ClassedFairness(inner="weighted")
+    policy.register("vip", weight=1.0, priority_class=0)   # never ready
+    lanes = sorted(weights)
+    for lane in lanes:
+        policy.register(lane, weight=weights[lane], priority_class=2)
+    quanta = 400
+    served = {lane: 0 for lane in lanes}
+    for _ in range(quanta):
+        for lane in _serve(policy, lanes):
+            served[lane] += 1
+    total = sum(weights.values())
+    for lane in lanes:
+        share = weights[lane] / total
+        slack = 1.0 / max(share, 1e-6) + len(lanes)
+        assert abs(served[lane] - quanta * share) <= slack, (
+            f"{lane} served {served[lane]} of {quanta} "
+            f"(want ~{quanta * share:.1f}, weights {weights})"
+        )
+    assert policy.snapshot()["class_of"]["vip"] == 0
+
+
+@st.composite
+def shed_candidates(draw, max_cands=8):
+    n = draw(st.integers(min_value=1, max_value=max_cands))
+    return [
+        (
+            f"lane{i}",
+            draw(st.integers(min_value=0, max_value=3)),
+            draw(st.integers(min_value=0, max_value=1000)) / 10.0,
+        )
+        for i in range(n)
+    ]
+
+
+@given(shed_candidates())
+@settings(max_examples=100, deadline=None)
+def test_pick_shed_is_lowest_class_latest_deadline(cands):
+    """Property 3c: the shed victim is always from the lowest class
+    (largest class number) present, and carries the latest deadline
+    within that class — interactive work is provably the last to go."""
+    i = SLOPolicy.pick_shed(cands)
+    _, cls, dl = cands[i]
+    assert cls == max(c for _, c, _ in cands)
+    assert dl == max(d for _, c, d in cands if c == cls)

@@ -315,6 +315,50 @@ def test_indexed_ready_set_tracks_submit_and_drain():
     assert disp.snapshot()["ready_lanes"] == 0
 
 
+@pytest.mark.timeout(60)
+def test_unregister_preempted_lane_scrubs_priority_state():
+    """Regression (ISSUE 8 satellite): unregistering a lane while it is
+    *currently preempted* — granted once, then passed over for a
+    higher-class lane, with its displacement event still undrained —
+    must scrub the class-partitioned ready index, the policy's class
+    map / hold set / pending events, and the SLO registry.  Later peeks
+    must neither resurrect the lane nor raise."""
+    disp = Dispatcher(max_pending=64, fairness="priority:round_robin")
+    disp.register_model(
+        "inter", SeqEngine("inter", []),
+        priority_class=0, latency_target_ms=100.0,
+    )
+    disp.register_model("batch", SeqEngine("batch", []), priority_class=1)
+
+    disp.submit_request("batch", _request(0, 4))
+    assert disp.fairness_peek(["batch"], ["batch"]) == ["batch"]
+    disp.step_lane("batch")                 # charged; 3 tokens remain
+    disp.submit_request("inter", _request(1, 1))
+    # peek the POLICY directly so the displacement event stays undrained
+    # (the dispatcher's own peek drains it into metrics immediately)
+    assert disp.fairness.peek_ready(
+        ["inter", "batch"], ["inter", "batch"]
+    ) == ["inter"]
+    assert list(disp.fairness._pending_preempted) == [("batch", 1)]
+    assert disp.ready_by_class() == {0: ["inter"], 1: ["batch"]}
+
+    disp.unregister_model("batch")
+
+    assert disp.ready_by_class() == {0: ["inter"]}
+    snap = disp.fairness.snapshot()
+    assert "batch" not in snap["class_of"]
+    assert disp.fairness.drain_preempted() == []   # event scrubbed, not leaked
+    assert "batch" not in disp.fairness._held
+    assert "batch" not in disp.slo.snapshot()["lanes"]
+    # the grant path keeps working from consistent state
+    assert disp.fairness_peek(disp.active_lanes(), disp.active_lanes()) == [
+        "inter"
+    ]
+    done = disp.run_until_drained()
+    assert [r.rid for r in done if r.error is None] == [1]
+    assert disp.pending() == 0
+
+
 # -- per-worker parking -------------------------------------------------------
 
 @pytest.mark.timeout(60)
