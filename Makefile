@@ -1,8 +1,8 @@
 # Tier-1 verification (ROADMAP.md): must pass from a fresh checkout.
 PY ?= python
 
-.PHONY: test test-scenarios bench-dispatch bench-smoke trace-smoke \
-	serve-example docs-check
+.PHONY: test test-scenarios test-workers bench-dispatch bench-smoke \
+	trace-smoke serve-example docs-check
 
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
@@ -17,6 +17,15 @@ test-scenarios:
 	PYTHONPATH=src $(PY) -m pytest -x -q \
 		tests/test_preemption.py tests/test_slo.py \
 		tests/test_dispatch_properties.py
+
+# The multi-process worker-plane suite (failure matrix over spawn AND
+# fork) under a hard wall-clock bound, plus a leaked-process check:
+# pytest runs in-process inside tools/run_worker_tests.py, so any worker
+# a test failed to reap is still that interpreter's child and
+# multiprocessing.active_children() catches it exactly — the job fails
+# on a leak even when every test passed.
+test-workers:
+	PYTHONPATH=src timeout 600 $(PY) tools/run_worker_tests.py
 
 docs-check:
 	$(PY) tools/check_docs.py

@@ -7,10 +7,13 @@
 Prefill and decode are sealed once per (model, bucket) through the shared
 ``ScheduleCache``; the ``AsyncDispatcher`` steps each tenant on its own
 daemon thread (``--stepping per-engine``, the default — decode overlaps
-across models) or multiplexes every tenant over a small fixed worker pool
+across models), multiplexes every tenant over a small fixed worker pool
 (``--stepping pool --pool-size N`` — the many-tenant shape: thread count
-stays at N no matter how many models register) while ``submit`` returns
-futures immediately — the request loop is pure submission (the
+stays at N no matter how many models register), or ships granted quanta
+to per-device **worker processes** (``--stepping workers --devices N`` —
+the multi-device shape: each process owns its device, engines, and
+schedule cache, and a dying device fails only its own lanes) while
+``submit`` returns futures immediately — the request loop is pure submission (the
 inference-serving face of the paper's AoT scheduling), and no stepper
 ever compiles (``builds_on_thread`` below stays 0).  ``--fairness`` picks
 the policy: round-robin rotation, weighted fair queueing (``--weights``,
@@ -33,6 +36,17 @@ on their futures instead of poisoning the tail.
         --archs stablelm-1.6b,phi4-mini-3.8b \
         --priority-classes 0,1 --latency-targets-ms 5000,0
 
+Multi-process, multi-device: ``--stepping workers`` registers picklable
+``ServingEngineSpec`` recipes instead of live engines — each worker
+process builds its engines on its own device (round-robin lane
+assignment) and the parent keeps only the O(1) grant path.  On a
+CPU-only host, fake N devices first:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+    PYTHONPATH=src python examples/serve_llm.py \
+        --archs stablelm-1.6b,phi4-mini-3.8b \
+        --stepping workers --devices 4
+
 Observability (``repro.obs``): ``--trace-out trace.json`` records the
 whole run with the span tracer and exports Chrome trace-event JSON —
 open it at https://ui.perfetto.dev or chrome://tracing to see each
@@ -52,9 +66,14 @@ import numpy as np
 
 import repro.configs as C
 import repro.obs as obs
-from repro.dispatch import AdmissionRejected, AsyncDispatcher, ScheduleCache
+from repro.dispatch import (
+    AdmissionRejected,
+    AsyncDispatcher,
+    ScheduleCache,
+    WorkerPlane,
+)
 from repro.models import init_model
-from repro.serving import ServingEngine
+from repro.serving import ServingEngine, ServingEngineSpec
 
 
 def main():
@@ -80,12 +99,18 @@ def main():
                          "(0 = best-effort; targeted lanes get admission "
                          "control and deadline tracking)")
     ap.add_argument("--stepping", default="per-engine",
-                    choices=("per-engine", "single", "pool"),
-                    help="one stepper thread per model, one shared loop, or "
-                         "a fixed worker pool multiplexing all tenants")
+                    choices=("per-engine", "single", "pool", "workers"),
+                    help="one stepper thread per model, one shared loop, "
+                         "a fixed worker pool multiplexing all tenants, or "
+                         "per-device worker processes")
     ap.add_argument("--pool-size", type=int, default=0,
                     help="worker count for --stepping pool "
                          "(0 = min(8, cpu_count))")
+    ap.add_argument("--devices", type=int, default=0,
+                    help="worker processes for --stepping workers, one per "
+                         "device (0 = every host device; on CPU, fake N "
+                         "devices with XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N)")
     ap.add_argument("--max-concurrent-steps", type=int, default=0,
                     help="cap simultaneous engine steps (0 = no cap)")
     ap.add_argument("--cache-budget-mb", type=float, default=0.0,
@@ -125,28 +150,55 @@ def main():
         byte_budget=(int(args.cache_budget_mb * 2**20)
                      if args.cache_budget_mb else None),
     )
+    workers_mode = args.stepping == "workers"
+    plane = None
+    if workers_mode:
+        # spawned (never forked: the parent's JAX runtime is live) worker
+        # processes, one per device; xla_host_devices re-applies the
+        # forced host-device count in each child so --devices N works
+        # even when XLA_FLAGS was only set for the parent
+        n_devices = args.devices or len(jax.devices())
+        plane = WorkerPlane(
+            n_devices, start_method="spawn", xla_host_devices=n_devices,
+        )
     dispatcher = AsyncDispatcher(
         max_pending=4 * args.requests,
         fairness=args.fairness,
         stepping=args.stepping,
         max_concurrent_steps=args.max_concurrent_steps or None,
         pool_size=args.pool_size or None,
+        worker_plane=plane,
     )
 
     t0 = time.perf_counter()
+    cfgs = {}
     for arch, weight, cls, target in zip(archs, weights, classes, targets):
         cfg = dataclasses.replace(C.get(arch, smoke=True), dtype="float32")
-        params, _ = init_model(jax.random.key(0), cfg)
-        engine = ServingEngine(
-            cfg, params, max_slots=args.slots, max_len=128,
-            bucketing=bucketing, schedule_cache=cache,
-        )
+        cfgs[arch] = cfg
+        if workers_mode:
+            # ship the recipe, not the engine: the assigned worker process
+            # builds (and seals) it on its own device, in its own cache
+            engine = ServingEngineSpec(
+                arch=arch, max_slots=args.slots, max_len=128,
+                bucketing=bucketing, dtype="float32",
+            )
+        else:
+            params, _ = init_model(jax.random.key(0), cfg)
+            engine = ServingEngine(
+                cfg, params, max_slots=args.slots, max_len=128,
+                bucketing=bucketing, schedule_cache=cache,
+            )
         dispatcher.register_model(
             arch, engine, weight=weight,
             priority_class=cls, latency_target_ms=target or None,
         )
-    print(f"AoT scheduling done in {time.perf_counter()-t0:.1f}s "
-          f"({cache.stats.builds} schedules sealed, shared cache)")
+    if workers_mode:
+        print(f"AoT scheduling done in {time.perf_counter()-t0:.1f}s "
+              f"(sealed inside {dispatcher.plane.n_workers} worker "
+              f"process(es), one schedule cache per device)")
+    else:
+        print(f"AoT scheduling done in {time.perf_counter()-t0:.1f}s "
+              f"({cache.stats.builds} schedules sealed, shared cache)")
 
     rng = np.random.default_rng(0)
     models = dispatcher.models
@@ -155,7 +207,7 @@ def main():
     with dispatcher:                       # start() .. stop(drain=True)
         for i in range(args.requests):
             arch = models[i % len(models)]
-            cfg = dispatcher.engine(arch).cfg
+            cfg = cfgs[arch]
             futures.append(dispatcher.submit(
                 arch,
                 rng.integers(0, cfg.vocab, int(rng.integers(4, 30))).astype(np.int32),
@@ -207,6 +259,13 @@ def main():
         print(f"  engine[{name}]: {eng['steps']} steps, "
               f"step p50 {eng['step_ms']['p50']:.1f}ms "
               f"p99 {eng['step_ms']['p99']:.1f}ms, {eng['tokens']} tokens")
+    if snap["async"].get("workers"):
+        for w in snap["async"]["workers"]["workers"]:
+            print(f"  worker[{w['worker']}] pid={w['pid']} "
+                  f"device={w['device']} {w['status']}: "
+                  f"lanes={','.join(w['lanes'])}, "
+                  f"{w['stats'].get('steps', 0)} steps, "
+                  f"{w['restarts']} restart(s)")
     print("fairness:", json.dumps(snap["fairness"], default=str))
     if "classes" in snap:
         for cls, c in sorted(snap["classes"].items()):
@@ -219,22 +278,30 @@ def main():
         if refused:
             print(f"admission refused {refused} request(s) "
                   f"(AdmissionRejected on their futures)")
-    cache_snap = cache.snapshot()
-    print(f"schedule cache: {json.dumps(cache.stats.as_dict(), indent=None)} "
-          f"(arena {cache_snap['arena_bytes_total']} bytes, "
-          f"budget {cache_snap['byte_budget']})")
+    if not workers_mode:                   # workers own per-device caches
+        cache_snap = cache.snapshot()
+        print(f"schedule cache: "
+              f"{json.dumps(cache.stats.as_dict(), indent=None)} "
+              f"(arena {cache_snap['arena_bytes_total']} bytes, "
+              f"budget {cache_snap['byte_budget']})")
     if done:
         sample = done[0]
         print(f"sample [{sample.model}]: prompt[{len(sample.prompt)}] -> "
               f"{sample.generated}")
     if args.trace_out:
         tracer.disable()
-        trace = obs.write_chrome_trace(args.trace_out, tracer)
+        # workers mode: merge the plane's collected worker spans (shutdown
+        # drained each worker's final ring) — one process track per worker
+        extra = (dispatcher.plane.trace_events() if workers_mode else None)
+        trace = obs.write_chrome_trace(args.trace_out, tracer,
+                                       extra_events=extra)
         errors = obs.validate_trace(trace)
         st = tracer.stats()
         print(f"trace: {len(trace['traceEvents'])} events -> "
-              f"{args.trace_out} ({st['dropped']} dropped; open it at "
-              f"https://ui.perfetto.dev or chrome://tracing)"
+              f"{args.trace_out} ({st['dropped']} dropped"
+              + (f"; {len(extra)} worker-process spans merged" if extra
+                 else "")
+              + "; open it at https://ui.perfetto.dev or chrome://tracing)"
               + (f" — INVALID: {errors[:3]}" if errors else ""))
     if args.metrics_dump:
         print(f"metrics snapshot -> {args.metrics_dump}")

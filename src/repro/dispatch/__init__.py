@@ -26,6 +26,18 @@ member's sequences at once with per-slot tenancy, freed slots refill
 from member queues in fairness order, and the policy is charged per
 tenant by token share (``FairnessPolicy.charge_composed``).
 
+Multi-process serving plane (:mod:`workers`): ``AsyncDispatcher(
+stepping="workers", devices=N)`` ships granted quanta to per-device
+:class:`DeviceWorker` processes over a :class:`WorkerPlane` — the parent
+keeps the indexed ready set, fairness/SLO policy, admission control, and
+futures; each worker owns its engines (rehydrated in-child from picklable
+``EngineSpec`` recipes), its own :class:`ScheduleCache` under a
+process-wide :class:`MemoryBudget`, and a tracer ring whose spans merge
+into one multi-process Perfetto trace.  A worker crash fails only its own
+lanes with typed errors (:class:`WorkerError` / :class:`WorkerCrashed` /
+:class:`WorkerTimeout` / :class:`WorkerSetupError`) while the rest of the
+fleet keeps serving; crashed workers respawn and replay queued work.
+
 SLO plane (:mod:`slo`): lanes register with a ``priority_class`` (lower =
 more important; strict class ordering composes with any fairness policy
 within a class via :class:`ClassedFairness`) and an optional
@@ -51,7 +63,7 @@ from .bucketing import (
     PowerOfTwoBuckets,
     make_policy,
 )
-from .cache import CacheStats, ScheduleCache
+from .cache import CacheStats, MemoryBudget, ScheduleCache
 from .dispatcher import Dispatcher, DrainTimeoutError, QueueFullError
 from .fairness import (
     FAIRNESS_POLICIES,
@@ -66,11 +78,21 @@ from .fairness import (
 )
 from .metrics import DispatchMetrics, LatencySeries, percentile
 from .slo import AdaptiveController, AdmissionRejected, SLOPolicy
+from .workers import (
+    DeviceWorker,
+    EngineWorker,
+    WorkerCrashed,
+    WorkerError,
+    WorkerPlane,
+    WorkerSetupError,
+    WorkerTimeout,
+    device_topology,
+)
 
 __all__ = [
     "BucketingPolicy", "ExactBucketing", "ExplicitBuckets",
     "PowerOfTwoBuckets", "make_policy",
-    "CacheStats", "ScheduleCache",
+    "CacheStats", "MemoryBudget", "ScheduleCache",
     "BatchComposer", "ComposeGroup",
     "Dispatcher", "AsyncDispatcher", "QueueFullError", "DrainTimeoutError",
     "FairnessPolicy", "RoundRobinFairness", "WeightedFairness",
@@ -78,4 +100,6 @@ __all__ = [
     "QuotaFairness", "ClassedFairness", "FAIRNESS_POLICIES", "make_fairness",
     "DispatchMetrics", "LatencySeries", "percentile",
     "AdmissionRejected", "AdaptiveController", "SLOPolicy",
+    "DeviceWorker", "EngineWorker", "WorkerPlane", "device_topology",
+    "WorkerError", "WorkerSetupError", "WorkerCrashed", "WorkerTimeout",
 ]

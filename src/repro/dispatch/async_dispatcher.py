@@ -75,6 +75,7 @@ import threading
 import time
 from collections import deque
 from concurrent.futures import Future
+from concurrent.futures import TimeoutError as FutureTimeoutError
 from typing import Any, Callable, Optional
 
 from repro.obs.tracer import get_tracer
@@ -688,14 +689,25 @@ class AsyncDispatcher:
         pool_size: Optional[int] = None,
         tracer: Optional[Any] = None,
         composer: Optional[Any] = None,
+        devices: Optional[int] = None,
+        worker_plane: Optional[Any] = None,
     ) -> None:
-        if stepping not in ("per-engine", "single", "pool"):
+        if stepping not in ("per-engine", "single", "pool", "workers"):
             raise ValueError(
-                f'stepping must be "per-engine", "single", or "pool", '
-                f"got {stepping!r}"
+                f'stepping must be "per-engine", "single", "pool", or '
+                f'"workers", got {stepping!r}'
             )
         if pool_size is not None and pool_size < 1:
             raise ValueError(f"pool_size must be >= 1, got {pool_size}")
+        if stepping != "workers" and (
+            devices is not None or worker_plane is not None
+        ):
+            raise ValueError(
+                'devices/worker_plane are only meaningful with '
+                f'stepping="workers", got stepping={stepping!r}'
+            )
+        if devices is not None and devices < 1:
+            raise ValueError(f"devices must be >= 1, got {devices}")
         if dispatcher is None:
             dispatcher = Dispatcher(
                 max_pending=max_pending, metrics=metrics, fairness=fairness,
@@ -710,6 +722,32 @@ class AsyncDispatcher:
         self.idle_wait = idle_wait
         self.stepping = stepping
         self.max_concurrent_steps = max_concurrent_steps
+        # stepping="workers": per-device worker processes behind the same
+        # pool stepper loop — the parent keeps ready set / fairness / SLO /
+        # futures, the plane owns engines + caches in child processes.
+        # Constructed unstarted; start() spawns the fleet.
+        self.plane: Optional[Any] = None
+        if stepping == "workers":
+            if self.dispatcher.composer is not None:
+                raise ValueError(
+                    'stepping="workers" does not support a batch composer: '
+                    "a composed batch cannot span worker processes"
+                )
+            if worker_plane is not None:
+                self.plane = worker_plane
+            else:
+                from .workers import WorkerPlane
+
+                # spawn, not fork: the parent has usually initialized JAX
+                # by the time start() spawns the fleet, and forking a live
+                # multithreaded JAX runtime deadlocks the child's first
+                # compile.  Callers wanting fork (cheap, fake engines)
+                # pass their own worker_plane.
+                self.plane = WorkerPlane(
+                    devices if devices is not None else 1,
+                    start_method="spawn",
+                    tracer=self.dispatcher.tracer,
+                )
         # thread budget for stepping="pool": tenants share these workers, so
         # the stepper thread count stays flat no matter how many models
         # register (the many-tenant scaling the per-engine mode lacks)
@@ -753,14 +791,37 @@ class AsyncDispatcher:
         ``latency_target_ms`` flow to the SLO plane exactly as on
         :meth:`Dispatcher.register_model` — grants consult class ordering
         before fairness, and unmeetable deadlines fail the submit future
-        with :class:`~repro.dispatch.slo.AdmissionRejected`."""
-        out = self.dispatcher.register_model(
-            name,
-            engine,
-            weight=weight,
-            priority_class=priority_class,
-            latency_target_ms=latency_target_ms,
-        )
+        with :class:`~repro.dispatch.slo.AdmissionRejected`.
+
+        In workers mode ``engine`` must be a picklable
+        :class:`~repro.serving.spec.EngineSpec` — the plane assigns the
+        lane to a worker process (round-robin over devices), the worker
+        builds the real engine in-child, and the lane proxy registered
+        here is what the parent's steppers drive (a setup failure
+        surfaces on this thread as a typed
+        :class:`~repro.dispatch.workers.WorkerError`)."""
+        if self.stepping == "workers":
+            if hasattr(engine, "submit") or not hasattr(engine, "build"):
+                raise ValueError(
+                    'stepping="workers" registers EngineSpec recipes, not '
+                    "live engines (device state cannot cross a process "
+                    f"boundary); got {type(engine).__name__}"
+                )
+            engine = self.plane.assign(name, engine)
+        try:
+            out = self.dispatcher.register_model(
+                name,
+                engine,
+                weight=weight,
+                priority_class=priority_class,
+                latency_target_ms=latency_target_ms,
+            )
+        except BaseException:
+            # a rejected registration (duplicate name, ...) must not leave
+            # the lane assigned worker-side
+            if self.stepping == "workers":
+                self.plane.release(name)
+            raise
         with self._cv:
             if (
                 self.stepping == "per-engine"
@@ -772,18 +833,52 @@ class AsyncDispatcher:
                 self._spawn_locked(name, self._run_lane)
         return out
 
-    def unregister_model(self, name: str) -> Any:
-        """Drain and retire tenant ``name`` while serving stays live.
+    def retire_model(self, name: str) -> Future:
+        """Mark tenant ``name`` retired; returns a future resolving to the
+        retired engine once the steppers drain the lane (non-blocking —
+        the calling thread never steps).  Whichever stepper completes the
+        lane's last request finalizes the removal; the future then clears
+        the async-side residue (the lane's ``_busy`` entry and, in
+        per-engine mode, its stepper's registry slot — the thread exits on
+        its own once the lane vanishes)."""
+        fut = self.dispatcher.retire_model(name)
 
-        Delegates to :meth:`Dispatcher.unregister_model` (which drains the
-        lane, then removes it from the registry, ready index, fairness
-        state, and metrics), then retires the async-side residue: the
-        lane's ``_busy`` entry, and — in per-engine mode — its stepper
-        thread, which exits on its own and is joined here.  Pool workers
-        need nothing: an unregistered lane simply stops appearing in the
-        arbiter's mirror.  Returns the retired engine.
+        def _cleanup(_f: Future) -> None:
+            with self._cv:
+                self._busy.discard(name)
+                if self.stepping == "per-engine":
+                    self._threads.pop(name, None)
+                self._cv.notify_all()
+
+        fut.add_done_callback(_cleanup)
+        return fut
+
+    def unregister_model(self, name: str, *, timeout: float = 60.0) -> Any:
+        """Drain and retire tenant ``name``; returns the retired engine.
+
+        While the steppers are live the calling thread only WAITS — the
+        lane is marked retired (:meth:`Dispatcher.retire_model`) and the
+        steppers drain it, the completing one finalizing the removal; the
+        old behavior of draining on the calling thread concurrently with
+        the steppers is gone.  With no steppers running the caller drains
+        the lane itself via :meth:`Dispatcher.unregister_model`.  Either
+        way the async-side residue is then retired: the lane's ``_busy``
+        entry, and — in per-engine mode — its stepper thread, which exits
+        on its own and is joined here.  ``DrainTimeoutError`` semantics
+        arrive via the future: a lane the steppers cannot drain within
+        ``timeout`` raises it, leaving the lane retired but registered.
         """
-        engine = self.dispatcher.unregister_model(name)
+        if self.running and self._error is None:
+            fut = self.dispatcher.retire_model(name)
+            try:
+                engine = fut.result(timeout=timeout)
+            except FutureTimeoutError:
+                raise DrainTimeoutError(
+                    f"unregister timed out after {timeout:g}s waiting for "
+                    f"steppers to drain {name!r}"
+                ) from None
+        else:
+            engine = self.dispatcher.unregister_model(name)
         stepper = None
         with self._cv:
             self._busy.discard(name)
@@ -882,6 +977,21 @@ class AsyncDispatcher:
                 self.dispatcher.set_lane_event_hook(self._arbiter.notify_ready)
                 for i in range(self.pool_size):
                     self._spawn_locked(f"pool-{i}", self._run_pool)
+            elif self.stepping == "workers":
+                # spawns the fleet (raises if the plane was shut down by a
+                # previous stop(): worker processes do not restart — build
+                # a new AsyncDispatcher).  Parent-side stepping reuses the
+                # pool loop: one thread per worker drives granted lanes
+                # through blocking step RPCs, so N workers overlap N steps.
+                self.plane.start()
+                self._arbiter = _QuantumArbiter(
+                    self.dispatcher, self.max_concurrent_steps,
+                    metrics=self.metrics, pool_size=self.plane.n_workers,
+                    tracer=self.dispatcher.tracer,
+                )
+                self.dispatcher.set_lane_event_hook(self._arbiter.notify_ready)
+                for i in range(self.plane.n_workers):
+                    self._spawn_locked(f"workers-{i}", self._run_pool)
             else:
                 self._spawn_locked(_SINGLE, self._run_single)
         return self
@@ -919,6 +1029,14 @@ class AsyncDispatcher:
             if not alive:
                 self._threads = {}
                 self._arbiter = None
+            if self.plane is not None:
+                # after the stepper joins: no step RPC is in flight, so
+                # shutdown's final trace collection sees quiet pipes.
+                # Worker processes are not restartable — a later start()
+                # raises through plane.start()'s closed check.
+                self.plane.shutdown(
+                    timeout=10.0 if timeout is None else max(timeout, 0.1)
+                )
             with self._cv:
                 leftovers, self._pending = self._pending, set()
             for fut in leftovers:
@@ -1045,6 +1163,7 @@ class AsyncDispatcher:
         by_stepper = self.builds_by_stepper
         arbiter = self._arbiter
         arb_stats = arbiter.stats() if arbiter is not None else None
+        plane_snap = self.plane.snapshot() if self.plane is not None else None
         with self._cv:
             snap["async"] = {
                 "running": self.running,
@@ -1058,6 +1177,7 @@ class AsyncDispatcher:
                 "builds_on_thread": sum(by_stepper.values()),
                 "builds_by_stepper": by_stepper,
                 "arbiter": arb_stats,
+                "workers": plane_snap,
                 "failed": self._error is not None,
             }
         return snap
@@ -1139,10 +1259,16 @@ class AsyncDispatcher:
             if fut.set_running_or_notify_cancel():
                 # a load-shed request completes with a typed admission
                 # error attached: its future FAILS with that error, so
-                # backpressure surfaces exactly where submit's does
-                shed_exc = getattr(req, "_admission_error", None)
-                if shed_exc is not None:
-                    fut.set_exception(shed_exc)
+                # backpressure surfaces exactly where submit's does.  A
+                # worker-plane casualty (crash/timeout/setup failure on
+                # the lane's device) arrives the same way — typed error on
+                # the request, scoped to the affected lanes, never _fail()
+                fail_exc = (
+                    getattr(req, "_admission_error", None)
+                    or getattr(req, "_failure_exc", None)
+                )
+                if fail_exc is not None:
+                    fut.set_exception(fail_exc)
                 else:
                     fut.set_result(req)
             if user_cb is not None:

@@ -20,7 +20,13 @@ traffic the same (function, shape) arrives from many callers, so the sealed
   the entry-count ``capacity`` stays as a fallback ceiling for artifacts
   that still report 0;
 * build-coalescing: concurrent callers that miss on the same key wait on one
-  per-key build lock, so a pre-run is never duplicated.
+  per-key build lock, so a pre-run is never duplicated;
+* optionally **budget-pooled**: a :class:`MemoryBudget` shared by several
+  caches bounds their *summed* executable bytes process-wide (and, under
+  the worker plane, per worker process — each worker reports its budget
+  up to the parent).  When the pool overflows, the globally
+  least-recently-touched cache evicts one LRU entry at a time until the
+  total fits; per-cache ``byte_budget`` limits still apply on top.
 
 Thread-safety contract: every public method is safe from any thread.  One
 internal lock guards the entry map and stats; builds run *outside* it (so
@@ -85,6 +91,114 @@ class _Entry:
     pin: Any = None               # keeps fn objects alive while cached, so
     build_seconds: float = 0.0    # id(fn) in the key cannot be recycled
     arena_bytes: int = 0          # reserved-memory estimate (0 if unknown)
+    touched: float = 0.0          # last hit/insert time (global-LRU victim
+                                  # selection across budget-pooled caches)
+
+
+class MemoryBudget:
+    """Process-wide accountant bounding total executable bytes across
+    every attached :class:`ScheduleCache`.
+
+    Per-cache ``byte_budget``\\ s bound each cache alone; a serving plane
+    with one cache per tenant group can still exceed device memory in
+    aggregate.  Attach the same ``MemoryBudget`` to all of them and the
+    *sum* of their reserved arena bytes is bounded too: each byte-total
+    change is charged here (exactly — the charge happens under the
+    owning cache's lock, mirroring its own accounting), and inserts that
+    overflow the pool trigger a rebalance that evicts one LRU entry at a
+    time from whichever cache holds the globally least-recently-touched
+    entry.  An entry larger than the whole pool is rejected at insert
+    exactly like a per-cache oversized entry (counted eviction, exact
+    ``bytes_evicted``), never cached.
+
+    Locking: the budget's mutex is a **leaf** — caches charge it while
+    holding their own lock, but the budget never calls into a cache while
+    holding it.  The rebalance loop runs with *no* cache lock held,
+    taking each victim's lock only inside its single-entry eviction, so
+    two caches inserting concurrently can never deadlock through the
+    shared pool.  Under the worker plane each worker process owns one
+    budget and reports :meth:`snapshot` to the parent with its heartbeat.
+    """
+
+    def __init__(self, limit_bytes: int) -> None:
+        if limit_bytes < 1:
+            raise ValueError(f"limit_bytes must be >= 1, got {limit_bytes}")
+        self.limit_bytes = int(limit_bytes)
+        self._mu = threading.Lock()          # leaf: counters + membership
+        self._caches: list["ScheduleCache"] = []
+        self._charged: dict[int, int] = {}   # id(cache) -> bytes charged
+        self.rebalance_evictions = 0         # entries evicted cross-cache
+        self.bytes_evicted = 0               # bytes those evictions released
+
+    def attach(self, cache: "ScheduleCache") -> None:
+        """Register ``cache`` with the pool (its bytes are charged from
+        now on; done automatically by ``ScheduleCache(budget=...)``)."""
+        with self._mu:
+            if all(c is not cache for c in self._caches):
+                self._caches.append(cache)
+                self._charged.setdefault(id(cache), 0)
+
+    def charge(self, cache: "ScheduleCache", delta: int) -> None:
+        """Fold one cache's byte-total delta into the pool (called by the
+        cache under its own lock; this lock is a leaf below it)."""
+        with self._mu:
+            self._charged[id(cache)] = (
+                self._charged.get(id(cache), 0) + int(delta)
+            )
+
+    def total_bytes(self) -> int:
+        """Summed reserved arena bytes across every attached cache."""
+        with self._mu:
+            return sum(self._charged.values())
+
+    def over_bytes(self) -> int:
+        """How far the pool currently exceeds ``limit_bytes`` (0 if not)."""
+        return max(0, self.total_bytes() - self.limit_bytes)
+
+    def rebalance(self) -> int:
+        """Evict LRU entries — globally oldest-touched cache first, one
+        entry per round — until the pool fits; returns bytes released.
+        Runs with no cache lock held (see the class docstring)."""
+        released = 0
+        with self._mu:
+            caches = list(self._caches)
+        # bounded: every round either frees bytes or finds nothing to free
+        for _ in range(1_000_000):
+            if self.over_bytes() <= 0:
+                break
+            victim = None
+            oldest = None
+            for cache in caches:
+                if cache.arena_bytes_total == 0:
+                    continue                 # nothing chargeable to free
+                age = cache.lru_age()
+                if age is None:
+                    continue
+                if oldest is None or age < oldest:
+                    oldest = age
+                    victim = cache
+            if victim is None:
+                break                        # nothing evictable remains
+            freed = victim._evict_one_for_budget()
+            if freed > 0:
+                released += freed
+                with self._mu:
+                    self.rebalance_evictions += 1
+                    self.bytes_evicted += freed
+        return released
+
+    def snapshot(self) -> dict:
+        """Pool state for metrics / worker heartbeats: limit, usage, and
+        cross-cache eviction counters."""
+        with self._mu:
+            total = sum(self._charged.values())
+            return {
+                "limit_bytes": self.limit_bytes,
+                "total_bytes": total,
+                "caches": len(self._caches),
+                "rebalance_evictions": self.rebalance_evictions,
+                "bytes_evicted": self.bytes_evicted,
+            }
 
 
 def _executable_bytes(value: Any) -> int:
@@ -156,6 +270,7 @@ class ScheduleCache:
         capacity: int = 64,
         *,
         byte_budget: Optional[int] = None,
+        budget: Optional[MemoryBudget] = None,
         scheduler: Optional[AoTScheduler] = None,
         tracer: Optional[Any] = None,
     ) -> None:
@@ -165,6 +280,9 @@ class ScheduleCache:
             raise ValueError(f"byte_budget must be >= 1, got {byte_budget}")
         self.capacity = capacity
         self.byte_budget = byte_budget
+        # shared cross-cache pool (MemoryBudget): every byte-total change
+        # is charged to it, and inserts trigger a pool rebalance
+        self.budget = budget
         self.scheduler = scheduler or AoTScheduler()
         self.tracer = tracer if tracer is not None else get_tracer()
         self.stats = CacheStats()
@@ -172,6 +290,8 @@ class ScheduleCache:
         self._bytes_total = 0                     # sum of entry arena_bytes
         self._mu = threading.Lock()               # guards entries + stats
         self._build_locks: dict[Any, threading.Lock] = {}
+        if budget is not None:
+            budget.attach(self)
 
     # -- inspection --------------------------------------------------------
 
@@ -198,6 +318,15 @@ class ScheduleCache:
         with self._mu:
             return self._bytes_total
 
+    def lru_age(self) -> Optional[float]:
+        """Last-touch timestamp of this cache's LRU entry (``None`` when
+        empty) — the global-victim ordering key a shared
+        :class:`MemoryBudget` rebalance compares across caches."""
+        with self._mu:
+            if not self._entries:
+                return None
+            return next(iter(self._entries.values())).touched
+
     # -- core paths --------------------------------------------------------
 
     def get(self, key: Any) -> Optional[Any]:
@@ -208,6 +337,7 @@ class ScheduleCache:
                 self.stats.misses += 1
                 return None
             self._entries.move_to_end(key)
+            entry.touched = time.monotonic()
             self.stats.hits += 1
             if self.tracer.enabled:
                 # no repr(key): hits are the hot path
@@ -231,6 +361,8 @@ class ScheduleCache:
             self._insert_locked(
                 key, _Entry(value=value, pin=pin, arena_bytes=nbytes)
             )
+        if self.budget is not None:
+            self.budget.rebalance()       # outside _mu: see MemoryBudget
 
     def get_or_build(
         self,
@@ -252,6 +384,7 @@ class ScheduleCache:
             entry = self._entries.get(key)
             if entry is not None:
                 self._entries.move_to_end(key)
+                entry.touched = time.monotonic()
                 self.stats.hits += 1
                 if self.tracer.enabled:
                     self.tracer.instant("cache.hit", cat="cache")
@@ -266,6 +399,7 @@ class ScheduleCache:
                 entry = self._entries.get(key)
                 if entry is not None:
                     self._entries.move_to_end(key)
+                    entry.touched = time.monotonic()
                     self.stats.hits += 1
                     self.stats.misses -= 1
                     if self.tracer.enabled:
@@ -307,6 +441,8 @@ class ScheduleCache:
                     arena_bytes=nbytes,
                 ))
                 self._build_locks.pop(key, None)
+            if self.budget is not None:
+                self.budget.rebalance()   # outside _mu: see MemoryBudget
             return value
 
     def get_or_schedule(
@@ -349,7 +485,7 @@ class ScheduleCache:
                 }
                 for key, e in self._entries.items()
             ]
-            return {
+            snap = {
                 "capacity": self.capacity,
                 "byte_budget": self.byte_budget,
                 "size": len(entries),
@@ -357,6 +493,9 @@ class ScheduleCache:
                 "entries": entries,
                 "stats": self.stats.as_dict(),
             }
+            if self.budget is not None:
+                snap["budget"] = self.budget.snapshot()
+            return snap
 
     def invalidate(self, key: Any) -> bool:
         """Drop ``key`` if cached; returns whether anything was removed."""
@@ -365,29 +504,47 @@ class ScheduleCache:
             if entry is None:
                 return False
             self._bytes_total -= entry.arena_bytes
+            self._charge_budget(-entry.arena_bytes)
             return True
 
     def clear(self) -> None:
         """Drop every entry (stats are kept)."""
         with self._mu:
             self._entries.clear()
+            self._charge_budget(-self._bytes_total)
             self._bytes_total = 0
 
     # -- internals ---------------------------------------------------------
 
+    def _charge_budget(self, delta: int) -> None:
+        """Mirror a ``_bytes_total`` delta into the shared pool.  Called
+        under ``_mu``; the budget's lock is a leaf below it."""
+        if self.budget is not None and delta:
+            self.budget.charge(self, delta)
+
     def _insert_locked(self, key: Any, entry: _Entry) -> None:
+        before = self._bytes_total
+        try:
+            self._insert_inner_locked(key, entry)
+        finally:
+            self._charge_budget(self._bytes_total - before)
+
+    def _insert_inner_locked(self, key: Any, entry: _Entry) -> None:
         old = self._entries.pop(key, None)
         if old is not None:
             self._bytes_total -= old.arena_bytes
         if (
             self.byte_budget is not None
             and entry.arena_bytes > self.byte_budget
+        ) or (
+            self.budget is not None
+            and entry.arena_bytes > self.budget.limit_bytes
         ):
-            # an artifact larger than the whole budget can never be
-            # resident: reject it deterministically (counted as an
-            # immediate eviction) instead of churning every resident entry
-            # out only to evict the newcomer too.  The caller still gets
-            # the built value — it just isn't cached.
+            # an artifact larger than the whole budget (per-cache or shared
+            # pool) can never be resident: reject it deterministically
+            # (counted as an immediate eviction) instead of churning every
+            # resident entry out only to evict the newcomer too.  The
+            # caller still gets the built value — it just isn't cached.
             self.stats.evictions += 1
             self.stats.bytes_evicted += entry.arena_bytes
             if self.tracer.enabled:
@@ -396,9 +553,29 @@ class ScheduleCache:
                     args={"bytes": entry.arena_bytes, "oversized": True},
                 )
             return
+        entry.touched = time.monotonic()
         self._entries[key] = entry
         self._bytes_total += entry.arena_bytes
         self._evict_locked()
+
+    def _evict_one_for_budget(self) -> int:
+        """Evict this cache's single LRU entry on behalf of a shared
+        :class:`MemoryBudget` rebalance; returns the bytes released.
+        Takes only this cache's lock — the pool holds none while calling."""
+        with self._mu:
+            if not self._entries:
+                return 0
+            _, entry = self._entries.popitem(last=False)
+            self._bytes_total -= entry.arena_bytes
+            self.stats.evictions += 1
+            self.stats.bytes_evicted += entry.arena_bytes
+            self._charge_budget(-entry.arena_bytes)
+            if self.tracer.enabled:
+                self.tracer.instant(
+                    "cache.evict", cat="cache",
+                    args={"bytes": entry.arena_bytes, "budget": True},
+                )
+            return entry.arena_bytes
 
     def _evict_locked(self) -> None:
         """Evict LRU-first until both limits hold: entry count ≤ capacity

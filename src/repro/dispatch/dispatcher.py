@@ -62,6 +62,7 @@ from __future__ import annotations
 import threading
 import time
 from collections import deque
+from concurrent.futures import Future
 from typing import Any, Callable, Optional
 
 import numpy as np
@@ -86,12 +87,15 @@ class _Lane:
 
     ``queue_mu`` (brief) guards the FIFO; ``step_mu`` (held across one
     engine step) serializes stepping.  ``retired`` (set under ``queue_mu``
-    by :meth:`Dispatcher.unregister_model`) refuses new submissions while
-    the lane drains out.  Internal to the dispatcher."""
+    by :meth:`Dispatcher.retire_model`) refuses new submissions while the
+    lane drains out; ``retire_future`` resolves to the engine once the
+    drained lane's removal finalizes, and ``finalizing`` (also under
+    ``queue_mu``) makes that finalization once-only no matter how many
+    steppers observe the drain.  Internal to the dispatcher."""
 
     __slots__ = (
         "name", "engine", "queue", "queue_mu", "step_mu", "retired",
-        "priority_class",
+        "priority_class", "finalizing", "retire_future",
     )
 
     def __init__(
@@ -104,6 +108,8 @@ class _Lane:
         self.step_mu = threading.Lock()
         self.retired = False
         self.priority_class = priority_class
+        self.finalizing = False
+        self.retire_future: Optional[Future] = None
 
 
 class Dispatcher:
@@ -256,41 +262,100 @@ class Dispatcher:
             set_hook(self._engine_submit_hook(name))
         return engine
 
-    def unregister_model(self, name: str, *, max_steps: int = 100_000) -> Any:
-        """Retire tenant ``name``: drain its remaining work, then remove it
-        from the registry, the ready index, the fairness policy, and the
-        per-engine metrics — a dead tenant must stop costing every later
-        policy walk and snapshot.  Returns the retired engine.
+    def retire_model(self, name: str) -> Future:
+        """Mark tenant ``name`` retired; returns a future resolving to the
+        retired engine once the lane drains and its removal finalizes.
 
         The lane refuses new submissions the moment this is called (a
         racing ``submit`` raises ``KeyError``); queued and in-flight
-        requests are served to completion on the **calling** thread
-        (concurrent steppers serialize on the lane's step lock, so this is
-        safe while an ``AsyncDispatcher`` is live — whoever steps last
-        drains it).  Raises :class:`DrainTimeoutError` if ``max_steps``
-        quanta cannot drain the lane, leaving it retired but registered so
-        the failure is inspectable.  If the engine exposes a ``retire()``
-        hook (``ServingEngine`` does), it is invoked last.
+        requests keep being served by whatever is already stepping —
+        ``AsyncDispatcher`` steppers, worker-plane step threads, or a
+        caller's own ``step()`` loop — and the stepper that completes the
+        lane's **last** request finalizes the removal (registry, ready
+        index, fairness, SLO, metrics, ``engine.retire()``) and resolves
+        the future.  The caller never drains on its own thread; a lane
+        that is already idle finalizes inline before this returns.
+        Idempotent: repeated calls return the same future.  If
+        finalization raises, the future carries that exception.
         """
         lane = self._lane(name)
         if self.composer is not None:
             # a retiring HOST lane disbands its group: refill pauses for
-            # the survivors so the drain loop below can run the host dry
+            # the survivors so the drain below can run the host dry
             self.composer.begin_retire(name)
         with lane.queue_mu:
-            lane.retired = True
+            fut = lane.retire_future
+            fresh = fut is None
+            if fresh:
+                lane.retired = True
+                fut = Future()
+                fut.set_running_or_notify_cancel()   # never cancellable
+                lane.retire_future = fut
+        if fresh:
+            # already-idle lane: nobody will step it again, finalize now
+            self._maybe_finalize_retire(lane)
+        return fut
+
+    def unregister_model(self, name: str, *, max_steps: int = 100_000) -> Any:
+        """Retire tenant ``name`` and block until it is fully removed;
+        returns the retired engine.
+
+        Built on :meth:`retire_model`: the lane is marked retired, then
+        this thread steps it until the retire future resolves — so with no
+        steppers running the caller drains the lane itself (each quantum a
+        normal ``step_lane``), and with an ``AsyncDispatcher`` live the
+        caller's quanta are mostly no-ops while the steppers drain it
+        (whoever completes the last request finalizes).  Raises
+        :class:`DrainTimeoutError` if ``max_steps`` quanta cannot drain
+        the lane, leaving it retired but registered so the failure is
+        inspectable.  If the engine exposes a ``retire()`` hook
+        (``ServingEngine`` does), it is invoked during finalization.
+        """
+        fut = self.retire_model(name)
         for _ in range(max_steps):
-            if not (
-                lane.queue
-                or not lane.engine.idle
-                or self._composed_busy(name)
-            ):
+            if fut.done():
                 break
             self.step_lane(name)
-        else:
+        if not fut.done():
             raise DrainTimeoutError(
                 f"unregister exhausted {max_steps} steps draining {name!r}"
             )
+        return fut.result()
+
+    def _maybe_finalize_retire(self, lane: _Lane) -> None:
+        """Finalize a retired lane once it is drained (no queued work, an
+        idle engine, no composed in-flight residue) — called after every
+        quantum/shed that completed requests, and once inline from
+        :meth:`retire_model`.  The ``finalizing`` flag (under
+        ``queue_mu``) makes exactly one observer run the removal; the
+        drain check shares that critical section with admission's
+        queue-pop-then-seat, so a mid-admission lane can never read as
+        drained."""
+        if not lane.retired or lane.retire_future is None:
+            return
+        with lane.queue_mu:
+            if lane.finalizing:
+                return
+            if (
+                lane.queue
+                or not lane.engine.idle
+                or self._composed_busy(lane.name)
+            ):
+                return
+            lane.finalizing = True
+        try:
+            self._finalize_retire(lane)
+        except BaseException as exc:  # noqa: BLE001 - surface on the future
+            if not lane.retire_future.done():
+                lane.retire_future.set_exception(exc)
+            raise
+
+    def _finalize_retire(self, lane: _Lane) -> None:
+        """The removal sequence (runs once, on the draining thread): leave
+        the compose group, unhook the engine, evict from the ready index,
+        the fairness policy, the SLO plane, the registry, and the metrics,
+        retire the engine, then resolve the retire future."""
+        name = lane.name
         if self.composer is not None:
             # host drained (or member emptied): leave the group; survivors
             # of a dissolved group re-form around a fresh host
@@ -332,7 +397,7 @@ class Dispatcher:
         retire = getattr(lane.engine, "retire", None)
         if retire is not None:
             retire()
-        return lane.engine
+        lane.retire_future.set_result(lane.engine)
 
     @property
     def models(self) -> tuple[str, ...]:
@@ -768,6 +833,8 @@ class Dispatcher:
             self.metrics.on_shed(cls)
             self._touch_ready(lane)
             self._complete(name, [req])
+            # a shed can be what empties a retiring lane's queue
+            self._maybe_finalize_retire(lane)
             shed_reqs.append(req)
         return shed_reqs
 
@@ -845,6 +912,9 @@ class Dispatcher:
         if release is not None:
             release()
         self._complete(name, newly)
+        # retired lane: the quantum that completes its last request
+        # finalizes the removal and resolves the retire future
+        self._maybe_finalize_retire(lane)
         return newly
 
     def step_group(
@@ -982,6 +1052,12 @@ class Dispatcher:
             by_owner.setdefault(owner, []).append(req)
         for owner, reqs in by_owner.items():
             self._complete(owner, reqs)
+        # a retiring member's work drains through ANY member's quantum —
+        # check every member so whichever quantum ran it dry finalizes
+        for m in members:
+            lane_m = self._lane_or_none(m)
+            if lane_m is not None:
+                self._maybe_finalize_retire(lane_m)
         return newly
 
     def _refill_group(self, group: Any, members: list, refill_from: list) -> None:

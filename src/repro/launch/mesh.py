@@ -22,6 +22,14 @@ def make_host_mesh(*, model_axis: int = 1):
     return jax.make_mesh((data, model_axis), ("data", "model"))
 
 
+def host_device_count() -> int:
+    """Addressable local devices — the device axis the worker plane
+    (``repro.dispatch.workers.device_topology``) assigns processes over.
+    Honors ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` for
+    multi-device smoke on a CPU-only host."""
+    return len(jax.devices())
+
+
 # Hardware constants for the roofline model (spec-provided, v5e-class).
 PEAK_FLOPS_BF16 = 197e12          # per chip
 HBM_BW = 819e9                    # bytes/s per chip

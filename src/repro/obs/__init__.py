@@ -16,7 +16,13 @@ Three pieces, one import surface:
 * :mod:`repro.obs.registry` — :class:`MetricsRegistry`, a typed
   pull-based registry with JSON and Prometheus text exposition, plus
   adapters (:func:`register_dispatch`, :func:`register_cache`,
-  :func:`register_tracer`) over the dispatch layer's snapshot dicts.
+  :func:`register_tracer`, :func:`register_worker_plane`) over the
+  dispatch layer's snapshot dicts.
+
+Multi-process traces: :class:`TraceEvent` carries a ``pid`` (1 for the
+parent), and ``to_chrome_trace(..., extra_events=plane.trace_events())``
+merges a worker plane's parent-clock, pid-stamped spans into one
+Perfetto trace with per-process track groups.
 
 This package imports nothing from :mod:`repro.dispatch` or
 :mod:`repro.serving` — those layers depend on this one, never the
@@ -40,6 +46,7 @@ from .registry import (
     register_cache,
     register_dispatch,
     register_tracer,
+    register_worker_plane,
     samples_from_dict,
 )
 from .tracer import SpanTracer, TraceEvent, get_tracer
@@ -57,6 +64,7 @@ __all__ = [
     "register_cache",
     "register_dispatch",
     "register_tracer",
+    "register_worker_plane",
     "samples_from_dict",
     "step_spans",
     "to_chrome_trace",

@@ -13,7 +13,14 @@ The mapping from :class:`repro.obs.tracer.TraceEvent`:
   ``id == rid`` (and category ``request``), so each request renders as
   one submit→complete bar regardless of which worker threads served it;
 * **counter tracks** (``C``) for stepper-pool occupancy;
-* ``M`` metadata events name each thread track.
+* ``M`` metadata events name each thread track;
+* one **process track group per recording process** — each
+  :class:`TraceEvent` carries a ``pid`` (the parent's events default to
+  1; worker-plane spans arrive stamped with their worker's OS pid and a
+  parent-clock timestamp via the spawn-time clock-offset handshake), and
+  ``process_name`` metadata labels each group, so a multi-process
+  serving plane renders as one merged Perfetto trace with per-process
+  tracks.  Pass the plane's collected spans as ``extra_events=``.
 
 Timestamps are exported in microseconds relative to the earliest drained
 event, which is what both viewers expect.
@@ -31,7 +38,7 @@ from typing import Any, Iterable, Optional, Union
 
 from .tracer import SpanTracer, TraceEvent
 
-_PID = 1                     # single-process plane: one trace process
+_PARENT_PID = 1              # default pid: the dispatching (parent) process
 
 
 def _args(ev: TraceEvent) -> dict:
@@ -45,6 +52,8 @@ def _args(ev: TraceEvent) -> dict:
 
 def to_chrome_trace(
     events_or_tracer: Union[SpanTracer, Iterable[TraceEvent]],
+    *,
+    extra_events: Optional[Iterable[TraceEvent]] = None,
 ) -> dict:
     """Convert drained events (or a tracer, drained here) into a Chrome
     trace-event JSON object — ``json.dump`` the result and load it in
@@ -52,25 +61,48 @@ def to_chrome_trace(
 
     Deterministic given the events: microsecond timestamps rebased to the
     earliest event, one metadata-named track per recording thread, one
-    async track per request id."""
+    async track per request id.  ``extra_events`` merges a second event
+    stream — ``WorkerPlane.trace_events()``, already parent-clock and
+    pid-stamped — into the same trace; events sort together by timestamp
+    and each distinct pid gets its own ``process_name``-labelled track
+    group."""
     if isinstance(events_or_tracer, SpanTracer):
         events = events_or_tracer.drain()
     else:
         events = list(events_or_tracer)
+    if extra_events is not None:
+        events = sorted(
+            list(events) + list(extra_events), key=lambda e: e.ts
+        )
     origin = min((e.ts for e in events), default=0.0)
+    # label process tracks only when the trace actually spans processes —
+    # a single-process trace keeps its metadata to thread names alone
+    multi_pid = len({getattr(e, "pid", _PARENT_PID) for e in events}) > 1
     out: list[dict] = []
-    threads_seen: dict[int, str] = {}
+    threads_seen: set[tuple[int, int]] = set()
+    pids_seen: set[int] = set()
     for ev in events:
-        if ev.tid not in threads_seen:
-            threads_seen[ev.tid] = ev.thread
+        pid = getattr(ev, "pid", _PARENT_PID)
+        if multi_pid and pid not in pids_seen:
+            pids_seen.add(pid)
+            label = (
+                "dispatcher (parent)" if pid == _PARENT_PID
+                else f"worker pid={pid}"
+            )
             out.append({
-                "ph": "M", "name": "thread_name", "pid": _PID, "tid": ev.tid,
+                "ph": "M", "name": "process_name", "pid": pid, "tid": 0,
+                "args": {"name": label},
+            })
+        if (pid, ev.tid) not in threads_seen:
+            threads_seen.add((pid, ev.tid))
+            out.append({
+                "ph": "M", "name": "thread_name", "pid": pid, "tid": ev.tid,
                 "args": {"name": ev.thread},
             })
         ts_us = (ev.ts - origin) * 1e6
         rec: dict[str, Any] = {
             "ph": ev.ph, "name": ev.name, "cat": ev.cat,
-            "pid": _PID, "tid": ev.tid, "ts": ts_us,
+            "pid": pid, "tid": ev.tid, "ts": ts_us,
         }
         if ev.ph == "X":
             rec["dur"] = ev.dur * 1e6
@@ -92,9 +124,13 @@ def to_chrome_trace(
 def write_chrome_trace(
     path: str,
     events_or_tracer: Union[SpanTracer, Iterable[TraceEvent]],
+    *,
+    extra_events: Optional[Iterable[TraceEvent]] = None,
 ) -> dict:
-    """Export to ``path`` as JSON; returns the trace object written."""
-    trace = to_chrome_trace(events_or_tracer)
+    """Export to ``path`` as JSON; returns the trace object written.
+    ``extra_events`` merges a worker plane's collected spans (see
+    :func:`to_chrome_trace`)."""
+    trace = to_chrome_trace(events_or_tracer, extra_events=extra_events)
     with open(path, "w") as f:
         json.dump(trace, f)
     return trace

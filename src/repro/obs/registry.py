@@ -466,6 +466,49 @@ def register_cache(
     registry.register(group, cache_samples)
 
 
+def register_worker_plane(
+    registry: MetricsRegistry, plane: Any, *, group: str = "workers",
+) -> None:
+    """Expose a ``WorkerPlane`` through ``registry`` under ``group``: one
+    ``up`` gauge plus per-worker serving/dead/abandoned state, restart
+    counts, heartbeat age, lane census, and the worker-reported
+    step/token counters (shipped back with each heartbeat), labelled by
+    worker index and device — pulled from ``plane.snapshot()`` at
+    collect time."""
+
+    def plane_samples() -> list[Sample]:
+        snap = plane.snapshot()
+        out = [
+            Sample("n_workers", GAUGE, snap.get("n_workers", 0)),
+        ]
+        for rec in snap.get("workers", ()):
+            labels = (
+                ("worker", str(rec.get("index", ""))),
+                ("device", str(rec.get("device", ""))),
+            )
+            out.append(Sample(
+                "up", GAUGE,
+                1.0 if rec.get("status") == "serving" else 0.0, labels,
+            ))
+            out.append(Sample(
+                "restarts", COUNTER, rec.get("restarts", 0), labels,
+            ))
+            out.append(Sample(
+                "lanes", GAUGE, len(rec.get("lanes", ())), labels,
+            ))
+            hb = rec.get("heartbeat_age_s")
+            if _is_num(hb):
+                out.append(Sample("heartbeat_age_s", GAUGE, hb, labels))
+            stats = rec.get("stats") or {}
+            out.extend(samples_from_dict(
+                stats, labels=labels,
+                counters=tuple(stats),   # worker counters only grow
+            ))
+        return out
+
+    registry.register(group, plane_samples)
+
+
 def register_tracer(
     registry: MetricsRegistry, tracer: Any, *, group: str = "tracer",
 ) -> None:

@@ -54,7 +54,11 @@ class TraceEvent(NamedTuple):
     non-spans), ``ph`` the Chrome trace-event phase (``X``/``i``/``b``/
     ``e``/``C``), ``rid`` the request id for request-correlated events
     (``None`` otherwise), ``lane`` the tenant lane (``""`` otherwise),
-    and ``tid``/``thread`` the recording thread's ident and name."""
+    and ``tid``/``thread`` the recording thread's ident and name.
+    ``pid`` identifies the recording *process* for multi-process traces
+    (worker-plane spans merge under their worker's OS pid; the parent's
+    own events default to 1), giving the Perfetto export one track group
+    per process."""
 
     ts: float
     ph: str
@@ -66,6 +70,7 @@ class TraceEvent(NamedTuple):
     args: Optional[dict]
     tid: int
     thread: str
+    pid: int = 1
 
 
 class _Ring:

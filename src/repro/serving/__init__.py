@@ -4,9 +4,18 @@
 prefill/decode executables sealed once through a shared
 ``repro.dispatch.ScheduleCache``; :class:`Request` is the unit of traffic
 (also what the dispatch layer routes) and :class:`EngineStats` the
-per-engine counter block.
+per-engine counter block.  :class:`EngineSpec` / :class:`ServingEngineSpec`
+are the picklable rehydration recipes the multi-process worker plane
+ships across process boundaries (engines themselves never pickle).
 """
 
 from .engine import EngineStats, Request, ServingEngine
+from .spec import EngineSpec, ServingEngineSpec
 
-__all__ = ["EngineStats", "Request", "ServingEngine"]
+__all__ = [
+    "EngineSpec",
+    "EngineStats",
+    "Request",
+    "ServingEngine",
+    "ServingEngineSpec",
+]

@@ -34,11 +34,13 @@ on tokens.
 from __future__ import annotations
 
 import dataclasses
+import os
+import time
 from typing import Optional
 
 import numpy as np
 
-from repro.dispatch import Dispatcher, SLOPolicy, percentile
+from repro.dispatch import Dispatcher, EngineWorker, SLOPolicy, percentile
 from repro.dispatch.slo import AdmissionRejected
 from repro.serving import Request
 
@@ -322,6 +324,117 @@ class ScenarioRunner:
         snap = self.disp.snapshot()
         result.preemptions = snap.get("preemptions", 0)
         return result
+
+
+# -- worker-plane failure matrix (ISSUE 9) ----------------------------------
+#
+# Real worker processes cannot run on the fake clock, but the matrix stays
+# deterministic the same way the scripted suites do: engines emit
+# rid * 1000 + i tokens (the harness contract above), and failures are
+# *injected by request id* — a crash or hang fires exactly when the poison
+# rid is seated, never on a timer.  Everything here is module-level and
+# picklable by reference, so the same specs serve both start methods
+# (spawn children re-import this module; forked children inherit it).
+
+
+class WorkerTickEngine:
+    """Real-clock twin of :class:`ScriptedEngine` for worker processes,
+    with rid-keyed fault injection: a rid in ``crash_rids`` makes the
+    step ``os._exit(13)`` (mid-step crash — the pipe breaks with work in
+    flight), a rid in ``hang_rids`` makes it sleep ``hang_s`` (a wedged
+    worker: alive but silent, for heartbeat/step-timeout coverage)."""
+
+    def __init__(
+        self,
+        slots: int = 1,
+        crash_rids: tuple = (),
+        hang_rids: tuple = (),
+        hang_s: float = 120.0,
+    ) -> None:
+        self.slots = [None] * slots
+        self.queue: list = []
+        self.crash_rids = set(crash_rids)
+        self.hang_rids = set(hang_rids)
+        self.hang_s = hang_s
+
+    def submit(self, req: Request) -> None:
+        """Accept one request into the engine-side queue."""
+        self.queue.append(req)
+
+    def free_slots(self) -> int:
+        """Seats available for admission (slots minus engine queue)."""
+        return sum(1 for s in self.slots if s is None) - len(self.queue)
+
+    @property
+    def idle(self) -> bool:
+        """True when no request is queued or seated."""
+        return not self.queue and all(s is None for s in self.slots)
+
+    def step(self) -> list:
+        """One quantum: seat, inject any poison-rid fault, emit tokens."""
+        for i, s in enumerate(self.slots):
+            if s is None and self.queue:
+                self.slots[i] = self.queue.pop(0)
+        for req in self.slots:
+            if req is None:
+                continue
+            if req.rid in self.crash_rids:
+                os._exit(13)
+            if req.rid in self.hang_rids:
+                time.sleep(self.hang_s)
+        finished = []
+        now = time.perf_counter()
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            req.generated.append(req.rid * 1000 + len(req.generated))
+            if not req.t_first:
+                req.t_first = now
+            if len(req.generated) >= req.max_new_tokens:
+                req.done = True
+                req.t_done = now
+                self.slots[i] = None
+                finished.append(req)
+        return finished
+
+
+class WorkerTickSpec:
+    """Picklable engine recipe (the ``EngineSpec`` contract) rehydrating a
+    :class:`WorkerTickEngine` inside the worker process."""
+
+    def __init__(
+        self,
+        slots: int = 1,
+        crash_rids: tuple = (),
+        hang_rids: tuple = (),
+        hang_s: float = 120.0,
+    ) -> None:
+        self.max_slots = slots
+        self.crash_rids = tuple(crash_rids)
+        self.hang_rids = tuple(hang_rids)
+        self.hang_s = hang_s
+
+    def build(self, device_index: int, schedule_cache=None):
+        """Build the engine in-child (device index unused: pure Python)."""
+        return WorkerTickEngine(
+            slots=self.max_slots, crash_rids=self.crash_rids,
+            hang_rids=self.hang_rids, hang_s=self.hang_s,
+        )
+
+
+class SetupFailWorker(EngineWorker):
+    """An ``EngineWorker`` whose ``setup`` raises on one injected worker
+    index — the deterministic setup-failure row of the matrix (that
+    worker is condemned ``WorkerSetupError`` and never respawned; the
+    rest of the fleet must come up and serve)."""
+
+    def setup(self, device_index, fail_index=0, **kwargs):
+        """Raise on the injected index; defer to the real setup elsewhere."""
+        if self.index == fail_index:
+            raise RuntimeError(
+                f"injected setup failure (worker {self.index})"
+            )
+        super().setup(device_index, **kwargs)
 
 
 def sync_token_reference(lane_specs, arrivals) -> dict:

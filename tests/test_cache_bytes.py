@@ -17,7 +17,7 @@ import threading
 
 import pytest
 
-from repro.dispatch import ScheduleCache
+from repro.dispatch import MemoryBudget, ScheduleCache
 
 
 class _Sealed:
@@ -164,6 +164,142 @@ def test_byte_budget_held_under_concurrent_builds():
     # the budget actually bit: this workload cannot fit entirely
     assert cache.stats.evictions > 0
     assert cache.stats.bytes_evicted > 0
+
+
+# -- process-wide MemoryBudget: pooled accounting across caches (ISSUE 9) -----
+
+def test_memory_budget_pools_bytes_and_evicts_global_lru():
+    """Two caches share one pool: the overflowing insert evicts from the
+    cache holding the globally least-recently-touched entry, not from the
+    inserting cache."""
+    budget = MemoryBudget(100)
+    a = ScheduleCache(capacity=64, budget=budget)
+    b = ScheduleCache(capacity=64, budget=budget)
+    a.put("a1", _Sealed(40))
+    b.put("b1", _Sealed(40))
+    assert budget.total_bytes() == 80
+    assert budget.over_bytes() == 0
+
+    b.put("b2", _Sealed(40))            # 120 > 100: global LRU is a's "a1"
+    assert budget.total_bytes() <= 100
+    assert "a1" not in a                # victim came from the OTHER cache
+    assert b.keys() == ["b1", "b2"]
+    assert a.stats.evictions == 1
+    assert a.stats.bytes_evicted == 40
+    assert budget.rebalance_evictions == 1
+    assert budget.bytes_evicted == 40
+
+
+def test_memory_budget_hit_refresh_changes_global_victim():
+    budget = MemoryBudget(100)
+    a = ScheduleCache(capacity=64, budget=budget)
+    b = ScheduleCache(capacity=64, budget=budget)
+    a.put("a1", _Sealed(40))
+    b.put("b1", _Sealed(40))
+    assert a.get("a1") is not None      # refresh: now b's "b1" is oldest
+    a.put("a2", _Sealed(40))
+    assert "b1" not in b                # cross-cache victim follows LRU
+    assert a.keys() == ["a1", "a2"]
+    assert budget.total_bytes() == 80
+
+
+def test_memory_budget_oversized_entry_rejected_like_per_cache():
+    """An artifact larger than the whole pool is rejected at insert —
+    counted eviction, exact bytes — and residents elsewhere survive."""
+    budget = MemoryBudget(100)
+    a = ScheduleCache(capacity=64, budget=budget)
+    b = ScheduleCache(capacity=64, budget=budget)
+    a.put("small", _Sealed(10))
+    got = b.get_or_build("huge", lambda: _Sealed(1000))
+    assert got.stats.arena_bytes == 1000   # caller still gets the value
+    assert "huge" not in b                 # never resident
+    assert "small" in a                    # pool residents untouched
+    assert b.stats.bytes_evicted == 1000
+    assert budget.total_bytes() == 10
+
+
+def test_memory_budget_released_on_invalidate_and_clear():
+    budget = MemoryBudget(1000)
+    a = ScheduleCache(capacity=64, budget=budget)
+    b = ScheduleCache(capacity=64, budget=budget)
+    a.put("k", _Sealed(100))
+    b.put("j", _Sealed(250))
+    assert budget.total_bytes() == 350
+    assert a.invalidate("k")
+    assert budget.total_bytes() == 250
+    b.clear()
+    assert budget.total_bytes() == 0
+    a.put("k", _Sealed(100))
+    a.put("k", _Sealed(40))              # replacement recharges, not adds
+    assert budget.total_bytes() == 40
+
+
+def test_memory_budget_composes_with_per_cache_byte_budget():
+    """Per-cache limits still apply on top of the pool: a cache capped at
+    50 bytes evicts locally even though the shared pool has headroom."""
+    budget = MemoryBudget(10_000)
+    tight = ScheduleCache(capacity=64, byte_budget=50, budget=budget)
+    roomy = ScheduleCache(capacity=64, budget=budget)
+    roomy.put("r", _Sealed(100))
+    tight.put("t1", _Sealed(40))
+    tight.put("t2", _Sealed(40))         # 80 > 50 locally: "t1" goes
+    assert tight.keys() == ["t2"]
+    assert "r" in roomy                  # pool never had to evict
+    assert budget.rebalance_evictions == 0
+    assert budget.total_bytes() == 140
+
+
+def test_memory_budget_snapshot_surfaces_pool_state():
+    budget = MemoryBudget(100)
+    a = ScheduleCache(capacity=64, budget=budget)
+    b = ScheduleCache(capacity=64, budget=budget)
+    a.put("a1", _Sealed(40))
+    b.put("b1", _Sealed(40))
+    b.put("b2", _Sealed(40))             # forces one cross-cache eviction
+    snap = a.snapshot()["budget"]        # pool state rides cache snapshots
+    assert snap == budget.snapshot()
+    assert snap["limit_bytes"] == 100
+    assert snap["total_bytes"] <= 100
+    assert snap["caches"] == 2
+    assert snap["rebalance_evictions"] == 1
+    assert snap["bytes_evicted"] == 40
+    with pytest.raises(ValueError):
+        MemoryBudget(0)
+
+
+@pytest.mark.timeout(60)
+def test_memory_budget_invariant_under_concurrent_caches():
+    """Two caches insert concurrently through one pool; after the churn
+    the pooled total fits and equals the sum of both caches' bytes."""
+    budget = MemoryBudget(500)
+    caches = [ScheduleCache(capacity=1024, budget=budget) for _ in range(2)]
+    errors: list = []
+    barrier = threading.Barrier(4)
+
+    def worker(tid):
+        try:
+            barrier.wait(timeout=10)
+            cache = caches[tid % 2]
+            for r in range(5):
+                for k in range(30):
+                    key = (tid + 3 * k + 7 * r) % 30
+                    cache.get_or_build(
+                        key, lambda key=key: _Sealed(17 * (key % 13 + 1))
+                    )
+        except BaseException as exc:  # noqa: BLE001 - surface in main thread
+            errors.append(exc)
+
+    threads = [threading.Thread(target=worker, args=(t,)) for t in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=30)
+    assert not errors
+    assert all(not t.is_alive() for t in threads)
+    total = budget.total_bytes()
+    assert total <= 500
+    assert total == sum(c.arena_bytes_total for c in caches)
+    assert budget.rebalance_evictions > 0   # the pool actually bit
 
 
 # -- raw-executable accounting (prefill arena_bytes == 0 regression) ----------

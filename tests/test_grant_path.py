@@ -33,6 +33,7 @@ from repro.dispatch import (
     AsyncDispatcher,
     DeficitRoundRobinFairness,
     Dispatcher,
+    DrainTimeoutError,
     LotteryFairness,
     QuotaFairness,
     make_fairness,
@@ -218,6 +219,116 @@ def test_metrics_tombstone_blocks_straggler_resurrection():
     disp.submit_request("a", _request(1, 2))
     disp.run_until_drained()
     assert disp.metrics.snapshot()["engines"]["a"]["steps"] > 0
+
+
+# -- retire futures (ISSUE 9 lifecycle fix: drain without caller stepping) ----
+
+@pytest.mark.timeout(60)
+def test_retire_model_future_pends_until_lane_drains():
+    """``retire_model`` is the non-blocking half of unregister: the future
+    stays pending while work remains, the lane refuses new submits
+    immediately, repeated calls return the SAME future, and whoever steps
+    the last quantum resolves it with the retired engine."""
+    log = []
+    disp = Dispatcher(max_pending=64)
+    eng = _RetireEngine("a", log)
+    disp.register_model("a", eng)
+    disp.submit_request("a", _request(0, 3))
+
+    fut = disp.retire_model("a")
+    assert not fut.done()                          # work queued: still draining
+    assert fut is disp.retire_model("a")           # idempotent: one future
+    with pytest.raises(KeyError):
+        disp.submit("a", PROMPT)                   # refused the moment retired
+    assert not eng.retired                         # hook only at finalize
+
+    for _ in range(10):                            # caller drains via step_lane
+        if fut.done():
+            break
+        disp.step_lane("a")
+    out = fut.result(timeout=0)
+    assert out is eng and eng.retired
+    assert eng.idle                                # drained, not dropped
+    assert not disp.has_model("a")
+
+
+@pytest.mark.timeout(60)
+def test_retire_model_idle_lane_finalizes_inline():
+    """Retiring a lane with nothing queued and an idle engine needs no
+    stepper: the future is already resolved when retire_model returns."""
+    eng = _RetireEngine("a", [])
+    disp = Dispatcher(max_pending=16)
+    disp.register_model("a", eng)
+    fut = disp.retire_model("a")
+    assert fut.done() and fut.result(timeout=0) is eng
+    assert eng.retired
+    assert disp.models == ()
+
+
+@pytest.mark.timeout(60)
+def test_unregister_drain_timeout_leaves_lane_retired_and_recoverable():
+    """A lane that cannot drain raises ``DrainTimeoutError`` but stays
+    registered-and-retired (inspectable), and a later unregister on the
+    same (now unstuck) lane resumes the SAME retire future to completion."""
+    class _StuckEngine(SeqEngine):
+        stuck = True
+
+        @property
+        def idle(self):
+            return (not self.stuck) and super().idle
+
+    eng = _StuckEngine("a", [])
+    disp = Dispatcher(max_pending=16)
+    disp.register_model("a", eng)
+    with pytest.raises(DrainTimeoutError):
+        disp.unregister_model("a", max_steps=5)
+    assert disp.has_model("a")                     # inspectable, not dropped
+    fut = disp.retire_model("a")                   # same pending future
+    assert not fut.done()
+
+    eng.stuck = False
+    out = disp.unregister_model("a")
+    assert out is eng
+    assert fut.done() and fut.result(timeout=0) is eng
+    assert not disp.has_model("a")
+
+
+@pytest.mark.timeout(60)
+def test_async_retire_model_future_resolves_without_blocking_caller():
+    """Under a live pool the caller never drains: the steppers serve the
+    lane's in-flight request to completion and resolve the retire future
+    on their own thread."""
+    ad = AsyncDispatcher(max_pending=64, stepping="pool", pool_size=2)
+    ad.register_model("a", SeqEngine("a", []))
+    ad.register_model("b", SeqEngine("b", []))
+    ad.start()
+    req_fut = ad.submit("a", PROMPT, max_new_tokens=6)
+    fut = ad.retire_model("a")                     # non-blocking handle
+    eng = fut.result(timeout=30)
+    assert eng.name == "a"
+    req = req_fut.result(timeout=30)
+    assert req.done                                # in-flight work drained
+    assert req.generated == [req.rid * 1000 + k for k in range(6)]
+    assert ad.models == ("b",)
+    ad.stop()
+
+
+@pytest.mark.timeout(60)
+def test_retire_finalize_exception_lands_on_future():
+    """A retire() hook that blows up must surface twice: raised to the
+    finalizing thread AND recorded on the retire future, so a caller
+    holding only the future still observes the failure."""
+    class _ExplodingRetire(SeqEngine):
+        def retire(self):
+            raise RuntimeError("retire hook exploded")
+
+    disp = Dispatcher(max_pending=16)
+    disp.register_model("a", _ExplodingRetire("a", []))
+    lane = disp._lane("a")                         # hold the future's home
+    with pytest.raises(RuntimeError, match="retire hook exploded"):
+        disp.retire_model("a")                     # idle lane: finalizes inline
+    with pytest.raises(RuntimeError, match="retire hook exploded"):
+        lane.retire_future.result(timeout=0)       # same failure on the future
 
 
 @pytest.mark.timeout(60)

@@ -1,0 +1,41 @@
+"""Run the worker-plane suite, then fail on leaked worker processes.
+
+``make test-workers`` entry point.  Runs pytest **in-process**, which is
+the whole point: every worker process the suite spawns (fork or spawn)
+is a direct child of *this* interpreter, so after pytest returns,
+``multiprocessing.active_children()`` is an exact orphan detector — no
+psutil, no /proc scanning, no pattern-matching on command lines.  A test
+that passed but failed to reap its workers still turns the job red (and
+the stragglers are killed so the CI runner is left clean).
+"""
+
+from __future__ import annotations
+
+import multiprocessing as mp
+import sys
+
+
+def main() -> int:
+    import pytest
+
+    rc = pytest.main(["-x", "-q", "tests/test_workers.py"])
+    leaked = mp.active_children()
+    if leaked:
+        for proc in leaked:
+            print(
+                f"LEAKED WORKER: pid={proc.pid} name={proc.name!r}",
+                file=sys.stderr,
+            )
+            proc.kill()
+            proc.join(timeout=5.0)
+        print(
+            f"test-workers: {len(leaked)} worker process(es) outlived the "
+            "suite — failing despite test outcome",
+            file=sys.stderr,
+        )
+        return 1
+    return int(rc)
+
+
+if __name__ == "__main__":
+    sys.exit(main())
