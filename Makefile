@@ -1,8 +1,8 @@
 # Tier-1 verification (ROADMAP.md): must pass from a fresh checkout.
 PY ?= python
 
-.PHONY: test test-scenarios test-workers bench-dispatch bench-smoke \
-	trace-smoke serve-example docs-check
+.PHONY: test test-scenarios test-workers test-durability bench-dispatch \
+	bench-smoke trace-smoke serve-example docs-check
 
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
@@ -26,6 +26,17 @@ test-scenarios:
 # on a leak even when every test passed.
 test-workers:
 	PYTHONPATH=src timeout 600 $(PY) tools/run_worker_tests.py
+
+# The durability suite (lifecycle state machine, journal, crash
+# recovery, fault injection — including two real-process SIGKILL
+# kill-and-restart tests) under a hard wall-clock bound, plus TWO leak
+# checks: multiprocessing.active_children() for plane workers spawned
+# in-process, and a /proc cmdline scan for the SIGKILLed child
+# dispatcher's orphaned worker grandchildren (which are nobody's
+# multiprocessing children).  The job fails on a leak even when every
+# test passed.
+test-durability:
+	PYTHONPATH=src timeout 900 $(PY) tools/run_durability_tests.py
 
 docs-check:
 	$(PY) tools/check_docs.py

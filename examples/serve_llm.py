@@ -47,6 +47,20 @@ CPU-only host, fake N devices first:
         --archs stablelm-1.6b,phi4-mini-3.8b \
         --stepping workers --devices 4
 
+Durable control plane: ``--journal serve.db`` appends every lane
+registration and request lifecycle transition to a SQLite WAL journal
+off the hot path.  If the journal already holds live lanes — the last
+run crashed — the dispatcher **recovers first**: tenants re-register
+from their journaled picklable specs, unfinished requests requeue in
+their original admission order (work that was mid-step when the crash
+landed is marked ``INTERRUPTED`` and replays from scratch), and their
+futures are awaited alongside the new submissions.  Kill a run
+mid-flight (Ctrl-Z, ``kill -9 %1``) and re-run the same command to
+watch it:
+
+    PYTHONPATH=src python examples/serve_llm.py --requests 24 \
+        --journal /tmp/serve.db
+
 Observability (``repro.obs``): ``--trace-out trace.json`` records the
 whole run with the span tracer and exports Chrome trace-event JSON —
 open it at https://ui.perfetto.dev or chrome://tracing to see each
@@ -69,6 +83,7 @@ import repro.obs as obs
 from repro.dispatch import (
     AdmissionRejected,
     AsyncDispatcher,
+    RequestJournal,
     ScheduleCache,
     WorkerPlane,
 )
@@ -122,6 +137,14 @@ def main():
     ap.add_argument("--metrics-dump", default="",
                     help="write one metrics-registry snapshot here "
                          "(.prom suffix: Prometheus text; else JSON)")
+    ap.add_argument("--journal", default="",
+                    help="SQLite WAL request journal (durable control "
+                         "plane): lane registrations and request "
+                         "lifecycle transitions append here off the hot "
+                         "path; if the file already holds live lanes — "
+                         "the last run crashed — recover them before "
+                         "serving (tenants re-register from journaled "
+                         "specs, unfinished requests replay)")
     args = ap.parse_args()
 
     tracer = obs.get_tracer()
@@ -161,6 +184,7 @@ def main():
         plane = WorkerPlane(
             n_devices, start_method="spawn", xla_host_devices=n_devices,
         )
+    journal = RequestJournal(args.journal) if args.journal else None
     dispatcher = AsyncDispatcher(
         max_pending=4 * args.requests,
         fairness=args.fairness,
@@ -168,20 +192,41 @@ def main():
         max_concurrent_steps=args.max_concurrent_steps or None,
         pool_size=args.pool_size or None,
         worker_plane=plane,
+        journal=journal,
     )
+    recovered = {}
+    if journal is not None and journal.recover_state().lanes:
+        # the journal holds live lanes: the last run crashed mid-flight.
+        # Recover BEFORE registering or starting — lanes rebuild from
+        # their journaled specs, unfinished requests requeue in admission
+        # order, and their futures land in report["futures"] so this run
+        # awaits the crashed run's work alongside its own.
+        report = dispatcher.recover(journal)
+        recovered = report["futures"]
+        print(f"recovered from {args.journal}: "
+              f"{len(report['lanes'])} lane(s) re-registered, "
+              f"{report['requeued']} request(s) requeued "
+              f"({report['interrupted']} interrupted mid-step, "
+              f"{report['preempted']} un-granted)")
 
     t0 = time.perf_counter()
     cfgs = {}
     for arch, weight, cls, target in zip(archs, weights, classes, targets):
         cfg = dataclasses.replace(C.get(arch, smoke=True), dtype="float32")
         cfgs[arch] = cfg
+        if arch in dispatcher.models:      # rebuilt by recovery above
+            continue
+        # the picklable recipe: in workers mode it IS the registration
+        # (the assigned worker process builds and seals it on its own
+        # device, in its own cache); in journaled in-process modes it
+        # rides along as spec= so a restarted dispatcher can rebuild
+        # this lane without us
+        recipe = ServingEngineSpec(
+            arch=arch, max_slots=args.slots, max_len=128,
+            bucketing=bucketing, dtype="float32",
+        )
         if workers_mode:
-            # ship the recipe, not the engine: the assigned worker process
-            # builds (and seals) it on its own device, in its own cache
-            engine = ServingEngineSpec(
-                arch=arch, max_slots=args.slots, max_len=128,
-                bucketing=bucketing, dtype="float32",
-            )
+            engine = recipe
         else:
             params, _ = init_model(jax.random.key(0), cfg)
             engine = ServingEngine(
@@ -191,6 +236,8 @@ def main():
         dispatcher.register_model(
             arch, engine, weight=weight,
             priority_class=cls, latency_target_ms=target or None,
+            spec=(recipe if journal is not None and not workers_mode
+                  else None),
         )
     if workers_mode:
         print(f"AoT scheduling done in {time.perf_counter()-t0:.1f}s "
@@ -203,7 +250,7 @@ def main():
     rng = np.random.default_rng(0)
     models = dispatcher.models
     t0 = time.perf_counter()
-    futures = []
+    futures = list(recovered.values())     # crashed run's work, replayed
     with dispatcher:                       # start() .. stop(drain=True)
         for i in range(args.requests):
             arch = models[i % len(models)]
@@ -238,7 +285,9 @@ def main():
     wall = time.perf_counter() - t0
     print(f"served {len(done)} requests over {len(models)} model(s) "
           f"in {wall:.2f}s (submit loop itself: {t_submitted*1e3:.1f}ms — "
-          f"the caller never hosted the serving loop)")
+          f"the caller never hosted the serving loop)"
+          + (f" [{len(recovered)} replayed from the crashed run]"
+             if recovered else ""))
     print(f"throughput {snap['tokens_per_second']:,.0f} tok/s | "
           f"TTFT p50 {snap['ttft_ms']['p50']:.0f}ms | "
           f"e2e p99 {snap['e2e_ms']['p99']:.0f}ms | "
@@ -305,6 +354,15 @@ def main():
               + (f" — INVALID: {errors[:3]}" if errors else ""))
     if args.metrics_dump:
         print(f"metrics snapshot -> {args.metrics_dump}")
+    if journal is not None:
+        journal.sync(timeout=10.0)
+        js = journal.stats()
+        journal.close()
+        print(f"journal: {js['records']} records in {js['commits']} "
+              f"commit(s), {js['compactions']} compaction(s)"
+              + (f", DEGRADED ({js['dropped_records']} dropped)"
+                 if js["degraded"] else "")
+              + f" -> {args.journal}")
 
 
 if __name__ == "__main__":

@@ -49,6 +49,23 @@ whose deadlines are provably unmeetable are refused with typed
 :class:`AdmissionRejected` backpressure (or load-shed from the queue
 under overload) — surfaced through ``AsyncDispatcher.submit`` futures.
 
+Durable control plane (:mod:`lifecycle` + :mod:`journal`): requests move
+through an explicit, enforced state machine (``SUBMITTED → QUEUED →
+GRANTED → STEPPING → {COMPLETED, FAILED, SHED}`` with ``PREEMPTED`` /
+``INTERRUPTED`` re-entering ``QUEUED`` on recovery; lanes ``REGISTERED →
+ACTIVE → RETIRING → RETIRED``) — illegal moves raise the typed
+:class:`IllegalTransition`.  Attach a :class:`RequestJournal` (SQLite,
+WAL mode, batched writer thread, fsync on quantum boundaries) and every
+lane registration (as a picklable ``EngineSpec`` recipe) and request
+transition is recorded append-only off the hot path; after a crash,
+``Dispatcher.recover(journal)`` / ``AsyncDispatcher.recover(journal)``
+re-registers the lanes, marks crashed-in-flight requests ``INTERRUPTED``,
+and requeues all non-terminal work in original admission order.  A
+:class:`FaultInjector` threads deterministic crash/write/spawn faults
+through the same paths for testing.  Every error the plane raises on
+purpose derives from :class:`DispatchError`, so one ``except`` catches
+the whole taxonomy.
+
 Thread-safety: every class exported here is safe to use from multiple
 threads; see DESIGN.md §locking-contract for exactly which lock protects
 what and the ordering that keeps the whole layer deadlock-free.
@@ -65,6 +82,12 @@ from .bucketing import (
 )
 from .cache import CacheStats, MemoryBudget, ScheduleCache
 from .dispatcher import Dispatcher, DrainTimeoutError, QueueFullError
+from .errors import (
+    DispatchError,
+    FaultInjected,
+    IllegalTransition,
+    JournalCorrupt,
+)
 from .fairness import (
     FAIRNESS_POLICIES,
     ClassedFairness,
@@ -75,6 +98,23 @@ from .fairness import (
     RoundRobinFairness,
     WeightedFairness,
     make_fairness,
+)
+from .journal import (
+    FaultInjector,
+    JournalState,
+    LaneRecord,
+    RequestJournal,
+    RequestRecord,
+)
+from .lifecycle import (
+    LANE_TRANSITIONS,
+    REQUEST_TRANSITIONS,
+    TERMINAL_STATES,
+    LaneState,
+    LifecycleTracker,
+    RequestState,
+    check_lane_transition,
+    check_request_transition,
 )
 from .metrics import DispatchMetrics, LatencySeries, percentile
 from .slo import AdaptiveController, AdmissionRejected, SLOPolicy
@@ -102,4 +142,10 @@ __all__ = [
     "AdmissionRejected", "AdaptiveController", "SLOPolicy",
     "DeviceWorker", "EngineWorker", "WorkerPlane", "device_topology",
     "WorkerError", "WorkerSetupError", "WorkerCrashed", "WorkerTimeout",
+    "DispatchError", "IllegalTransition", "JournalCorrupt", "FaultInjected",
+    "RequestState", "LaneState", "LifecycleTracker",
+    "REQUEST_TRANSITIONS", "LANE_TRANSITIONS", "TERMINAL_STATES",
+    "check_request_transition", "check_lane_transition",
+    "RequestJournal", "JournalState", "LaneRecord", "RequestRecord",
+    "FaultInjector",
 ]

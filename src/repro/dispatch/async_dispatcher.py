@@ -691,6 +691,8 @@ class AsyncDispatcher:
         composer: Optional[Any] = None,
         devices: Optional[int] = None,
         worker_plane: Optional[Any] = None,
+        journal: Optional[Any] = None,
+        faults: Optional[Any] = None,
     ) -> None:
         if stepping not in ("per-engine", "single", "pool", "workers"):
             raise ValueError(
@@ -711,13 +713,23 @@ class AsyncDispatcher:
         if dispatcher is None:
             dispatcher = Dispatcher(
                 max_pending=max_pending, metrics=metrics, fairness=fairness,
-                tracer=tracer, composer=composer,
+                tracer=tracer, composer=composer, journal=journal,
+                faults=faults,
             )
         else:
             if tracer is not None:
                 dispatcher.tracer = tracer
             if composer is not None:
                 dispatcher.composer = composer
+            if journal is not None:
+                # late attachment onto a caller-built dispatcher: the
+                # journal (and injector) reach the same lifecycle tracker
+                # the dispatcher already threads through its transitions
+                dispatcher.journal = journal
+                dispatcher.lifecycle.journal = journal
+            if faults is not None:
+                dispatcher.faults = faults
+                dispatcher.lifecycle.faults = faults
         self.dispatcher = dispatcher
         self.idle_wait = idle_wait
         self.stepping = stepping
@@ -747,6 +759,7 @@ class AsyncDispatcher:
                     devices if devices is not None else 1,
                     start_method="spawn",
                     tracer=self.dispatcher.tracer,
+                    faults=faults,
                 )
         # thread budget for stepping="pool": tenants share these workers, so
         # the stepper thread count stays flat no matter how many models
@@ -783,6 +796,7 @@ class AsyncDispatcher:
         weight: float = 1.0,
         priority_class: int = 0,
         latency_target_ms: Optional[float] = None,
+        spec: Optional[Any] = None,
     ) -> Any:
         """Register a tenant; if the dispatcher is live in per-engine mode,
         its stepper thread spawns immediately.  Pool mode needs no spawn:
@@ -799,7 +813,10 @@ class AsyncDispatcher:
         builds the real engine in-child, and the lane proxy registered
         here is what the parent's steppers drive (a setup failure
         surfaces on this thread as a typed
-        :class:`~repro.dispatch.workers.WorkerError`)."""
+        :class:`~repro.dispatch.workers.WorkerError`).  The spec doubles
+        as the lane's journal recipe, so in workers mode a journaled
+        dispatcher is recoverable with no extra arguments; other modes
+        pass ``spec=`` explicitly to make a lane journal-recoverable."""
         if self.stepping == "workers":
             if hasattr(engine, "submit") or not hasattr(engine, "build"):
                 raise ValueError(
@@ -807,6 +824,8 @@ class AsyncDispatcher:
                     "live engines (device state cannot cross a process "
                     f"boundary); got {type(engine).__name__}"
                 )
+            if spec is None:
+                spec = engine
             engine = self.plane.assign(name, engine)
         try:
             out = self.dispatcher.register_model(
@@ -815,6 +834,7 @@ class AsyncDispatcher:
                 weight=weight,
                 priority_class=priority_class,
                 latency_target_ms=latency_target_ms,
+                spec=spec,
             )
         except BaseException:
             # a rejected registration (duplicate name, ...) must not leave
@@ -832,6 +852,58 @@ class AsyncDispatcher:
             ):
                 self._spawn_locked(name, self._run_lane)
         return out
+
+    def recover(
+        self, journal: Any, *, engines: Optional[dict] = None
+    ) -> dict:
+        """Rebuild lanes and requeue non-terminal requests from
+        ``journal`` (see :meth:`Dispatcher.recover` for the full
+        semantics and report shape).
+
+        Mode-aware lane recovery: in workers mode the journaled
+        :class:`~repro.serving.spec.EngineSpec` recipes go straight back
+        to the worker plane (engines rebuild in child processes, exactly
+        like a live registration); in the in-process modes a journaled
+        spec is built here on device 0.  ``engines`` overrides the recipe
+        per lane.  Callable before or after :meth:`start` — requeued work
+        is granted as soon as steppers run.
+
+        On top of the base report, ``report["futures"]`` maps each
+        requeued rid to a :class:`~concurrent.futures.Future` resolving
+        with the finished request — the same contract :meth:`submit`
+        gives new work, so a restarted server can re-await everything the
+        crash orphaned."""
+        from concurrent.futures import Future  # local: only used here
+
+        from repro.serving.spec import EngineSpec  # lazy: avoid cycle
+
+        def _reg(name: str, engine_or_spec: Any, **kw: Any) -> Any:
+            eng = engine_or_spec
+            if self.stepping != "workers" and isinstance(eng, EngineSpec):
+                eng = eng.build(0)
+            return self.register_model(name, eng, **kw)
+
+        futures: dict = {}
+
+        def _attach(req: Any) -> None:
+            # runs BEFORE the request re-enters its lane queue, so the
+            # future cannot miss a completion; bypasses _new_future's
+            # running check — recovery is legal before start()
+            fut: Future = Future()
+            with self._cv:
+                self._pending.add(fut)
+            req.on_complete = self._completion(fut, None)
+            futures[req.rid] = fut
+
+        report = self.dispatcher.recover(
+            journal, engines=engines, register=_reg, on_requeue=_attach
+        )
+        report["futures"] = futures
+        # wake the grant plane: requeued lanes are ready the moment the
+        # loop runs
+        for name in report.get("lanes", ()):
+            self._kick(name)
+        return report
 
     def retire_model(self, name: str) -> Future:
         """Mark tenant ``name`` retired; returns a future resolving to the

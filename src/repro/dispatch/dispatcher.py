@@ -69,17 +69,14 @@ import numpy as np
 
 from repro.obs.tracer import get_tracer
 
+# QueueFullError / DrainTimeoutError live in .errors (under the unified
+# DispatchError taxonomy) but remain importable from here for
+# compatibility with pre-taxonomy call sites.
+from .errors import DrainTimeoutError, JournalCorrupt, QueueFullError
 from .fairness import ClassedFairness, FairnessSpec, make_fairness
+from .lifecycle import LaneState, LifecycleTracker, RequestState
 from .metrics import DispatchMetrics
 from .slo import AdmissionRejected, SLOPolicy
-
-
-class QueueFullError(RuntimeError):
-    """Raised by :meth:`Dispatcher.submit` when the bounded queue is full."""
-
-
-class DrainTimeoutError(RuntimeError):
-    """Raised when a drain exhausts its step/time budget with work pending."""
 
 
 class _Lane:
@@ -95,7 +92,7 @@ class _Lane:
 
     __slots__ = (
         "name", "engine", "queue", "queue_mu", "step_mu", "retired",
-        "priority_class", "finalizing", "retire_future",
+        "priority_class", "finalizing", "retire_future", "lc_state",
     )
 
     def __init__(
@@ -110,6 +107,7 @@ class _Lane:
         self.priority_class = priority_class
         self.finalizing = False
         self.retire_future: Optional[Future] = None
+        self.lc_state = ""   # stamped by LifecycleTracker.lane_begin
 
 
 class Dispatcher:
@@ -136,11 +134,22 @@ class Dispatcher:
         tracer: Optional[Any] = None,
         composer: Optional[Any] = None,
         slo: Optional[SLOPolicy] = None,
+        journal: Optional[Any] = None,
+        faults: Optional[Any] = None,
     ) -> None:
         if max_pending < 1:
             raise ValueError(f"max_pending must be >= 1, got {max_pending}")
         self.max_pending = max_pending
         self.metrics = metrics or DispatchMetrics()
+        # durability plane (repro.dispatch.journal): when a RequestJournal
+        # is attached, every lane registration and request lifecycle
+        # transition is recorded append-only (O(1) enqueue here; all
+        # SQLite I/O on the journal's writer thread), and recover() can
+        # rebuild the control plane from it after a crash.  ``faults`` is
+        # the test-only FaultInjector threaded through the same paths.
+        self.journal = journal
+        self.faults = faults
+        self.lifecycle = LifecycleTracker(journal=journal, faults=faults)
         # SLO plane (repro.dispatch.slo): priority classes, latency
         # targets, admission control, shedding.  Always present — with no
         # targets registered it admits everything and costs one dict probe
@@ -198,6 +207,7 @@ class Dispatcher:
         weight: float = 1.0,
         priority_class: int = 0,
         latency_target_ms: Optional[float] = None,
+        spec: Optional[Any] = None,
     ) -> Any:
         """Add a tenant: ``name`` gets its own lane over ``engine``.
 
@@ -211,6 +221,11 @@ class Dispatcher:
         lane a per-request deadline — completions feed the adaptive
         overload controller and submissions gain admission control
         (:class:`~repro.dispatch.slo.AdmissionRejected` backpressure).
+        ``spec`` (a picklable :class:`~repro.serving.spec.EngineSpec`)
+        is the lane's rehydration recipe: when a journal is attached it
+        is persisted with the registration, and :meth:`recover` rebuilds
+        the engine from it after a restart — lanes registered without a
+        spec need a caller-provided engine to recover.
         Registration is thread-safe and allowed while serving is live —
         an ``AsyncDispatcher`` picks the new lane up on its next pass.
         """
@@ -260,6 +275,10 @@ class Dispatcher:
         set_hook = getattr(engine, "set_submit_hook", None)
         if set_hook is not None:
             set_hook(self._engine_submit_hook(name))
+        self.lifecycle.lane_begin(
+            lane, spec=spec, weight=weight, priority_class=priority_class,
+            latency_target_ms=latency_target_ms,
+        )
         return engine
 
     def retire_model(self, name: str) -> Future:
@@ -292,6 +311,7 @@ class Dispatcher:
                 fut.set_running_or_notify_cancel()   # never cancellable
                 lane.retire_future = fut
         if fresh:
+            self.lifecycle.lane_advance(lane, LaneState.RETIRING)
             # already-idle lane: nobody will step it again, finalize now
             self._maybe_finalize_retire(lane)
         return fut
@@ -397,6 +417,7 @@ class Dispatcher:
         retire = getattr(lane.engine, "retire", None)
         if retire is not None:
             retire()
+        self.lifecycle.lane_advance(lane, LaneState.RETIRED)
         lane.retire_future.set_result(lane.engine)
 
     @property
@@ -490,6 +511,7 @@ class Dispatcher:
         )
         self._validate(lane, req)
         self._admit(req)
+        self.lifecycle.begin(req)
         self._slo_admit(lane, req)
         with self._count_mu:
             req.rid = self._next_rid
@@ -504,6 +526,7 @@ class Dispatcher:
         self._validate(lane, req)
         req.model = model
         self._admit(req)
+        self.lifecycle.begin(req)
         self._slo_admit(lane, req)
         self._enqueue(lane, req)
         return req
@@ -528,6 +551,9 @@ class Dispatcher:
             with self._count_mu:
                 self._pending_count -= 1
             self.metrics.on_admission_reject(lane.priority_class)
+            # rejected before the durability point: SUBMITTED -> FAILED
+            # stays in memory only (the journal never saw this request)
+            self.lifecycle.advance(req, RequestState.FAILED, lane=lane.name)
             raise
 
     def _enqueue(self, lane: _Lane, req: Any) -> None:
@@ -545,7 +571,15 @@ class Dispatcher:
             req._dispatcher_pending = False
             with self._count_mu:
                 self._pending_count -= 1
+            self.lifecycle.advance(req, RequestState.FAILED, lane=lane.name)
             raise KeyError(f"model {lane.name!r} is being unregistered")
+        # the durability point: the request is in a lane FIFO, so the
+        # journal writes its full record (the enqueue above held queue_mu;
+        # this runs after release — journal I/O is on the writer thread
+        # regardless, but even the O(1) record enqueue stays outside)
+        self.lifecycle.advance(req, RequestState.QUEUED, lane=lane.name)
+        if lane.lc_state == LaneState.REGISTERED:
+            self.lifecycle.lane_advance(lane, LaneState.ACTIVE)
         if self.tracer.enabled:
             # one async track per request: opened here (rid is final and the
             # request is durably queued), closed in _complete / _fail
@@ -826,6 +860,7 @@ class Dispatcher:
                 "became unmeetable while queued",
                 lane=name, priority_class=cls, deadline=dl,
             )
+            self.lifecycle.advance(req, RequestState.SHED, lane=name)
             req.error = str(exc)
             req._admission_error = exc
             req.done = True
@@ -876,13 +911,16 @@ class Dispatcher:
             if release is not None:
                 release()
             return []
+        seated: list = []
         with lane.step_mu:
             engine = lane.engine
             # admission control: only hand the engine what it can seat now,
             # so queueing (and thus backpressure) stays visible here
             with lane.queue_mu:
                 while lane.queue and engine.free_slots() > 0:
-                    engine.submit(lane.queue.popleft())
+                    req = lane.queue.popleft()
+                    seated.append(req)
+                    engine.submit(req)
             stats = getattr(engine, "stats", None)
             tok_before = self._engine_tokens(stats)
             t0 = time.perf_counter()
@@ -901,6 +939,14 @@ class Dispatcher:
                     f"step:{name}", t0, dt, cat="step", lane=name,
                     args={"tokens": tokens, "finished": len(newly)},
                 )
+        # lifecycle transitions for this quantum's admissions, after the
+        # step lock is released: the quantum popped them (GRANTED) and
+        # handed them to the engine (STEPPING).  A crash before these
+        # records land replays the requests as QUEUED — same tokens, one
+        # redundant re-grant
+        for req in seated:
+            self.lifecycle.advance(req, RequestState.GRANTED, lane=name)
+            self.lifecycle.advance(req, RequestState.STEPPING, lane=name)
         with self._fair_mu:
             self.fairness.charge(name, steps=1, tokens=tokens)
         self.metrics.on_engine_step(name, dt, tokens=tokens)
@@ -915,6 +961,10 @@ class Dispatcher:
         # retired lane: the quantum that completes its last request
         # finalizes the removal and resolves the retire future
         self._maybe_finalize_retire(lane)
+        if self.journal is not None:
+            # quantum boundary: nudge the journal writer to commit (and
+            # fsync) everything this quantum recorded — outside all locks
+            self.journal.quantum_mark()
         return newly
 
     def step_group(
@@ -961,7 +1011,7 @@ class Dispatcher:
                 members = [name]
             retiring = group.retiring
             refill_from = [retiring] if retiring is not None else members
-            self._refill_group(group, members, refill_from)
+            seated = self._refill_group(group, members, refill_from)
             # pre-step snapshot of every request that can emit tokens this
             # step: seated slots plus engine-queued admissions
             before = [
@@ -1023,6 +1073,11 @@ class Dispatcher:
                 d = sum(len(r.generated) - n0 for r, n0 in mb)
                 if d > 0:
                     tokens_by_lane[m] = tokens_by_lane.get(m, 0) + d
+        # composed admissions: the group quantum granted + seated them
+        # (lifecycle records land after the group step lock is released)
+        for owner, req in seated:
+            self.lifecycle.advance(req, RequestState.GRANTED, lane=owner)
+            self.lifecycle.advance(req, RequestState.STEPPING, lane=owner)
         if tokens_by_lane:
             with self._fair_mu:
                 try:
@@ -1058,13 +1113,18 @@ class Dispatcher:
             lane_m = self._lane_or_none(m)
             if lane_m is not None:
                 self._maybe_finalize_retire(lane_m)
+        if self.journal is not None:
+            self.journal.quantum_mark()
         return newly
 
-    def _refill_group(self, group: Any, members: list, refill_from: list) -> None:
+    def _refill_group(self, group: Any, members: list, refill_from: list) -> list:
         """Seat freed host slots from member lane queues, one seat per
         fairness pick (called under the group's step lock).  ``refill_from``
-        restricts donors during a disband drain."""
+        restricts donors during a disband drain.  Returns the seated
+        ``(lane name, request)`` pairs so the caller can record their
+        lifecycle transitions once the group lock is released."""
         host = group.host
+        seated: list = []
         lanes: dict[str, _Lane] = {}
         for m in refill_from:
             lane = self._lane_or_none(m)
@@ -1091,13 +1151,25 @@ class Dispatcher:
                 del lanes[pick]
                 continue
             host.submit(req)
+            seated.append((pick, req))
             if not lane.queue:
                 del lanes[pick]
+        return seated
 
     def _complete(self, name: str, newly: list) -> None:
         """Account finished requests and fire their callbacks (no locks
         held — a slow or re-entrant callback cannot stall other lanes)."""
         for req in newly:
+            # enforced terminal transition (shed requests arrive already
+            # terminal; direct engine submissions carry no state and are
+            # skipped by the tracker)
+            if not self.lifecycle.is_terminal(req):
+                dst = (
+                    RequestState.FAILED
+                    if getattr(req, "error", None) is not None
+                    else RequestState.COMPLETED
+                )
+                self.lifecycle.advance(req, dst, lane=name)
             if self.tracer.enabled:
                 self.tracer.instant(
                     "complete", cat="request", lane=name, rid=req.rid,
@@ -1217,4 +1289,165 @@ class Dispatcher:
             snap["fairness"] = self.fairness.snapshot()
         if self.composer is not None:
             snap["compose_groups"] = self.composer.snapshot()
+        if self.journal is not None:
+            snap["journal"] = self.journal.stats()
         return snap
+
+    # -- crash recovery ----------------------------------------------------
+
+    def recover(
+        self,
+        journal: Any,
+        *,
+        engines: Optional[dict] = None,
+        register: Optional[Callable[..., Any]] = None,
+        on_requeue: Optional[Callable[[Any], None]] = None,
+    ) -> dict:
+        """Rebuild the control plane from ``journal`` after a restart.
+
+        Call on a fresh dispatcher (normally one constructed with the
+        same journal attached, so the recovered state is re-journaled
+        going forward).  Three phases, in order:
+
+        1. **Lanes** — every journaled lane whose latest state is not
+           ``RETIRED`` is re-registered with its original weight,
+           priority class, and latency target.  The engine comes from
+           ``engines[name]`` when the caller provides one, else it is
+           rebuilt from the lane's journaled
+           :class:`~repro.serving.spec.EngineSpec` recipe (built
+           in-process on device 0; pass ``register=`` to route
+           registration elsewhere, e.g. ``AsyncDispatcher`` hands specs
+           to its worker plane).  A lane journaled without a spec and
+           without a caller engine raises
+           :class:`~repro.dispatch.errors.JournalCorrupt` — it cannot be
+           recovered.
+        2. **Requests** — every non-terminal request is requeued on its
+           lane in original admission order, bypassing admission control
+           (the work was already admitted once; backpressure applies to
+           *new* submissions).  A request that was ``STEPPING`` at crash
+           time is first marked ``INTERRUPTED`` (journaled), then
+           requeued — resubmission is idempotent because engines are
+           rebuilt fresh, so its tokens regenerate from the start.  One
+           that was ``GRANTED`` goes through ``PREEMPTED`` (its quantum
+           died with the old process).  The rid allocator is advanced
+           past every journaled rid.
+        3. **Retiring lanes** — lanes that were mid-retire resume
+           draining: ``retire_model`` is re-issued after their work is
+           requeued.
+
+        ``on_requeue(req)`` (optional) runs for each rebuilt request
+        just before it re-enters its lane queue — attach completion
+        callbacks or futures there, BEFORE any stepper can finish the
+        request (``AsyncDispatcher.recover`` uses it to hand back
+        futures).
+
+        Returns a report dict: ``lanes`` (recovered names), ``requeued``,
+        ``interrupted``, ``preempted``, ``skipped`` (requests whose lane
+        could not be recovered), and ``requests`` (the rebuilt
+        :class:`~repro.serving.Request` objects, in requeue order)."""
+        state = journal.recover_state()
+        reg = register if register is not None else self._register_recovered
+        lanes: list = []
+        retiring: list = []
+        for rec in state.lanes:
+            if self.has_model(rec.name):
+                continue   # caller pre-registered it; keep their engine
+            engine = (engines or {}).get(rec.name)
+            if engine is None and rec.spec is None:
+                raise JournalCorrupt(
+                    f"lane {rec.name!r} was journaled without an engine "
+                    "spec; pass engines={name: engine} to recover it",
+                    path=getattr(journal, "path", ""),
+                )
+            reg(
+                rec.name,
+                engine if engine is not None else rec.spec,
+                weight=rec.weight,
+                priority_class=rec.priority_class,
+                latency_target_ms=rec.latency_target_ms,
+                spec=rec.spec,
+            )
+            lanes.append(rec.name)
+            if rec.state == LaneState.RETIRING:
+                retiring.append(rec.name)
+        report = self._requeue_recovered(state, on_requeue=on_requeue)
+        for name in retiring:
+            self.retire_model(name)
+        report["lanes"] = lanes
+        return report
+
+    def _register_recovered(self, name: str, engine_or_spec: Any, **kw: Any) -> Any:
+        """Default recovery registration: a bare spec is built in-process
+        on device 0 (``AsyncDispatcher.recover`` overrides this to hand
+        specs to its stepping plane instead)."""
+        from repro.serving.spec import EngineSpec  # lazy: avoid cycle
+
+        engine = engine_or_spec
+        if isinstance(engine, EngineSpec):
+            engine = engine.build(0)
+        return self.register_model(name, engine, **kw)
+
+    def _requeue_recovered(
+        self, state: Any, *, on_requeue: Optional[Callable[[Any], None]] = None
+    ) -> dict:
+        """Phase 2 of :meth:`recover`: requeue every journaled
+        non-terminal request in admission order (see :meth:`recover` for
+        the semantics)."""
+        from repro.serving.engine import Request  # lazy: avoid import cycle
+
+        requeued = interrupted = preempted = skipped = 0
+        requests: list = []
+        with self._count_mu:
+            self._next_rid = max(self._next_rid, state.max_rid + 1)
+        for rec in state.requests:
+            lane = self._lane_or_none(rec.lane)
+            if lane is None:
+                skipped += 1
+                continue
+            req = Request(
+                rid=rec.rid,
+                prompt=rec.prompt,
+                max_new_tokens=rec.max_new_tokens,
+                tenant=rec.tenant,
+                model=rec.lane,
+            )
+            if rec.deadline:
+                req.deadline = rec.deadline
+            req.state = rec.state
+            req._journaled = True
+            if rec.state == RequestState.STEPPING:
+                # it may have produced tokens the old process lost:
+                # mark the interruption durably, then resubmit — engines
+                # were rebuilt, so the replay regenerates from scratch
+                self.lifecycle.advance(req, RequestState.INTERRUPTED)
+                interrupted += 1
+            elif rec.state == RequestState.GRANTED:
+                self.lifecycle.advance(req, RequestState.PREEMPTED)
+                preempted += 1
+            req._dispatcher_pending = True
+            req.t_submit = time.perf_counter()
+            if on_requeue is not None:
+                on_requeue(req)
+            requests.append(req)
+            with self._count_mu:
+                self._pending_count += 1
+            self.metrics.on_submit(req.t_submit)
+            self.lifecycle.advance(req, RequestState.QUEUED, lane=rec.lane)
+            with lane.queue_mu:
+                lane.queue.append(req)
+            if lane.lc_state == LaneState.REGISTERED:
+                self.lifecycle.lane_advance(lane, LaneState.ACTIVE)
+            if self.tracer.enabled:
+                self.tracer.async_begin("request", req.rid, lane=rec.lane)
+                self.tracer.instant(
+                    "requeued", cat="request", lane=rec.lane, rid=req.rid
+                )
+            self._touch_ready(lane)
+            requeued += 1
+        return {
+            "requeued": requeued,
+            "interrupted": interrupted,
+            "preempted": preempted,
+            "skipped": skipped,
+            "requests": requests,
+        }

@@ -39,8 +39,10 @@ import time
 from collections import deque
 from typing import Callable, Optional, Sequence
 
+from .errors import DispatchError
 
-class AdmissionRejected(RuntimeError):
+
+class AdmissionRejected(DispatchError):
     """Typed backpressure: a request's deadline is provably unmeetable.
 
     Raised by :meth:`SLOPolicy.admit` on the submitting thread (sync

@@ -61,6 +61,7 @@ from __future__ import annotations
 import inspect
 import multiprocessing as mp
 import os
+import random
 import threading
 import time
 from collections import deque
@@ -68,9 +69,12 @@ from typing import Any, Callable, Optional
 
 from repro.obs.tracer import TraceEvent, get_tracer
 
+from .errors import DispatchError
 
-class WorkerError(RuntimeError):
-    """Base class for typed worker-plane failures.
+
+class WorkerError(DispatchError):
+    """Base class for typed worker-plane failures (part of the unified
+    :class:`~repro.dispatch.errors.DispatchError` taxonomy).
 
     Carries the worker index and device index so callers (and tests) can
     assert the blast radius: a failure names exactly one worker, and only
@@ -303,6 +307,7 @@ def _worker_main(
     clock_origin: float,
     setup_kwargs: dict,
     xla_host_devices: int,
+    parent_end: Any = None,
 ) -> None:
     """Child-process entry: setup handshake, then the command loop.
 
@@ -311,6 +316,14 @@ def _worker_main(
     commands back-to-back.  Every command gets exactly one reply (plus
     any interleaved heartbeats), which is what lets the parent's RPC
     loop stay a simple match-and-absorb."""
+    if parent_end is not None:
+        # fork-started children inherit the PARENT side of their own
+        # pipe; holding it open means a SIGKILLed parent never produces
+        # EOF here and the orphan serves forever.  Close it first thing.
+        try:
+            parent_end.close()
+        except OSError:  # pragma: no cover - already closed
+            pass
     if xla_host_devices:
         os.environ.setdefault(
             "XLA_FLAGS",
@@ -411,7 +424,7 @@ class _WorkerHandle:
     __slots__ = (
         "index", "device", "process", "conn", "lock", "lanes", "pid",
         "last_seen", "restarts", "dead", "abandoned", "error", "alive_ev",
-        "stats", "spans",
+        "stats", "spans", "restart_times", "backoff", "next_spawn_at",
     )
 
     def __init__(self, index: int, device: int) -> None:
@@ -430,6 +443,12 @@ class _WorkerHandle:
         self.alive_ev = threading.Event()   # set while serving
         self.stats: dict = {}
         self.spans: list[TraceEvent] = []
+        # respawn pacing (monitor-thread state, time.monotonic() domain):
+        # recent respawn stamps for the rolling budget window, the current
+        # exponential backoff, and the earliest next spawn time
+        self.restart_times: deque = deque()
+        self.backoff = 0.0
+        self.next_spawn_at = 0.0
 
 
 class WorkerPlane:
@@ -458,9 +477,14 @@ class WorkerPlane:
         step_timeout: float = 60.0,
         setup_timeout: float = 120.0,
         max_restarts: int = 3,
+        restart_window: float = 60.0,
+        backoff_base: float = 0.05,
+        backoff_max: float = 5.0,
+        backoff_jitter: float = 0.2,
         trace: Optional[bool] = None,
         xla_host_devices: int = 0,
         tracer: Optional[Any] = None,
+        faults: Optional[Any] = None,
     ) -> None:
         if n_workers < 1:
             raise ValueError(f"n_workers must be >= 1, got {n_workers}")
@@ -472,7 +496,21 @@ class WorkerPlane:
         self.hb_timeout = hb_timeout
         self.step_timeout = step_timeout
         self.setup_timeout = setup_timeout
+        # respawn budget is a ROLLING window, not a lifetime cap: up to
+        # ``max_restarts`` respawns within any ``restart_window`` seconds;
+        # a worker that exceeds it is abandoned (crash loop), while one
+        # that crashes rarely is respawned forever.  Consecutive respawns
+        # are paced by exponential backoff (doubling from ``backoff_base``
+        # up to ``backoff_max``, with ±``backoff_jitter`` relative jitter
+        # so a fleet-wide fault does not resynchronize every respawn);
+        # the backoff resets once the window empties.  All pacing runs on
+        # ``time.monotonic()``.
         self.max_restarts = max_restarts
+        self.restart_window = restart_window
+        self.backoff_base = backoff_base
+        self.backoff_max = backoff_max
+        self.backoff_jitter = backoff_jitter
+        self.faults = faults
         self.xla_host_devices = xla_host_devices
         self.tracer = tracer if tracer is not None else get_tracer()
         self.trace = trace
@@ -653,6 +691,8 @@ class WorkerPlane:
                 "status": status,
                 "lanes": sorted(handle.lanes),
                 "restarts": handle.restarts,
+                "restarts_in_window": len(handle.restart_times),
+                "respawn_backoff_s": handle.backoff,
                 "heartbeat_age_s": (
                     max(0.0, now - handle.last_seen)
                     if not handle.dead else None
@@ -673,6 +713,19 @@ class WorkerPlane:
         """Start (or restart) one worker and run the setup handshake;
         on success, re-register the handle's lanes so queued work can
         replay.  Condemns the handle with a typed error on failure."""
+        if self.faults is not None:
+            # deterministic spawn fault (FaultInjector): condemn as a
+            # TRANSIENT crash — the respawn/backoff path handles it like
+            # a real process death, no child ever started
+            try:
+                self.faults.on_worker_spawn(handle.index)
+            except Exception as exc:  # noqa: BLE001 - injected on purpose
+                with handle.lock:
+                    self._condemn_locked(handle, WorkerCrashed(
+                        f"worker {handle.index} spawn fault: {exc}",
+                        worker=handle.index, device=handle.device,
+                    ))
+                return
         ctx = mp.get_context(self.start_method)
         parent_conn, child_conn = ctx.Pipe()
         trace = self.tracer.enabled if self.trace is None else self.trace
@@ -682,6 +735,13 @@ class WorkerPlane:
                 child_conn, self.worker_cls, handle.index, handle.device,
                 self.hb_interval, trace, time.perf_counter(),
                 self.setup_kwargs, self.xla_host_devices,
+                # fork children inherit every open fd, including this
+                # pipe's parent end — hand it over so the child closes it
+                # and a dead parent reads as EOF (spawn children inherit
+                # nothing, and shipping the conn would recreate the leak)
+                parent_conn
+                if (self.start_method or mp.get_start_method()) == "fork"
+                else None,
             ),
             name=f"repro-worker-{handle.index}",
             daemon=True,
@@ -768,23 +828,17 @@ class WorkerPlane:
     def _monitor_loop(self) -> None:
         """Liveness sweep: detect silent deaths and heartbeat timeouts,
         drain idle workers' heartbeats off the pipe, respawn condemned
-        workers (bounded by ``max_restarts``; never after setup
-        failure)."""
+        workers (exponential backoff with jitter, bounded by the rolling
+        ``max_restarts``-per-``restart_window`` budget; never after setup
+        failure).  All timing in the ``time.monotonic()`` domain."""
         interval = max(0.01, self.hb_interval / 2)
         while not self._stop_ev.wait(interval):
             for handle in self._handles:
                 if self._stop_ev.is_set():
                     return
                 if handle.dead:
-                    if (
-                        not handle.abandoned
-                        and handle.restarts < self.max_restarts
-                    ):
-                        handle.restarts += 1
-                        handle.error = None
-                        self._spawn(handle)
-                    elif not handle.abandoned:
-                        handle.abandoned = True
+                    if not handle.abandoned:
+                        self._maybe_respawn(handle)
                     continue
                 proc = handle.process
                 if proc is not None and not proc.is_alive():
@@ -817,6 +871,38 @@ class WorkerPlane:
                         f"{age:.1f}s (timeout {self.hb_timeout}s)",
                         worker=handle.index, device=handle.device,
                     ))
+
+    def _maybe_respawn(self, handle: _WorkerHandle) -> None:
+        """Respawn one dead (non-abandoned) worker if the rolling restart
+        budget allows it and its backoff delay has elapsed; called from
+        the monitor sweep.  The first respawn after a quiet period is
+        immediate; consecutive respawns double their spacing (with
+        relative jitter) until the budget trips and the worker is
+        abandoned."""
+        now = time.monotonic()
+        while (
+            handle.restart_times
+            and now - handle.restart_times[0] > self.restart_window
+        ):
+            handle.restart_times.popleft()
+        if not handle.restart_times:
+            handle.backoff = 0.0      # quiet window: pacing starts over
+        if len(handle.restart_times) >= self.max_restarts:
+            handle.abandoned = True   # crash loop: budget exhausted
+            return
+        if now < handle.next_spawn_at:
+            return
+        handle.restarts += 1
+        handle.restart_times.append(now)
+        nxt = min(
+            self.backoff_max,
+            max(self.backoff_base, handle.backoff * 2.0),
+        )
+        handle.backoff = nxt
+        jitter = 1.0 + self.backoff_jitter * (2.0 * random.random() - 1.0)
+        handle.next_spawn_at = now + nxt * jitter
+        handle.error = None
+        self._spawn(handle)
 
     # -- RPC ---------------------------------------------------------------
 

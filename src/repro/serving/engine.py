@@ -49,7 +49,11 @@ class Request:
     silently vanishes.  ``deadline`` (0.0 — none) is stamped by the
     dispatcher's SLO plane at admission when the lane carries a latency
     target: submit time plus target, on the SLO policy's clock — the
-    value overload shedding compares against."""
+    value overload shedding compares against.  ``state`` is the explicit
+    lifecycle state (:class:`repro.dispatch.lifecycle.RequestState`)
+    stamped by the dispatcher's lifecycle tracker; requests submitted
+    straight to an engine keep the empty string and are exempt from
+    lifecycle enforcement (and from journaling)."""
 
     rid: int
     prompt: np.ndarray                 # (P,) int32
@@ -68,6 +72,7 @@ class Request:
     t_submit: float = 0.0
     t_first: float = 0.0
     t_done: float = 0.0
+    state: str = ""                    # dispatcher lifecycle state ("" = untracked)
 
 
 @dataclasses.dataclass

@@ -24,7 +24,28 @@ Contract:
 from __future__ import annotations
 
 import dataclasses
+import pickle
 from typing import Any, Optional, Union
+
+
+def pickle_spec(spec: "EngineSpec") -> bytes:
+    """Serialize an engine recipe for a process boundary or the request
+    journal, verifying the round trip.
+
+    Returns the pickle bytes after confirming they load back — a spec
+    that captures an unpicklable closure or a live engine must fail
+    loudly HERE, on the registering thread, not later inside a worker
+    spawn or a journal recovery where the stack no longer points at the
+    culprit.  Raises :class:`TypeError` with the offending spec named."""
+    try:
+        blob = pickle.dumps(spec)
+        pickle.loads(blob)
+    except Exception as exc:
+        raise TypeError(
+            f"engine spec {spec!r} is not picklable (specs must hold "
+            f"configs/seeds/sizes, never arrays, engines, or closures): {exc}"
+        ) from exc
+    return blob
 
 
 class EngineSpec:

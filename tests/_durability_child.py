@@ -1,0 +1,140 @@
+"""Crash-side half of the kill-and-restart durability tests.
+
+Run as a real subprocess (``python _durability_child.py JOURNAL MODE
+MARKER N_REQ MAX_NEW``): builds a journaled :class:`AsyncDispatcher` in
+the requested stepping mode, registers one deliberately *slow* lane,
+submits ``N_REQ`` requests, syncs the journal, writes ``MARKER`` (first
+line ``submitted``, then one worker pid per line in workers mode), and
+then just keeps serving until the parent test SIGKILLs it mid-flight.
+The per-step delay guarantees the kill lands with work in every
+lifecycle stage — queued, granted, and stepping.
+
+:class:`SlowSeqSpec` lives here (not in the test module) so its pickles
+resolve the same ``_durability_child`` module from the pytest process,
+this subprocess, and any worker grandchildren it spawns.
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+import numpy as np
+
+from repro.serving.spec import EngineSpec
+
+
+class SlowSeqEngine:
+    """Deterministic decode stream with a per-step wall delay.
+
+    Token contract matches ``SeqEngine``/``WorkerTickEngine``: request
+    ``rid`` emits ``rid * 1000 + i`` as its i-th token, one per step —
+    so a recovered replay is token-identical to an uncrashed run.  The
+    delay makes each quantum slow enough that a SIGKILL arriving shortly
+    after submit always interrupts in-flight work."""
+
+    def __init__(self, slots: int = 2, step_delay: float = 0.05) -> None:
+        self.slots: list = [None] * slots
+        self.queue: list = []
+        self.step_delay = step_delay
+
+    def submit(self, req) -> None:
+        """Accept one request into the engine-side queue."""
+        self.queue.append(req)
+
+    def free_slots(self) -> int:
+        """Seats available for admission (slots minus engine queue)."""
+        return sum(1 for s in self.slots if s is None) - len(self.queue)
+
+    @property
+    def idle(self) -> bool:
+        """True when no request is queued or seated."""
+        return not self.queue and all(s is None for s in self.slots)
+
+    def step(self) -> list:
+        """One slow quantum: seat from the queue, emit one token each."""
+        time.sleep(self.step_delay)
+        for i, s in enumerate(self.slots):
+            if s is None and self.queue:
+                self.slots[i] = self.queue.pop(0)
+        finished = []
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            req.generated.append(req.rid * 1000 + len(req.generated))
+            if not req.t_first:
+                req.t_first = time.perf_counter()
+            if len(req.generated) >= req.max_new_tokens:
+                req.done = True
+                req.t_done = time.perf_counter()
+                self.slots[i] = None
+                finished.append(req)
+        return finished
+
+
+class SlowSeqSpec(EngineSpec):
+    """Picklable recipe rehydrating a :class:`SlowSeqEngine` — the
+    journaled lane recipe for both in-process and worker recovery."""
+
+    def __init__(self, slots: int = 2, step_delay: float = 0.05) -> None:
+        self.max_slots = slots
+        self.step_delay = step_delay
+
+    def build(self, device_index: int, schedule_cache=None):
+        """Build the engine (device index unused: pure Python)."""
+        return SlowSeqEngine(self.max_slots, self.step_delay)
+
+
+def main(argv: list) -> None:
+    """Child entry point: journal, submit, mark readiness, serve slowly."""
+    from repro.dispatch import AsyncDispatcher, RequestJournal, WorkerPlane
+
+    # import the spec class through the module (not the __main__ alias this
+    # script runs as) so its journal pickles resolve from any process
+    from _durability_child import SlowSeqSpec as Spec
+
+    journal_path, mode, marker = argv[0], argv[1], argv[2]
+    n_req, max_new = int(argv[3]), int(argv[4])
+
+    journal = RequestJournal(journal_path, flush_interval=0.01)
+    spec = Spec(slots=2, step_delay=0.05)
+    if mode == "workers":
+        plane = WorkerPlane(
+            1, start_method="fork", hb_interval=0.05, hb_timeout=5.0
+        )
+        disp = AsyncDispatcher(
+            max_pending=1000, stepping="workers", worker_plane=plane,
+            journal=journal,
+        )
+        disp.register_model("a", spec)
+    else:
+        disp = AsyncDispatcher(
+            max_pending=1000, stepping=mode,
+            pool_size=2 if mode == "pool" else None,
+            journal=journal,
+        )
+        disp.register_model("a", spec.build(0), spec=spec)
+    disp.start()
+    for _ in range(n_req):
+        disp.submit("a", np.arange(4, dtype=np.int32), max_new_tokens=max_new)
+    journal.sync(timeout=10.0)
+
+    pids: list = []
+    if mode == "workers":
+        snap = disp.snapshot()["async"]["workers"]
+        pids = [w["pid"] for w in snap["workers"] if w.get("pid", -1) > 0]
+    # atomic marker: the parent must never read a half-written pid list
+    with open(marker + ".tmp", "w") as f:
+        f.write("submitted\n")
+        for pid in pids:
+            f.write(f"{pid}\n")
+    os.rename(marker + ".tmp", marker)
+
+    # keep serving (slowly) until the parent SIGKILLs us — never exits
+    # cleanly, so everything after this point is crash-recovery territory
+    time.sleep(300)
+
+
+if __name__ == "__main__":
+    main(sys.argv[1:])

@@ -1,0 +1,670 @@
+"""Durable control plane: lifecycle machine, journal, crash recovery,
+fault injection.
+
+Four layers, cheapest first:
+
+* **Lifecycle** — the transition tables are closed and enforced
+  (:class:`IllegalTransition` on any move outside them), and a journaled
+  dispatcher run leaves only legal per-rid transition chains behind.
+* **Journal** — round-trip, compaction, admission-order recovery,
+  mid-flight token-identical replay, spec-less lanes raising
+  :class:`JournalCorrupt`.
+* **Fault injection** — deterministic crash-at-transition, journal
+  write-failure degradation (serving survives, journal marks itself
+  degraded), spawn faults driving the worker plane's respawn backoff and
+  rolling restart budget.
+* **Kill-and-restart** — a real subprocess (``_durability_child.py``)
+  SIGKILLed mid-flight in both in-process pool and ``stepping="workers"``
+  modes, recovered in this process, and drained to token-identical
+  completions with every submitted request accounted for.
+
+Property tests ride on ``_hypothesis_compat`` (real hypothesis when
+installed, deterministic sampler otherwise): random legal walks never
+corrupt the journal, random torn-WAL crash points always recover to a
+consistent queue prefix.
+"""
+
+from __future__ import annotations
+
+import os
+import shutil
+import signal
+import sqlite3
+import subprocess
+import sys
+import time
+
+import numpy as np
+import pytest
+
+from _durability_child import SlowSeqSpec
+from _fakes import SeqEngine
+from _hypothesis_compat import given, settings, st
+from repro.dispatch import (
+    REQUEST_TRANSITIONS,
+    TERMINAL_STATES,
+    AdmissionRejected,
+    AsyncDispatcher,
+    DispatchError,
+    Dispatcher,
+    DrainTimeoutError,
+    FaultInjected,
+    FaultInjector,
+    IllegalTransition,
+    JournalCorrupt,
+    LaneState,
+    LifecycleTracker,
+    QueueFullError,
+    RequestJournal,
+    RequestState,
+    WorkerCrashed,
+    WorkerError,
+    WorkerPlane,
+    WorkerSetupError,
+    WorkerTimeout,
+    check_lane_transition,
+    check_request_transition,
+)
+from repro.serving import Request
+
+TESTS_DIR = os.path.dirname(os.path.abspath(__file__))
+REPO_DIR = os.path.dirname(TESTS_DIR)
+PROMPT = np.array([1, 2, 3, 4], np.int32)
+
+
+def _mk_journal(tmp_path, name="j.db", **kw):
+    kw.setdefault("flush_interval", 0.005)
+    return RequestJournal(str(tmp_path / name), **kw)
+
+
+def _expected(rid: int, n: int) -> list:
+    return [rid * 1000 + i for i in range(n)]
+
+
+def _transition_chains(path: str) -> dict:
+    """Per-rid journaled state chains, in append order."""
+    conn = sqlite3.connect(path)
+    try:
+        rows = conn.execute(
+            "SELECT rid, state FROM transitions ORDER BY seq"
+        ).fetchall()
+    finally:
+        conn.close()
+    chains: dict = {}
+    for rid, state in rows:
+        chains.setdefault(rid, []).append(state)
+    return chains
+
+
+# -- lifecycle state machine ------------------------------------------------
+
+
+def test_transition_tables_closed():
+    """Every state named in the tables is a key of the tables, and
+    terminal states have no outgoing edges."""
+    for src, dsts in REQUEST_TRANSITIONS.items():
+        for dst in dsts:
+            assert dst in REQUEST_TRANSITIONS, dst
+    for term in TERMINAL_STATES:
+        assert REQUEST_TRANSITIONS[term] == frozenset(), term
+
+
+def test_illegal_request_transition_raises():
+    with pytest.raises(IllegalTransition) as ei:
+        check_request_transition(
+            RequestState.COMPLETED, RequestState.QUEUED, rid=7
+        )
+    assert ei.value.src == RequestState.COMPLETED
+    assert ei.value.dst == RequestState.QUEUED
+    assert isinstance(ei.value, DispatchError)
+    with pytest.raises(IllegalTransition):
+        check_request_transition(RequestState.QUEUED, RequestState.STEPPING)
+    with pytest.raises(IllegalTransition):
+        check_request_transition("bogus", RequestState.QUEUED)
+
+
+def test_illegal_lane_transition_raises():
+    with pytest.raises(IllegalTransition):
+        check_lane_transition(LaneState.RETIRED, LaneState.ACTIVE, name="a")
+    # legal moves pass silently
+    check_lane_transition(LaneState.REGISTERED, LaneState.ACTIVE)
+    check_lane_transition(LaneState.ACTIVE, LaneState.RETIRING)
+    check_lane_transition(LaneState.RETIRING, LaneState.RETIRED)
+
+
+def test_tracker_enforces_and_noops():
+    """Same-state advances are idempotent no-ops; untracked requests
+    (state == "", direct engine submissions) are skipped entirely."""
+    lc = LifecycleTracker()
+    req = Request(rid=1, prompt=PROMPT.copy(), max_new_tokens=2)
+    lc.begin(req)
+    assert req.state == RequestState.SUBMITTED
+    assert lc.advance(req, RequestState.QUEUED)
+    assert not lc.advance(req, RequestState.QUEUED)   # idempotent
+    with pytest.raises(IllegalTransition):
+        lc.advance(req, RequestState.COMPLETED)        # queued -/-> completed
+    assert req.state == RequestState.QUEUED            # unchanged on raise
+    untracked = Request(rid=2, prompt=PROMPT.copy(), max_new_tokens=2)
+    assert not lc.advance(untracked, RequestState.COMPLETED)
+    assert untracked.state == ""
+
+
+def test_dispatcher_run_leaves_legal_chains(tmp_path):
+    """A journaled end-to-end run journals only legal per-rid chains,
+    each starting at QUEUED and ending COMPLETED."""
+    j = _mk_journal(tmp_path)
+    with j:
+        d = Dispatcher(journal=j)
+        d.register_model("a", SeqEngine("a", [], slots=2))
+        d.register_model("b", SeqEngine("b", [], slots=1))
+        for _ in range(4):
+            d.submit("a", PROMPT.copy(), max_new_tokens=3)
+            d.submit("b", PROMPT.copy(), max_new_tokens=2)
+        done = d.run_until_drained()
+        assert {r.state for r in done} == {RequestState.COMPLETED}
+        j.sync()
+        chains = _transition_chains(j.path)
+    assert set(chains) == {r.rid for r in done}
+    for rid, chain in chains.items():
+        assert chain[0] == RequestState.QUEUED, (rid, chain)
+        assert chain[-1] == RequestState.COMPLETED, (rid, chain)
+        for src, dst in zip(chain, chain[1:]):
+            assert dst in REQUEST_TRANSITIONS[src], (rid, chain)
+
+
+# -- error taxonomy ---------------------------------------------------------
+
+
+def test_every_dispatch_error_shares_one_root():
+    for exc in (
+        QueueFullError, DrainTimeoutError, AdmissionRejected,
+        WorkerError, WorkerCrashed, WorkerTimeout, WorkerSetupError,
+        IllegalTransition, JournalCorrupt, FaultInjected,
+    ):
+        assert issubclass(exc, DispatchError), exc
+        assert issubclass(exc, RuntimeError), exc   # old catch sites
+
+
+def test_legacy_import_paths_still_work():
+    from repro.dispatch.dispatcher import (        # noqa: F401
+        DrainTimeoutError as D2,
+        QueueFullError as Q2,
+    )
+    from repro.dispatch.slo import AdmissionRejected as A2  # noqa: F401
+    from repro.dispatch.workers import WorkerError as W2    # noqa: F401
+
+    assert Q2 is QueueFullError and D2 is DrainTimeoutError
+    assert A2 is AdmissionRejected and W2 is WorkerError
+
+
+# -- journal round-trip and recovery ---------------------------------------
+
+
+def test_clean_run_recovers_to_empty_queue(tmp_path):
+    j = _mk_journal(tmp_path)
+    d = Dispatcher(journal=j)
+    d.register_model("a", SeqEngine("a", [], slots=2))
+    for _ in range(5):
+        d.submit("a", PROMPT.copy(), max_new_tokens=3)
+    d.run_until_drained()
+    j.sync()
+    state = j.recover_state()
+    assert state.requests == []             # all terminal: nothing to replay
+    assert [(l.name, l.state) for l in state.lanes] == [("a", "active")]
+    assert state.max_rid == 4
+    stats = j.stats()
+    assert stats["records"] > 0 and stats["write_errors"] == 0
+    assert not stats["degraded"]
+    j.close()
+
+
+def test_midflight_recovery_token_identical(tmp_path):
+    """Crash with work queued/granted/stepping; a fresh dispatcher
+    replays every non-terminal request to the exact tokens an uncrashed
+    run would have produced."""
+    path = str(tmp_path / "j.db")
+    j = RequestJournal(path, flush_interval=0.005)
+    d = Dispatcher(journal=j)
+    d.register_model("a", SeqEngine("a", [], slots=2))
+    subs = [d.submit("a", PROMPT.copy(), max_new_tokens=5) for _ in range(6)]
+    d.step()                                # some now granted+stepping
+    j.sync()
+    j.close()                               # "crash": in-memory state gone
+
+    j2 = RequestJournal(path)
+    d2 = Dispatcher(journal=j2)
+    report = d2.recover(j2, engines={"a": SeqEngine("a", [], slots=2)})
+    assert report["lanes"] == ["a"]
+    assert report["requeued"] == len(report["requests"]) > 0
+    assert report["interrupted"] > 0        # the kill landed mid-step
+    done = d2.run_until_drained()
+    got = {r.rid: list(r.generated) for r in done}
+    assert got == {r.rid: _expected(r.rid, 5) for r in subs if r.rid in got}
+    # new rids never collide with journaled ones
+    fresh = d2.submit("a", PROMPT.copy(), max_new_tokens=1)
+    assert fresh.rid > max(r.rid for r in subs)
+    j2.close()
+
+
+def test_recovery_preserves_admission_order(tmp_path):
+    """Requeued work re-enters its lane in original admission order: a
+    1-slot engine must complete recovered requests in rid order."""
+    path = str(tmp_path / "j.db")
+    j = RequestJournal(path, flush_interval=0.005)
+    d = Dispatcher(journal=j)
+    d.register_model("a", SeqEngine("a", [], slots=1))
+    for _ in range(5):
+        d.submit("a", PROMPT.copy(), max_new_tokens=2)
+    j.sync()
+    j.close()                               # crash before any step
+
+    j2 = RequestJournal(path)
+    d2 = Dispatcher(journal=j2)
+    d2.recover(j2, engines={"a": SeqEngine("a", [], slots=1)})
+    done = d2.run_until_drained()
+    assert [r.rid for r in done] == [0, 1, 2, 3, 4]
+    j2.close()
+
+
+def test_recovery_resumes_retiring_lane(tmp_path):
+    """A lane journaled mid-retire finishes its drain after recovery:
+    its queued work completes, then the lane is gone."""
+    path = str(tmp_path / "j.db")
+    j = RequestJournal(path, flush_interval=0.005)
+    d = Dispatcher(journal=j)
+    d.register_model("a", SeqEngine("a", [], slots=1))
+    d.submit("a", PROMPT.copy(), max_new_tokens=2)
+    d.retire_model("a")
+    j.sync()
+    j.close()
+
+    j2 = RequestJournal(path)
+    d2 = Dispatcher(journal=j2)
+    report = d2.recover(j2, engines={"a": SeqEngine("a", [], slots=1)})
+    assert report["requeued"] == 1
+    done = d2.run_until_drained()
+    assert [list(r.generated) for r in done] == [_expected(0, 2)]
+    assert not d2.has_model("a")            # retire completed post-recovery
+    j2.close()
+
+
+def test_lane_without_spec_raises_journal_corrupt(tmp_path):
+    j = _mk_journal(tmp_path)
+    d = Dispatcher(journal=j)
+    d.register_model("a", SeqEngine("a", [], slots=1))   # no spec=
+    d.submit("a", PROMPT.copy(), max_new_tokens=2)
+    j.sync()
+    j.close()
+
+    j2 = RequestJournal(str(tmp_path / "j.db"))
+    d2 = Dispatcher(journal=j2)
+    with pytest.raises(JournalCorrupt):
+        d2.recover(j2)                       # no engines= override either
+    # the override path still works
+    d3 = Dispatcher(journal=None)
+    report = d3.recover(j2, engines={"a": SeqEngine("a", [], slots=1)})
+    assert report["requeued"] == 1
+    j2.close()
+
+
+def test_compaction_bounds_journal_size(tmp_path):
+    """Terminal requests are purged: after many completed requests the
+    journal holds rows proportional to the live set, not the lifetime
+    total, and recovery still reads clean."""
+    j = _mk_journal(tmp_path, compact_every=1)
+    d = Dispatcher(journal=j)
+    d.register_model("a", SeqEngine("a", [], slots=4))
+    # chunked with sync barriers so the writer commits (and therefore
+    # compacts) several times instead of group-committing one big batch
+    for chunk in range(10):
+        for _ in range(4):
+            d.submit("a", PROMPT.copy(), max_new_tokens=1)
+        d.run_until_drained()
+        j.sync()
+    assert j.stats()["compactions"] > 0
+    state = j.recover_state()
+    assert state.requests == []
+    conn = sqlite3.connect(j.path)
+    try:
+        n_req = conn.execute("SELECT COUNT(*) FROM requests").fetchone()[0]
+        n_tr = conn.execute("SELECT COUNT(*) FROM transitions").fetchone()[0]
+        n_lane = conn.execute("SELECT COUNT(*) FROM lanes").fetchone()[0]
+    finally:
+        conn.close()
+    # size tracks the live set (0), modulo whatever landed after the
+    # last compaction boundary — far below the 40-request lifetime total
+    assert n_req < 40 and n_tr < 160
+    assert n_lane == 1                      # superseded lane rows collapsed
+    j.close()
+
+
+# -- fault injection --------------------------------------------------------
+
+
+def test_crash_at_transition_is_deterministic(tmp_path):
+    fi = FaultInjector()
+    fi.crash_at("request", RequestState.STEPPING, count=2)
+    j = _mk_journal(tmp_path, faults=fi)
+    d = Dispatcher(journal=j, faults=fi)
+    d.register_model("a", SeqEngine("a", [], slots=4))
+    for _ in range(3):
+        d.submit("a", PROMPT.copy(), max_new_tokens=2)
+    with pytest.raises(FaultInjected):
+        d.run_until_drained()
+    assert fi.log == [("transition", ("request", 1, RequestState.STEPPING))]
+    j.close()
+
+
+def test_journal_write_faults_degrade_not_crash(tmp_path):
+    """Injected commit failures: serving continues untouched; the journal
+    retries, then drops the batch and reports itself degraded."""
+    fi = FaultInjector()
+    fi.fail_journal_writes(1000)            # every commit fails
+    j = _mk_journal(tmp_path, faults=fi, max_write_retries=2)
+    d = Dispatcher(journal=j, faults=fi)
+    d.register_model("a", SeqEngine("a", [], slots=2))
+    for _ in range(4):
+        d.submit("a", PROMPT.copy(), max_new_tokens=2)
+    done = d.run_until_drained()            # serving is unaffected
+    assert len(done) == 4
+    assert all(list(r.generated) == _expected(r.rid, 2) for r in done)
+    deadline = time.monotonic() + 5.0
+    while not j.stats()["degraded"] and time.monotonic() < deadline:
+        time.sleep(0.02)
+    stats = j.stats()
+    assert stats["degraded"]
+    assert stats["write_errors"] > 0 and stats["dropped_records"] > 0
+    assert ("journal_write", None) in fi.log
+    j.close()
+
+
+def test_spawn_faults_drive_backoff_then_recover():
+    """Two injected spawn failures: the plane respawns through the
+    exponential-backoff path and the worker still comes up serving, with
+    the restart budget window reflecting the attempts."""
+    fi = FaultInjector()
+    fi.fail_worker_spawns(0, 2)
+    plane = WorkerPlane(
+        1, start_method="fork", hb_interval=0.02, hb_timeout=2.0,
+        max_restarts=5, backoff_base=0.01, backoff_max=0.05,
+        restart_window=60.0, faults=fi,
+    )
+    plane.start()
+    try:
+        deadline = time.monotonic() + 15.0
+        while time.monotonic() < deadline:
+            snap = plane.snapshot()
+            if snap["serving"] == 1:
+                break
+            time.sleep(0.02)
+        snap = plane.snapshot()
+        assert snap["serving"] == 1
+        w = snap["workers"][0]
+        assert w["restarts"] >= 2           # two faulted + one good spawn
+        assert w["restarts_in_window"] >= 2
+        assert fi.log.count(("spawn", 0)) == 2
+        # the recovered worker actually serves
+        proxy = plane.assign("m", SlowSeqSpec(slots=1, step_delay=0.0))
+        req = Request(rid=0, prompt=PROMPT.copy(), max_new_tokens=3)
+        proxy.submit(req)
+        drain_deadline = time.monotonic() + 10.0
+        done: list = []
+        while not done and time.monotonic() < drain_deadline:
+            done.extend(proxy.step())
+        assert [list(r.generated) for r in done] == [_expected(0, 3)]
+    finally:
+        plane.shutdown()
+    assert plane.leaked() == []
+
+
+def test_spawn_faults_exhaust_rolling_budget():
+    """Unbounded spawn failures: once ``max_restarts`` respawns land
+    inside the window, the worker is abandoned — no respawn storm."""
+    fi = FaultInjector()
+    fi.fail_worker_spawns(0, 1000)
+    plane = WorkerPlane(
+        1, start_method="fork", hb_interval=0.02, hb_timeout=2.0,
+        max_restarts=2, backoff_base=0.005, backoff_max=0.02,
+        restart_window=60.0, faults=fi,
+    )
+    plane.start()
+    try:
+        deadline = time.monotonic() + 15.0
+        while time.monotonic() < deadline:
+            snap = plane.snapshot()
+            if snap["workers"][0]["status"] == "abandoned":
+                break
+            time.sleep(0.02)
+        snap = plane.snapshot()
+        assert snap["workers"][0]["status"] == "abandoned"
+        # budget respected: initial spawn + exactly max_restarts respawns
+        assert fi.log.count(("spawn", 0)) == 3
+    finally:
+        plane.shutdown()
+    assert plane.leaked() == []
+
+
+# -- property tests ---------------------------------------------------------
+
+
+def _legal_walk(seed: int, max_len: int = 12) -> list:
+    """A random legal request walk starting at SUBMITTED."""
+    import random as _random
+
+    rng = _random.Random(seed)
+    state = RequestState.SUBMITTED
+    walk = []
+    for _ in range(max_len):
+        nxt = sorted(REQUEST_TRANSITIONS[state])
+        if not nxt:
+            break
+        state = rng.choice(nxt)
+        walk.append(state)
+    return walk
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(min_value=0, max_value=10_000))
+def test_random_legal_walks_never_raise(seed):
+    lc = LifecycleTracker()
+    req = Request(rid=seed, prompt=PROMPT.copy(), max_new_tokens=1)
+    lc.begin(req)
+    for dst in _legal_walk(seed):
+        lc.advance(req, dst, lane="a")
+        assert req.state == dst
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(min_value=0, max_value=10_000))
+def test_random_illegal_steps_raise_and_preserve_state(seed):
+    import random as _random
+
+    rng = _random.Random(seed ^ 0x5EED)
+    lc = LifecycleTracker()
+    req = Request(rid=seed, prompt=PROMPT.copy(), max_new_tokens=1)
+    lc.begin(req)
+    all_states = sorted(REQUEST_TRANSITIONS)
+    for dst in _legal_walk(seed ^ 0x5EED):
+        illegal = [
+            s for s in all_states
+            if s not in REQUEST_TRANSITIONS[req.state] and s != req.state
+        ]
+        if illegal:
+            bad = rng.choice(illegal)
+            before = req.state
+            with pytest.raises(IllegalTransition):
+                lc.advance(req, bad)
+            assert req.state == before
+        lc.advance(req, dst, lane="a")
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(min_value=0, max_value=10_000))
+def test_random_walks_never_corrupt_journal(seed):
+    """Any legal walk, journaled, recovers to exactly what the walk
+    says: absent when never QUEUED or ended terminal, else present with
+    the walk's final state."""
+    import tempfile
+
+    with tempfile.TemporaryDirectory() as tmp:
+        j = RequestJournal(os.path.join(tmp, "j.db"), flush_interval=0.001)
+        lc = LifecycleTracker(journal=j)
+        req = Request(rid=seed % 97, prompt=PROMPT.copy(), max_new_tokens=3)
+        lc.begin(req)
+        walk = _legal_walk(seed)
+        for dst in walk:
+            lc.advance(req, dst, lane="a")
+        j.sync()
+        state = j.recover_state()
+        queued = RequestState.QUEUED in walk
+        terminal = bool(walk) and walk[-1] in TERMINAL_STATES
+        if not queued or terminal:
+            assert state.requests == []
+        else:
+            assert [r.rid for r in state.requests] == [req.rid]
+            assert state.requests[0].state == walk[-1]
+        j.close()
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    st.integers(min_value=0, max_value=8),
+    st.integers(min_value=1, max_value=9),
+)
+def test_random_crash_points_recover_consistent(steps, keep_tenths):
+    """Tear the WAL at a random point after a random amount of progress:
+    recovery must always parse to a consistent prefix — unique rids, all
+    non-terminal, admission order intact."""
+    import tempfile
+
+    with tempfile.TemporaryDirectory() as tmp:
+        path = os.path.join(tmp, "j.db")
+        j = RequestJournal(path, flush_interval=0.001)
+        d = Dispatcher(journal=j)
+        d.register_model("a", SeqEngine("a", [], slots=2))
+        for _ in range(6):
+            d.submit("a", PROMPT.copy(), max_new_tokens=4)
+        for _ in range(steps):
+            d.step()
+        j.sync()
+        # crash image: copy db+wal mid-run, then tear the copied WAL
+        crash = os.path.join(tmp, "crash.db")
+        shutil.copy(path, crash)
+        if os.path.exists(path + "-wal"):
+            shutil.copy(path + "-wal", crash + "-wal")
+        j.close()
+        FaultInjector.torn_write(crash, keep=keep_tenths / 10.0)
+
+        j2 = RequestJournal(crash)
+        state = j2.recover_state()          # must not raise
+        rids = [r.rid for r in state.requests]
+        assert len(rids) == len(set(rids))
+        assert rids == sorted(rids)         # admission order (single lane)
+        assert set(rids) <= set(range(6))
+        for rec in state.requests:
+            assert rec.state in REQUEST_TRANSITIONS
+            assert rec.state not in TERMINAL_STATES
+        j2.close()
+
+
+# -- kill-and-restart integration -------------------------------------------
+
+
+def _spawn_crash_child(tmp_path, mode: str, n_req: int, max_new: int):
+    journal = str(tmp_path / "j.db")
+    marker = str(tmp_path / "marker")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(REPO_DIR, "src"), TESTS_DIR,
+         env.get("PYTHONPATH", "")]
+    )
+    proc = subprocess.Popen(
+        [sys.executable, os.path.join(TESTS_DIR, "_durability_child.py"),
+         journal, mode, marker, str(n_req), str(max_new)],
+        env=env, cwd=REPO_DIR,
+        stdout=subprocess.DEVNULL, stderr=subprocess.PIPE,
+    )
+    deadline = time.monotonic() + 60.0
+    while not os.path.exists(marker) and time.monotonic() < deadline:
+        if proc.poll() is not None:
+            raise AssertionError(
+                f"child died before marker: {proc.stderr.read().decode()}"
+            )
+        time.sleep(0.02)
+    assert os.path.exists(marker), "child never became ready"
+    with open(marker) as f:
+        lines = f.read().split()
+    assert lines[0] == "submitted"
+    worker_pids = [int(p) for p in lines[1:]]
+    time.sleep(0.4)                         # let the kill land mid-flight
+    os.kill(proc.pid, signal.SIGKILL)
+    proc.wait(timeout=30)
+    proc.stderr.close()
+    return journal, worker_pids
+
+
+def _assert_pids_exit(pids: list, timeout: float = 15.0) -> None:
+    """Orphaned worker grandchildren must self-exit on pipe EOF."""
+    deadline = time.monotonic() + timeout
+    for pid in pids:
+        while time.monotonic() < deadline:
+            try:
+                os.kill(pid, 0)
+            except ProcessLookupError:
+                break
+            time.sleep(0.05)
+        else:
+            raise AssertionError(f"worker pid {pid} leaked past SIGKILL")
+
+
+@pytest.mark.timeout(180)
+def test_sigkill_recovery_pool_mode(tmp_path):
+    """SIGKILL a journaled pool-mode server mid-flight; recover in this
+    process via the journaled spec; every submitted request is either
+    journaled-terminal or replayed to token-identical completion."""
+    n_req, max_new = 8, 6
+    journal_path, _ = _spawn_crash_child(tmp_path, "pool", n_req, max_new)
+
+    j = RequestJournal(journal_path)
+    disp = AsyncDispatcher(
+        max_pending=1000, stepping="pool", pool_size=2, journal=j
+    )
+    report = disp.recover(j)                # lane rebuilt from journaled spec
+    assert report["lanes"] == ["a"]
+    assert 0 < report["requeued"] <= n_req
+    completed_before = n_req - report["requeued"]
+    assert completed_before >= 0            # nothing lost, nothing invented
+    with disp:
+        for rid, fut in report["futures"].items():
+            req = fut.result(timeout=60)
+            assert list(req.generated) == _expected(rid, max_new), rid
+    j.close()
+
+
+@pytest.mark.timeout(180)
+def test_sigkill_recovery_workers_mode(tmp_path):
+    """Same crash matrix through the multi-process plane: the child ran
+    stepping="workers"; its orphaned worker exits on pipe EOF; recovery
+    hands the journaled spec back to a fresh worker plane."""
+    n_req, max_new = 6, 5
+    journal_path, worker_pids = _spawn_crash_child(
+        tmp_path, "workers", n_req, max_new
+    )
+    assert worker_pids, "child reported no worker pids"
+    _assert_pids_exit(worker_pids)
+
+    j = RequestJournal(journal_path)
+    plane = WorkerPlane(1, start_method="fork", hb_interval=0.05,
+                        hb_timeout=5.0)
+    disp = AsyncDispatcher(
+        max_pending=1000, stepping="workers", worker_plane=plane, journal=j,
+    )
+    report = disp.recover(j)
+    assert report["lanes"] == ["a"]
+    assert 0 < report["requeued"] <= n_req
+    with disp:
+        for rid, fut in report["futures"].items():
+            req = fut.result(timeout=120)
+            assert list(req.generated) == _expected(rid, max_new), rid
+    assert plane.leaked() == []
+    j.close()

@@ -1,0 +1,89 @@
+"""Run the durability suite, then fail on leaked processes.
+
+``make test-durability`` entry point.  Runs pytest **in-process** (the
+``run_worker_tests.py`` pattern) and applies two leak checks after it
+returns:
+
+1. ``multiprocessing.active_children()`` — exact, for the worker-plane
+   processes the fault-injection tests spawn from *this* interpreter
+   (spawn-backoff, restart-budget, recovery-into-a-fresh-plane tests).
+2. a ``/proc`` command-line scan for ``_durability_child`` — the
+   kill-and-restart tests SIGKILL a real child dispatcher via
+   ``subprocess``, so neither that child nor its fork-started worker
+   grandchildren (which inherit its command line) are multiprocessing
+   children here.  A grandchild that survives its parent's SIGKILL is
+   precisely the orphan bug the suite exists to catch, so the job goes
+   red even if every test passed.
+
+Stragglers are killed so the CI runner is left clean.
+"""
+
+from __future__ import annotations
+
+import multiprocessing as mp
+import os
+import signal
+import sys
+
+CHILD_MARKER = "_durability_child"
+
+
+def _scan_proc_orphans() -> list:
+    """Pids (not ours) whose cmdline mentions the durability child script."""
+    orphans = []
+    me = os.getpid()
+    for entry in os.listdir("/proc"):
+        if not entry.isdigit() or int(entry) == me:
+            continue
+        try:
+            with open(f"/proc/{entry}/cmdline", "rb") as f:
+                cmdline = f.read().replace(b"\0", b" ").decode(errors="replace")
+        except OSError:
+            continue  # raced with exit
+        if CHILD_MARKER in cmdline:
+            orphans.append((int(entry), cmdline.strip()))
+    return orphans
+
+
+def main() -> int:
+    """Run tests/test_durability.py in-process, then both leak checks."""
+    import pytest
+
+    rc = pytest.main(["-x", "-q", "tests/test_durability.py"])
+    failed = False
+
+    leaked = mp.active_children()
+    if leaked:
+        failed = True
+        for proc in leaked:
+            print(
+                f"LEAKED WORKER: pid={proc.pid} name={proc.name!r}",
+                file=sys.stderr,
+            )
+            proc.kill()
+            proc.join(timeout=5.0)
+
+    if sys.platform.startswith("linux"):
+        for pid, cmdline in _scan_proc_orphans():
+            failed = True
+            print(
+                f"LEAKED CHILD PROCESS: pid={pid} cmdline={cmdline!r}",
+                file=sys.stderr,
+            )
+            try:
+                os.kill(pid, signal.SIGKILL)
+            except OSError:
+                pass
+
+    if failed:
+        print(
+            "test-durability: process(es) outlived the suite — failing "
+            "despite test outcome",
+            file=sys.stderr,
+        )
+        return 1
+    return int(rc)
+
+
+if __name__ == "__main__":
+    sys.exit(main())
